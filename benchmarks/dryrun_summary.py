@@ -1,0 +1,30 @@
+"""Roofline summary over the dry-run artifacts (deliverables e+g)."""
+from __future__ import annotations
+
+from pathlib import Path
+
+from repro.launch.roofline import fmt_row, table
+
+
+def run(quick: bool = False) -> list[str]:
+    d = Path("experiments/dryrun")
+    if not d.exists():
+        return ["dryrun_summary,0,missing (run scripts/run_campaign.sh)"]
+    rows = []
+    ok = skipped = err = deploy_ok = 0
+    for r in table(d):
+        if "t_compute_s" in r:
+            ok += 1
+            rows.append(
+                f"roofline_{r['cell']},0,"
+                f"bottleneck={r['bottleneck']};frac={r['roofline_fraction']:.3f};"
+                f"useful={r['useful_ratio']:.2f};fits={r['fits']}")
+        elif r.get("status") == "skipped":
+            skipped += 1
+        elif r.get("status") == "ok":
+            deploy_ok += 1  # multi-pod cells: deployment compile only (no cost)
+        else:
+            err += 1
+    rows.insert(0, f"dryrun_campaign,0,roofline_ok={ok};deploy_only_ok={deploy_ok};"
+                   f"skipped={skipped};errors={err}")
+    return rows

@@ -1,0 +1,45 @@
+"""Paper Fig. 4: AMR-MUL vs approximate BNS multipliers (accuracy axis).
+
+We implement the BNS baselines functionally (DRUM, truncation/LETAM-class,
+exact) and compare MARED at 8/16-bit-equivalent operand widths. Energy for
+BNS designs is reported from the paper's own reference values where given
+(exact BNS) — cost-model extrapolations for approximate BNS designs are
+labeled as estimates.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import AMRMultiplier
+from repro.core.baselines import drum, exact_mul, mared, trunc_mul
+
+from .paper_data import EXACT_BNS
+
+
+def run(quick: bool = False) -> list[str]:
+    n = 20_000 if quick else 100_000
+    rng = np.random.default_rng(1)
+    rows = []
+    for width, digits, borders in [(8, 2, (6, 8, 10)), (16, 4, (15, 18, 21))]:
+        t0 = time.time()
+        lo, hi = -(2 ** (width - 1)), 2 ** (width - 1)
+        x = rng.integers(lo, hi, n)
+        y = rng.integers(lo, hi, n)
+        ex = exact_mul(x, y)
+        for k in (3, 4, 6):
+            rows.append(f"fig4_drum{k}_{width}b,{(time.time()-t0)*1e6:.0f},"
+                        f"mared={mared(drum(x, y, k), ex):.3e}")
+        for t in (width // 2, width // 2 + 2):
+            rows.append(f"fig4_trunc{t}_{width}b,{(time.time()-t0)*1e6:.0f},"
+                        f"mared={mared(trunc_mul(x, y, width, t), ex):.3e}")
+        for b in borders:
+            m = AMRMultiplier(digits, border=b)
+            r = m.monte_carlo(n if not quick else n // 2, seed=2)
+            rows.append(f"fig4_amr_{digits}d_b{b},{(time.time()-t0)*1e6:.0f},"
+                        f"mared={r['mared']:.3e}")
+        rows.append(f"fig4_exact_bns_{width}b,0,"
+                    f"delay={EXACT_BNS[width]['delay_ns']}ns;"
+                    f"energy={EXACT_BNS[width]['energy_pj']}pJ (paper ref)")
+    return rows

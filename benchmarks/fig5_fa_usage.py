@@ -1,0 +1,23 @@
+"""Paper Fig. 5: percentage breakdown of employed FA types."""
+from __future__ import annotations
+
+import time
+
+from repro.core import AMRMultiplier
+
+
+def run(quick: bool = False) -> list[str]:
+    rows = []
+    for digits, border in [(4, 24), (8, 50)]:
+        t0 = time.time()
+        m = AMRMultiplier(digits, border=border)
+        usage = m.cell_usage_percent()
+        us = (time.time() - t0) * 1e6
+        detail = ";".join(f"{k}={v:.1f}%" for k, v in usage.items())
+        # paper's qualitative claims: FA_PP dominant among approximates,
+        # FA_NP2 (large positive error) least used
+        approx = {k: v for k, v in usage.items() if k != "FA"}
+        claims = (f"pp_dominant={max(approx, key=approx.get) == 'FA_PP'};"
+                  f"np2_rare={min(approx, key=approx.get) in ('FA_NP2', 'FA_NN', 'FA_PN1')}")
+        rows.append(f"fig5_usage_{digits}d_b{border},{us:.0f},{detail};{claims}")
+    return rows

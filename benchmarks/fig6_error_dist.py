@@ -1,0 +1,54 @@
+"""Paper Fig. 6: relative-error distribution shape (near-Gaussian, mu ~= 0).
+
+Contrast: AMR-MUL's signed-cell compensation vs a truncation multiplier's
+one-sided error (the paper's point about prior compressors' negative bias).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import AMRMultiplier, exact_multiplier, relative_errors
+from repro.core import mrsd
+from repro.core.baselines import trunc_mul
+
+
+def _moments(re: np.ndarray) -> dict:
+    mu, sd = re.mean(), re.std()
+    z = (re - mu) / max(sd, 1e-12)
+    return {"mean": mu, "std": sd, "skew": float((z**3).mean()),
+            "exkurt": float((z**4).mean() - 3.0),
+            "within_1sigma": float((np.abs(z) < 1).mean())}
+
+
+def run(quick: bool = False) -> list[str]:
+    n = 20_000 if quick else 100_000
+    t0 = time.time()
+    rng = np.random.default_rng(0)
+    xd = mrsd.random_digits(rng, 2, n)
+    yd = mrsd.random_digits(rng, 2, n)
+    m = AMRMultiplier(2, border=8)
+    approx = m.multiply_digits(xd, yd)
+    exact = exact_multiplier(2).multiply_digits(xd, yd)
+    re_amr = relative_errors(approx, exact)
+    re_amr = re_amr[np.abs(re_amr) < 1.0]  # paper plots the [-1, 1] window
+    amr = _moments(re_amr)
+
+    x = rng.integers(-128, 128, n)
+    y = rng.integers(-128, 128, n)
+    tr = trunc_mul(x, y, width=8, t=4).astype(np.float64)
+    ex = (x * y).astype(np.float64)
+    nz = ex != 0
+    re_tr = (tr[nz] - ex[nz]) / ex[nz]
+    re_tr = re_tr[np.abs(re_tr) < 1.0]
+    trm = _moments(re_tr)
+
+    us = (time.time() - t0) * 1e6
+    return [
+        f"fig6_amr_2d_b8,{us:.0f},mean={amr['mean']:+.3e};std={amr['std']:.3e};"
+        f"skew={amr['skew']:+.2f};exkurt={amr['exkurt']:+.2f};"
+        f"within1sigma={amr['within_1sigma']:.2f}",
+        f"fig6_trunc8_t4,{us:.0f},mean={trm['mean']:+.3e};std={trm['std']:.3e};"
+        f"skew={trm['skew']:+.2f} (one-sided bias vs AMR's ~0 mean)",
+    ]

@@ -1,0 +1,44 @@
+"""Kernel micro-benchmarks (CPU interpret mode: correctness-path timing only —
+TPU wall times come from the roofline analysis, not this box)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.amr_matmul.ops import amr_matmul
+from repro.kernels.ssd_scan.kernel import ssd_scan
+from repro.kernels.ssd_scan.ref import ref_ssd
+from repro.numerics import AMRNumerics, approx_matmul
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def run(quick: bool = False) -> list[str]:
+    rows = []
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(128, 128)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(128, 128)), jnp.float32)
+    us_k = _time(lambda x, y: amr_matmul(x, y, border=8, rank=8, interpret=True), a, b)
+    us_r = _time(lambda x, y: approx_matmul(x, y, AMRNumerics("amr_lowrank", border=8, rank=8)), a, b)
+    us_lut = _time(lambda x, y: approx_matmul(x, y, AMRNumerics("amr_lut", border=8)), a, b)
+    rows.append(f"kernel_amr_matmul_128_interp,{us_k:.0f},jnp_lowrank={us_r:.0f}us;jnp_lut_gather={us_lut:.0f}us")
+
+    B, S, H, P, N, chunk = 1, 512, 4, 64, 64, 128
+    x = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (B, S, H)), jnp.float32)
+    al = jnp.asarray(rng.uniform(0, 1.5, (H,)), jnp.float32)
+    bb = jnp.asarray(rng.normal(size=(B, S, H, N)), jnp.float32)
+    cc = jnp.asarray(rng.normal(size=(B, S, H, N)), jnp.float32)
+    us_k = _time(lambda *t: ssd_scan(*t, chunk, interpret=True), x, dt, al, bb, cc)
+    us_r = _time(lambda *t: ref_ssd(*t, chunk), x, dt, al, bb, cc)
+    rows.append(f"kernel_ssd_scan_512_interp,{us_k:.0f},jnp_ref={us_r:.0f}us")
+    return rows

@@ -1,0 +1,45 @@
+"""The paper's published numbers (Tables I & II) — calibration + comparison
+references for the benchmarks. Source: AMR-MUL paper §IV."""
+
+# Table I: accuracy vs approximate border column
+TABLE1 = {
+    2: {"borders": [6, 7, 8, 9, 10],
+        "mred": [1.29e-2, -2.12e-3, 2.03e-3, 5.70e-4, -4.57e-2],
+        "mared": [2.98e-2, 4.37e-2, 1.06e-1, 2.68e-1, 5.97e-1],
+        "nmed": [4.00e-4, 5.98e-4, 1.25e-3, 3.34e-3, 7.34e-3]},
+    4: {"borders": [12, 15, 18, 21, 24],
+        "mred": [1.31e-4, 2.35e-3, 1.18e-2, 6.90e-2, 1.76e-1],
+        "mared": [2.71e-4, 3.88e-3, 2.50e-2, 1.51e-1, 5.33e-1],
+        "nmed": [-1.00e-6, -7.00e-6, -7.70e-5, -2.76e-4, -3.43e-3]},
+    8: {"borders": [45, 48, 50, 53, 55],
+        "mred": [1.06e-4, 5.52e-4, 2.71e-3, 3.90e-2, -1.97e-2],
+        "mared": [9.29e-4, 7.09e-3, 1.61e-2, 1.58e-1, 5.18e-1],
+        "nmed": [3.00e-6, 1.50e-5, 5.60e-5, 4.34e-4, 2.36e-3]},
+}
+
+# Table II: design parameters vs border (NanGate45, Synopsys DC @ max freq)
+TABLE2 = {
+    2: {"borders": [None, 6, 7, 8, 9, 10],
+        "delay_ns": [0.73, 0.72, 0.71, 0.71, 0.71, 0.69],
+        "power_mw": [0.87, 0.84, 0.75, 0.59, 0.50, 0.37],
+        "energy_pj": [0.63, 0.61, 0.54, 0.42, 0.36, 0.25],
+        "area_um2": [1263, 1297, 1145, 972, 844, 764]},
+    4: {"borders": [None, 12, 15, 18, 21, 24],
+        "delay_ns": [1.04, 1.03, 1.00, 0.94, 0.91, 0.73],
+        "power_mw": [4.67, 3.41, 2.85, 2.32, 1.49, 1.03],
+        "energy_pj": [4.85, 3.51, 2.85, 2.18, 1.36, 0.75],
+        "area_um2": [5408, 4120, 3617, 3243, 2358, 2167]},
+    8: {"borders": [None, 45, 48, 50, 53, 55],
+        "delay_ns": [1.23, 1.11, 1.05, 1.00, 0.95, 0.95],
+        "power_mw": [16.91, 4.07, 3.23, 2.93, 2.07, 1.52],
+        "energy_pj": [20.80, 4.51, 3.39, 2.93, 1.96, 1.44],
+        "area_um2": [18330, 6815, 6207, 5794, 5085, 4583]},
+}
+
+# §IV.B: exact BNS multiplier references
+EXACT_BNS = {8: {"delay_ns": 0.89, "energy_pj": 0.24},
+             16: {"delay_ns": 1.22, "energy_pj": 2.6},
+             32: {"delay_ns": 1.65, "energy_pj": 17.5}}
+
+HEADLINE = {"energy_reduction_8digit_b50": 20.80 / 2.93,   # ~7.1x
+            "mared_8digit_b50": 1.61e-2}                    # ~1.6% accuracy loss

@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/figure (deliverable d).
+
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only table1,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (dryrun_summary, fig4_comparison, fig5_fa_usage, fig6_error_dist,
+               kernel_bench, lowrank_fidelity, table1_accuracy, table2_energy)
+
+MODULES = {
+    "table1": table1_accuracy,
+    "table2": table2_energy,
+    "fig4": fig4_comparison,
+    "fig5": fig5_fa_usage,
+    "fig6": fig6_error_dist,
+    "lowrank": lowrank_fidelity,
+    "kernels": kernel_bench,
+    "dryrun": dryrun_summary,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(MODULES)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        t0 = time.time()
+        try:
+            for row in MODULES[name].run(quick=args.quick):
+                print(row)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0,ERROR", file=sys.stderr)
+            traceback.print_exc()
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

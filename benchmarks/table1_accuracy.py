@@ -1,0 +1,30 @@
+"""Paper Table I: MRED/MARED/NMED vs border column for 2/4/8-digit AMR-MULs."""
+from __future__ import annotations
+
+import time
+
+from repro.core import AMRMultiplier
+
+from .paper_data import TABLE1
+
+# paper uses 50K/500K/1M; scaled for CPU wall-time (MARED is stable well
+# before that — std error ~ mared/sqrt(n))
+SAMPLES = {2: 50_000, 4: 100_000, 8: 50_000}
+SAMPLES_QUICK = {2: 20_000, 4: 20_000, 8: 5_000}
+
+
+def run(quick: bool = False) -> list[str]:
+    rows = []
+    samples = SAMPLES_QUICK if quick else SAMPLES
+    for digits, ref in TABLE1.items():
+        for i, border in enumerate(ref["borders"]):
+            t0 = time.time()
+            m = AMRMultiplier(digits, border=border)
+            r = m.monte_carlo(samples[digits], seed=0)
+            us = (time.time() - t0) * 1e6
+            ratio = r["mared"] / ref["mared"][i]
+            rows.append(
+                f"table1_{digits}d_b{border},{us:.0f},"
+                f"mared={r['mared']:.3e};paper={ref['mared'][i]:.3e};"
+                f"ratio={ratio:.2f};mred={r['mred']:+.2e};nmed={r['nmed']:+.2e}")
+    return rows

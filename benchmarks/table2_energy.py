@@ -1,0 +1,62 @@
+"""Paper Table II: delay/power/energy/area model, calibrated + validated.
+
+Calibration protocol (DESIGN.md §2): fit the linear component model on HALF
+the paper's design points (exact + every other border, per width), predict
+the held-out half, report per-metric mean relative error and the headline
+8-digit energy-reduction ratio.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import AMRMultiplier
+from repro.core.energy import DesignFeatures, fit, predict
+
+from .paper_data import HEADLINE, TABLE2
+
+
+def _designs():
+    out = []
+    for digits, ref in TABLE2.items():
+        for i, border in enumerate(ref["borders"]):
+            out.append((digits, border, ref["area_um2"][i], ref["energy_pj"][i],
+                        ref["delay_ns"][i]))
+    return out
+
+
+def run(quick: bool = False) -> list[str]:
+    t0 = time.time()
+    designs = _designs()
+    mults = {(d, b): AMRMultiplier(d, border=b) for d, b, *_ in designs}
+    feats = [DesignFeatures.from_multiplier(mults[(d, b)]) for d, b, *_ in designs]
+    area = np.array([a for *_, a, _, _ in designs], float)
+    energy = np.array([e for *_, e, _ in designs], float)
+    delay = np.array([dl for *_, dl in designs], float)
+
+    train_idx = list(range(0, len(designs), 2))
+    test_idx = list(range(1, len(designs), 2))
+    model = fit([feats[i] for i in train_idx], area[train_idx],
+                energy[train_idx], delay[train_idx])
+
+    rows = []
+    rel = {"area": [], "energy": [], "delay": []}
+    for i in test_idx:
+        d, b, *_ = designs[i]
+        p = predict(model, mults[(d, b)])
+        rel["area"].append(abs(p["area_um2"] - area[i]) / area[i])
+        rel["energy"].append(abs(p["energy_pj"] - energy[i]) / energy[i])
+        rel["delay"].append(abs(p["delay_ns"] - delay[i]) / delay[i])
+    us = (time.time() - t0) * 1e6
+    rows.append(f"table2_holdout_fit,{us:.0f},"
+                + ";".join(f"{k}_relerr={np.mean(v):.3f}" for k, v in rel.items()))
+
+    # headline: 8-digit border-50 energy reduction (paper: ~7.1x @ MARED 1.6e-2)
+    full = fit(feats, area, energy, delay)
+    e_exact = predict(full, mults[(8, None)])["energy_pj"]
+    e_b50 = predict(full, mults[(8, 50)])["energy_pj"]
+    rows.append(f"table2_headline_8d_b50,{(time.time()-t0)*1e6:.0f},"
+                f"model_energy_reduction={e_exact / e_b50:.2f}x;"
+                f"paper={HEADLINE['energy_reduction_8digit_b50']:.2f}x")
+    return rows

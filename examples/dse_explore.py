@@ -1,0 +1,41 @@
+"""Design-space exploration walkthrough (paper §III.B / Fig. 3 + Fig. 5).
+
+Sweeps border columns for a chosen digit count, printing accuracy metrics,
+cell-usage breakdown, and the calibrated cost model's energy estimates —
+i.e. the paper's Tables I/II + Fig. 5 for any configuration you like.
+
+  PYTHONPATH=src python examples/dse_explore.py --digits 4 --borders 12 18 24
+"""
+import argparse
+
+from repro.core import AMRMultiplier
+from repro.core.energy import DesignFeatures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--digits", type=int, default=2)
+    ap.add_argument("--borders", type=int, nargs="+", default=[6, 7, 8, 9, 10])
+    ap.add_argument("--samples", type=int, default=50000)
+    args = ap.parse_args()
+
+    exact = AMRMultiplier(args.digits, border=None)
+    fe = DesignFeatures.from_multiplier(exact)
+    print(f"exact {args.digits}-digit MRSD multiplier: "
+          f"{sum(exact.cell_counts.values())} cells, {exact.n_stages} PPR stages")
+
+    print(f"{'border':>7} {'MRED':>11} {'MARED':>10} {'NMED':>11} "
+          f"{'approx-lit':>10} {'DSE nodes':>9}")
+    for b in args.borders:
+        m = AMRMultiplier(args.digits, border=b)
+        r = m.monte_carlo(args.samples, seed=0)
+        f = DesignFeatures.from_multiplier(m)
+        print(f"{b:7d} {r['mred']:+.3e} {r['mared']:.3e} {r['nmed']:+.3e} "
+              f"{f.approx_cell_literals:10d} {m.schedule.dse_nodes:9d}")
+        usage = m.cell_usage_percent()
+        line = "  ".join(f"{k}:{v:.0f}%" for k, v in usage.items())
+        print(f"        cells: {line}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""End-to-end driver: train an LM under AMR-MUL numerics vs exact numerics.
+
+Runs the full production path (data pipeline -> sharded state -> jitted
+train step -> fault-tolerant loop -> checkpoints) twice on a small LM and
+compares loss curves: the paper's claim is that its near-zero-mean,
+Gaussian multiplier error is benign for error-resilient workloads — here,
+LM training still converges under approximate matmuls.
+
+  PYTHONPATH=src python examples/train_lm_approx.py --steps 60
+  PYTHONPATH=src python examples/train_lm_approx.py --steps 300 --preset 100m
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.data import SyntheticLM
+from repro.numerics import AMRNumerics
+from repro.train.steps import make_train_state, make_train_step
+
+PRESETS = {
+    # CPU-friendly smoke (runs in minutes)
+    "small": dict(n_layers=4, d_model=128, n_heads=4, n_kv_heads=4, head_dim=32,
+                  d_ff=512, vocab=512, batch=8, seq=128),
+    # the deliverable-scale run (~100M params; use on real accelerators)
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, head_dim=64,
+                 d_ff=3072, vocab=32000, batch=32, seq=512),
+}
+
+
+def make_cfg(p: dict, numerics: AMRNumerics) -> ModelConfig:
+    return ModelConfig(
+        name="amr-train", family="dense", n_layers=p["n_layers"],
+        d_model=p["d_model"], n_heads=p["n_heads"], n_kv_heads=p["n_kv_heads"],
+        head_dim=p["head_dim"], d_ff=p["d_ff"], vocab=p["vocab"],
+        mlp_act="swiglu", tie_embeddings=True, numerics=numerics, remat="none")
+
+
+def run(cfg: ModelConfig, steps: int, batch: int, seq: int, seed: int = 0):
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=seq, batch=batch, seed=seed)
+    state = make_train_state(cfg, jax.random.PRNGKey(seed))
+    step = jax.jit(make_train_step(cfg, peak_lr=3e-3, warmup=10, total_steps=steps),
+                   donate_argnums=(0,))
+    losses = []
+    t0 = time.time()
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+        state, metrics = step(state, b)
+        losses.append(float(metrics["loss"]))
+        if (i + 1) % 10 == 0:
+            print(f"  step {i+1:4d} loss {losses[-1]:.4f}")
+    dt = time.time() - t0
+    return losses, dt
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--preset", default="small", choices=list(PRESETS))
+    ap.add_argument("--border", type=int, default=8)
+    ap.add_argument("--rank", type=int, default=16)
+    ap.add_argument("--out", default="experiments/train_approx.json")
+    args = ap.parse_args()
+    p = PRESETS[args.preset]
+
+    results = {}
+    for label, numerics in [
+        ("exact", AMRNumerics("exact")),
+        (f"amr_lowrank(b={args.border},r={args.rank})",
+         AMRNumerics("amr_lowrank", border=args.border, rank=args.rank)),
+    ]:
+        print(f"== training with {label} numerics ==")
+        losses, dt = run(make_cfg(p, numerics), args.steps, p["batch"], p["seq"])
+        results[label] = {"losses": losses, "seconds": dt}
+        print(f"   first->last loss: {losses[0]:.3f} -> {losses[-1]:.3f} ({dt:.0f}s)")
+
+    Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+    Path(args.out).write_text(json.dumps(results, indent=1))
+    exact_final = results["exact"]["losses"][-1]
+    for label, r in results.items():
+        drop = r["losses"][0] - r["losses"][-1]
+        print(f"{label}: final {r['losses'][-1]:.3f} (drop {drop:.3f}; "
+              f"gap to exact {r['losses'][-1] - exact_final:+.3f})")
+
+
+if __name__ == "__main__":
+    main()

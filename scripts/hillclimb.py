@@ -1,0 +1,123 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb variants — each produces a tagged dry-run artifact.
+
+Cells (chosen per the assignment from the baseline table):
+  P — paper-technique: gemma-2b train_4k under AMR-MUL numerics
+      (amr_lowrank rank sweep; the faithful LUT-gather form is analysed
+      analytically in EXPERIMENTS.md — it cannot be materialised at shape).
+  W — worst roofline fraction: mamba2-370m train_4k (SSD chunk-size sweep —
+      intra-chunk quadratic work/traffic scales linearly with Q).
+  C — most collective-bound: dbrx-132b train_4k (MoE dispatch sharding:
+      replicate -> batch-local -> expert-parallel; microbatch count sweep).
+
+  PYTHONPATH=src python scripts/hillclimb.py --variant P.r16
+  PYTHONPATH=src python scripts/hillclimb.py --list
+"""
+import argparse
+import dataclasses
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs import get_config  # noqa: E402
+from repro.configs.base import MoEConfig, SSMConfig  # noqa: E402
+from repro.launch.dryrun import run_cell  # noqa: E402
+from repro.numerics import AMRNumerics  # noqa: E402
+
+
+def _gemma_amr(rank):
+    cfg = get_config("gemma-2b")
+    return dataclasses.replace(cfg, numerics=AMRNumerics("amr_lowrank", border=8, rank=rank))
+
+
+def _mamba_chunk(q):
+    cfg = get_config("mamba2-370m")
+    return dataclasses.replace(cfg, ssm=dataclasses.replace(cfg.ssm, chunk=q))
+
+
+def _dbrx_dispatch(mode):
+    cfg = get_config("dbrx-132b")
+    return dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, dispatch_shard=mode))
+
+
+def _moonshot_dispatch(mode):
+    cfg = get_config("moonshot-v1-16b-a3b")
+    return dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, dispatch_shard=mode))
+
+
+VARIANTS = {
+    # --- P: the paper's technique as a matmul numerics policy
+    "P.r64": ("gemma-2b", "train_4k", lambda: _gemma_amr(64), {}),
+    "P.r16": ("gemma-2b", "train_4k", lambda: _gemma_amr(16), {}),
+    "P.r8": ("gemma-2b", "train_4k", lambda: _gemma_amr(8), {}),
+    "P.r4": ("gemma-2b", "train_4k", lambda: _gemma_amr(4), {}),
+    # marginal-cost probe: 2 microbatches lowered in ONE graph — XLA hoists
+    # the loop-invariant augmented-weight prep; step = base + 16 x marginal
+    "P.r16_m2": ("gemma-2b", "train_4k_x2", lambda: _gemma_amr(16),
+                 {"microbatch": "1"}),
+    "P.exact_m2": ("gemma-2b", "train_4k_x2", lambda: get_config("gemma-2b"),
+                   {"microbatch": "1"}),
+    # --- W: SSD chunk sweep
+    "W.q256": ("mamba2-370m", "train_4k", lambda: _mamba_chunk(256), {}),
+    "W.q128": ("mamba2-370m", "train_4k", lambda: _mamba_chunk(128), {}),
+    "W.q64": ("mamba2-370m", "train_4k", lambda: _mamba_chunk(64), {}),
+    "W.q32": ("mamba2-370m", "train_4k", lambda: _mamba_chunk(32), {}),
+    # --- C: MoE dispatch sharding + microbatch count (moonshot: the most
+    # collective-bound baseline cell; dbrx variants cross-check)
+    "C.replicate": ("moonshot-v1-16b-a3b", "train_4k",
+                    lambda: _moonshot_dispatch("replicate"), {}),
+    "C.batch": ("moonshot-v1-16b-a3b", "train_4k",
+                lambda: _moonshot_dispatch("batch"), {}),
+    "C.expert": ("moonshot-v1-16b-a3b", "train_4k",
+                 lambda: _moonshot_dispatch("expert"), {}),
+    "C.batch_mb4": ("moonshot-v1-16b-a3b", "train_4k",
+                    lambda: _moonshot_dispatch("batch"), {"microbatch": "4"}),
+    "C.local": ("moonshot-v1-16b-a3b", "train_4k",
+                lambda: _moonshot_dispatch("local"), {}),
+    "C.local_mb4": ("moonshot-v1-16b-a3b", "train_4k",
+                    lambda: _moonshot_dispatch("local"), {"microbatch": "4"}),
+    "C.dbrx_batch": ("dbrx-132b", "train_4k", lambda: _dbrx_dispatch("batch"), {}),
+    "C.dbrx_local": ("dbrx-132b", "train_4k", lambda: _dbrx_dispatch("local"), {}),
+    # gemma-2b exact baseline with fewer microbatches (FSDP re-gather tax)
+    "G.mb4": ("gemma-2b", "train_4k", lambda: get_config("gemma-2b"),
+              {"microbatch": "4"}),
+    "G.mb1": ("gemma-2b", "train_4k", lambda: get_config("gemma-2b"),
+              {"microbatch": "1"}),
+}
+
+
+def _zero1(arch, **extra):
+    cfg = get_config(arch)
+    return dataclasses.replace(cfg, param_shard="zero1", **extra)
+
+
+VARIANTS.update({
+    "W.zero1": ("mamba2-370m", "train_4k", lambda: _zero1("mamba2-370m"), {}),
+    "G.zero1": ("gemma-2b", "train_4k", lambda: _zero1("gemma-2b"), {}),
+    "P.r16_zero1": ("gemma-2b", "train_4k",
+                    lambda: dataclasses.replace(_gemma_amr(16), param_shard="zero1"),
+                    {}),
+})
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default="experiments/hillclimb")
+    args = ap.parse_args()
+    if args.list or not args.variant:
+        for k, (a, s, _, kw) in VARIANTS.items():
+            print(f"{k}: {a} x {s} {kw}")
+        return
+    arch, shape, cfg_fn, kw = VARIANTS[args.variant]
+    run_cell(arch, shape, False, Path(args.out),
+             microbatch=kw.get("microbatch", "auto"),
+             cfg_override=cfg_fn(), tag_suffix=f"__{args.variant}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Mesh-agnostic sharded checkpointing with async save + retention."""
+from .checkpoint import CheckpointManager, restore_tree, save_tree
+
+__all__ = ["CheckpointManager", "save_tree", "restore_tree"]

@@ -1,0 +1,160 @@
+"""Checkpointing: mesh-agnostic, atomic, async, with retention.
+
+Layout (one directory per step)::
+
+    <dir>/step_000123/
+        manifest.json     # flat key -> {file, shape, dtype}; treedef repr
+        <key>.npy         # one logical (unsharded) array per leaf
+
+Design choices for the 1000-node story (DESIGN.md §3):
+  * *Mesh-agnostic*: leaves are saved as full logical arrays, so a restart
+    may resize the mesh (elastic scaling) — restore() device_puts each leaf
+    with the *new* mesh's sharding. On a real multi-host pod each host
+    writes only the shards it owns into a tensorstore-like layout; the
+    manifest/key scheme is identical, so this module is the single-host
+    realisation of that protocol.
+  * *Atomic*: writes go to ``.tmp-step_N`` then rename — a preempted save
+    never corrupts the latest checkpoint.
+  * *Async*: ``save_async`` snapshots to host memory synchronously (cheap)
+    and writes in a background thread — training continues during the I/O.
+  * *Retention*: keep the newest ``keep`` checkpoints, always keep step 0.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+from pathlib import Path
+from typing import Any
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy can't round-trip ml_dtypes (bf16/f8) through .npy — store the raw
+# bytes as a same-width uint view and record the logical dtype in the manifest
+_CUSTOM_DTYPES = {
+    "bfloat16": (ml_dtypes.bfloat16, np.uint16),
+    "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+    "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8),
+}
+
+
+def _flat_items(tree: Any) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(e, "key", getattr(e, "name", getattr(e, "idx", e))))
+            for e in path
+        )
+        out.append((key, leaf))
+    return out
+
+
+def save_tree(directory: str | Path, tree: Any, step: int) -> Path:
+    """Synchronous atomic save. Returns the final checkpoint path."""
+    directory = Path(directory)
+    directory.mkdir(parents=True, exist_ok=True)
+    final = directory / f"step_{step:08d}"
+    tmp = directory / f".tmp-step_{step:08d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    manifest = {}
+    for i, (key, leaf) in enumerate(_flat_items(tree)):
+        arr = np.asarray(jax.device_get(leaf))
+        logical = str(arr.dtype)
+        if logical in _CUSTOM_DTYPES:
+            arr = arr.view(_CUSTOM_DTYPES[logical][1])
+        fname = f"leaf_{i:05d}.npy"
+        np.save(tmp / fname, arr)
+        manifest[key] = {"file": fname, "shape": list(arr.shape), "dtype": logical}
+    (tmp / "manifest.json").write_text(json.dumps({"step": step, "leaves": manifest}))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    return final
+
+
+def restore_tree(path: str | Path, abstract_tree: Any, shardings: Any | None = None) -> Any:
+    """Restore into the structure of ``abstract_tree`` (values ignored).
+
+    shardings: optional matching tree of NamedSharding — enables restoring
+    under a different mesh than the one that saved (elastic restart).
+    """
+    path = Path(path)
+    manifest = json.loads((path / "manifest.json").read_text())["leaves"]
+    items = _flat_items(abstract_tree)
+    assert len(items) == len(manifest), (len(items), len(manifest))
+    leaves = []
+    flat_sh = jax.tree_util.tree_leaves(shardings) if shardings is not None else None
+    for i, (key, leaf) in enumerate(items):
+        meta = manifest.get(key)
+        if meta is None:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = np.load(path / meta["file"])
+        if meta["dtype"] in _CUSTOM_DTYPES:
+            arr = arr.view(_CUSTOM_DTYPES[meta["dtype"]][0])
+        if flat_sh is not None:
+            leaves.append(jax.device_put(arr, flat_sh[i]))
+        else:
+            leaves.append(jax.device_put(arr))
+    treedef = jax.tree_util.tree_structure(abstract_tree)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def latest_step(directory: str | Path) -> int | None:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    steps = sorted(int(p.name.split("_")[1]) for p in directory.glob("step_*"))
+    return steps[-1] if steps else None
+
+
+class CheckpointManager:
+    """Async save + retention + restore-latest."""
+
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.directory = Path(directory)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    def save_async(self, tree: Any, step: int) -> None:
+        # snapshot on the caller thread (device_get) so training can mutate
+        # the live state immediately after this returns
+        host_tree = jax.tree.map(lambda l: np.asarray(jax.device_get(l)), tree)
+        self.wait()
+
+        def _write():
+            save_tree(self.directory, host_tree, step)
+            self._gc()
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def save(self, tree: Any, step: int) -> Path:
+        self.wait()
+        out = save_tree(self.directory, tree, step)
+        self._gc()
+        return out
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore_latest(self, abstract_tree: Any, shardings: Any | None = None):
+        self.wait()
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None
+        tree = restore_tree(self.directory / f"step_{step:08d}", abstract_tree, shardings)
+        return tree, step
+
+    def _gc(self) -> None:
+        steps = sorted(int(p.name.split("_")[1]) for p in self.directory.glob("step_*"))
+        for s in steps[:-self.keep]:
+            if s == 0:
+                continue
+            shutil.rmtree(self.directory / f"step_{s:08d}", ignore_errors=True)

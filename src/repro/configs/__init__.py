@@ -1,0 +1,6 @@
+"""Architecture configs (one module per assigned arch) + shape registry."""
+from .base import SHAPES, ModelConfig, ShapeConfig, shape_applicable
+from .registry import ARCH_NAMES, get_config, get_reduced_config
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "shape_applicable",
+           "ARCH_NAMES", "get_config", "get_reduced_config"]

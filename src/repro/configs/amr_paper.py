@@ -1,0 +1,30 @@
+"""amr-paper-100m — the paper's own end-to-end artifact: a ~100M-param LM
+whose matmuls run under AMR-MUL numerics (examples/train_lm_approx.py).
+
+border=8 matches the 2-digit (int8-class) design point the paper highlights
+(§IV.A: delay/power/energy/area improved 2%/32%/34%/23% at MARED 1.06e-1;
+we default to the MXU low-rank form, rank 16).
+"""
+from repro.configs.base import ModelConfig
+from repro.numerics import AMRNumerics
+
+CONFIG = ModelConfig(
+    name="amr-paper-100m",
+    family="dense",
+    n_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab=32000,
+    mlp_act="swiglu",
+    tie_embeddings=True,
+    numerics=AMRNumerics("amr_lowrank", border=8, rank=16),
+)
+
+
+def reduced() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(CONFIG, n_layers=2, d_model=64, n_heads=4,
+                               n_kv_heads=4, head_dim=16, d_ff=128, vocab=256)

@@ -1,0 +1,163 @@
+"""Config system: model architecture + input-shape + numerics descriptors.
+
+Every assigned architecture is a ``ModelConfig`` instance in its own module
+(one file per arch, exact constants from the assignment table). Shapes are
+global (LM-family): train_4k / prefill_32k / decode_32k / long_500k.
+``reduced()`` returns a tiny same-family config for CPU smoke tests; the
+full config is only ever traced abstractly (dry-run, eval_shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+from repro.numerics import AMRNumerics
+
+Family = Literal["dense", "moe", "ssm", "hybrid", "audio", "vlm"]
+AttnKind = Literal["full", "swa", "none"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int          # per-expert hidden size
+    # dispatch-buffer sharding strategy (§Perf lever):
+    #   "replicate" — (E,C,D) buffers unsharded (XLA gathers tokens; baseline)
+    #   "batch"     — capacity dim C sharded on data axes (REFUTED in §Perf:
+    #                 the global argsort misaligns slots with shards and XLA
+    #                 falls back to dense all-reduces)
+    #   "expert"    — expert parallelism: E sharded on "model" (all-to-all)
+    #   "local"     — shard_map over the data axes: routing, sort and
+    #                 capacity buffers are shard-local; experts TP on
+    #                 "model" with one psum after w_down (no cross-DP
+    #                 dispatch traffic by construction)
+    dispatch_shard: str = "replicate"
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int
+    head_dim: int = 64
+    n_groups: int = 1
+    conv_width: int = 4
+    expand: int = 2           # d_inner = expand * d_model
+    chunk: int = 256          # SSD chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPattern:
+    """Heterogeneous depth structure as repeated groups of block kinds.
+
+    ``kinds`` is the per-layer mixer sequence inside one group, e.g.
+    gemma3 = ('swa',)*5 + ('full',) repeated; zamba2 = ('ssm',)*5 + ('shared_attn',).
+    The model scans over ``n_repeat`` stacked copies of the group.
+    """
+
+    kinds: tuple[str, ...]
+    n_repeat: int
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.kinds) * self.n_repeat
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+
+    # attention details
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    sliding_window: int = 0            # >0: width for 'swa' layers
+    pattern: LayerPattern | None = None  # None -> homogeneous 'full' (or 'ssm')
+
+    # family extensions
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
+    mlp_act: Literal["swiglu", "geglu", "gelu"] = "swiglu"
+
+    # enc-dec (whisper): encoder consumes precomputed frame embeddings (stub)
+    encoder_layers: int = 0
+    encoder_frames: int = 0            # fixed encoder sequence (1500 for whisper)
+
+    # vlm: prefix of precomputed patch embeddings (stub frontend)
+    vision_prefix: int = 0
+
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+
+    # the paper's technique: numerics policy for matmuls
+    numerics: AMRNumerics = AMRNumerics("exact")
+
+    # which layers the mixer is (derived when pattern is None)
+    default_mixer: str = "full"
+
+    # remat policy for training: 'none' | 'block' (checkpoint each layer)
+    remat: str = "block"
+
+    # parameter sharding policy over the "data" axis (§Perf lever):
+    #   'fsdp'  — params + optimizer state sharded (ZeRO-3): min memory,
+    #             but weights re-gather EVERY microbatch
+    #   'zero1' — optimizer state sharded, bf16 params replicated: gathers
+    #             once per step at the update; needs params to fit HBM
+    param_shard: str = "fsdp"
+
+    # fully unroll layer scans when lowering (dry-run cost extraction: XLA's
+    # cost_analysis counts while-loop bodies once, so the roofline lowering
+    # unrolls; deployment lowering keeps the scan for small HLO)
+    unroll_layers: bool = False
+
+    def layer_kinds(self) -> tuple[str, ...]:
+        if self.pattern is not None:
+            return self.pattern.kinds * self.pattern.n_repeat
+        return (self.default_mixer,) * self.n_layers
+
+    def supports_long_context(self) -> bool:
+        """True when the arch has a sub-quadratic sequence mechanism.
+
+        SSM state is O(1) in seq; sliding-window layers cap their KV cache at
+        the window. Hybrids qualify: their few full-attention applications
+        decode linearly per step with a model-sharded KV cache (DESIGN.md
+        §Arch-applicability). Pure full-attention archs are skipped.
+        """
+        kinds = set(self.layer_kinds())
+        return ("ssm" in kinds) or ("swa" in kinds)
+
+    def has_decoder(self) -> bool:
+        return True  # all assigned archs generate tokens (enc-dec included)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+    # §Perf instrumentation shape (not an assigned cell): two microbatches
+    # in one lowering, for marginal-vs-hoistable cost separation
+    "train_4k_x2": ShapeConfig("train_4k_x2", 4096, 32, "train"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """(runnable?, reason-if-not) — DESIGN.md §Arch-applicability."""
+    if shape.name == "long_500k" and not cfg.supports_long_context():
+        return False, "pure full-attention arch: 500k dense KV cache is not deployable (DESIGN.md)"
+    return True, ""

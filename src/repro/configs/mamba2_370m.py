@@ -1,0 +1,31 @@
+"""mamba2-370m [ssm] — attention-free SSD (state-space duality)
+[arXiv:2405.21060].
+
+Assignment: 48L d_model=1024 (attn-free) d_ff=0 vocab=50280, ssm_state=128.
+Pure Mamba2 blocks (no MLP, matching the paper's architecture: the
+expand-2 in-projection plays the FFN role).
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-370m",
+    family="ssm",
+    n_layers=48,
+    d_model=1024,
+    n_heads=16,        # unused (attention-free); kept for config uniformity
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=0,
+    vocab=50280,
+    default_mixer="ssm",
+    ssm=SSMConfig(d_state=128, head_dim=64, n_groups=1, expand=2),
+    tie_embeddings=True,
+)
+
+
+def reduced() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, n_layers=4, d_model=64, vocab=256,
+        ssm=SSMConfig(d_state=16, head_dim=16, n_groups=1, expand=2, chunk=16),
+    )

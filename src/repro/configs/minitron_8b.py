@@ -1,0 +1,28 @@
+"""minitron-8b [dense] — width/depth-pruned Nemotron-4 [arXiv:2407.14679].
+
+Assignment: 32L d_model=4096 32H (GQA kv=8) d_ff=16384 vocab=256000.
+(Source model uses squared-ReLU MLPs; we keep the zoo-uniform gated MLP and
+note the substitution — structure/FLOPs are identical for roofline purposes.)
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-8b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab=256000,
+    mlp_act="swiglu",
+    tie_embeddings=False,
+)
+
+
+def reduced() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab=256)

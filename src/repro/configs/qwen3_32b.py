@@ -1,0 +1,29 @@
+"""qwen3-32b [dense] — qk_norm + GQA [hf:Qwen/Qwen3-8B family].
+
+Assignment: 64L d_model=5120 64H (GQA kv=8) d_ff=25600 vocab=151936.
+head_dim=128 (Qwen3 attention operates wider than d_model: 64*128=8192).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=25600,
+    vocab=151936,
+    qk_norm=True,
+    rope_theta=1e6,
+    mlp_act="swiglu",
+    tie_embeddings=False,
+)
+
+
+def reduced() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab=256)

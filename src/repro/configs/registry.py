@@ -1,0 +1,37 @@
+"""Arch registry: ``--arch <id>`` resolution for launcher/dryrun/benchmarks."""
+from __future__ import annotations
+
+import importlib
+
+from .base import ModelConfig
+
+_MODULES = {
+    "zamba2-1.2b": "zamba2_1p2b",
+    "mamba2-370m": "mamba2_370m",
+    "qwen3-32b": "qwen3_32b",
+    "gemma3-1b": "gemma3_1b",
+    "minitron-8b": "minitron_8b",
+    "gemma-2b": "gemma_2b",
+    "dbrx-132b": "dbrx_132b",
+    "moonshot-v1-16b-a3b": "moonshot_16b_a3b",
+    "whisper-small": "whisper_small",
+    "internvl2-76b": "internvl2_76b",
+    "amr-paper-100m": "amr_paper",
+}
+
+ARCH_NAMES = [n for n in _MODULES if n != "amr-paper-100m"]  # the 10 assigned
+ALL_NAMES = list(_MODULES)
+
+
+def _module(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_reduced_config(name: str) -> ModelConfig:
+    return _module(name).reduced()

@@ -1,0 +1,32 @@
+"""whisper-small [audio] — enc-dec transformer backbone [arXiv:2212.04356].
+
+Assignment: 12L d_model=768 12H (kv=12) d_ff=3072 vocab=51865 — realised as
+12 encoder + 12 decoder layers (whisper-small structure). The conv/mel
+frontend is a STUB per the assignment: ``input_specs`` supplies precomputed
+1500-frame embeddings; the encoder is a bidirectional transformer over
+them, the decoder cross-attends per layer.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="audio",
+    n_layers=12,          # decoder depth (scan); encoder_layers below
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab=51865,
+    mlp_act="gelu",
+    encoder_layers=12,
+    encoder_frames=1500,
+    tie_embeddings=True,
+)
+
+
+def reduced() -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, vocab=256, encoder_layers=2, encoder_frames=16)

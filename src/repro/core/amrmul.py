@@ -1,0 +1,110 @@
+"""AMR-MUL: the approximate maximally-redundant signed-digit multiplier.
+
+Facade over ppgen/reduction/dse: builds the static schedule once, then
+evaluates bit-accurately (vectorised numpy) and reports the paper's
+metrics, cell-usage breakdown (Fig. 5) and cost-model hooks (Table II).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+
+import numpy as np
+
+from . import metrics, mrsd, ppgen, reduction
+
+
+@dataclasses.dataclass(frozen=True)
+class AMRMulConfig:
+    n_digits: int
+    border: int | None = None  # None = exact MRSD multiplier
+
+    def tag(self) -> str:
+        b = "exact" if self.border is None else f"b{self.border}"
+        return f"amrmul_{self.n_digits}d_{b}"
+
+
+class AMRMultiplier:
+    """N x N-digit radix-16 MRSD multiplier with approximate border ``b``."""
+
+    def __init__(self, n_digits: int, border: int | None = None):
+        self.cfg = AMRMulConfig(n_digits, border)
+        self.schedule = reduction.build_schedule(n_digits, border)
+
+    # ------------------------------------------------------------------ eval
+    def multiply_digits(self, x_digits: np.ndarray, y_digits: np.ndarray) -> np.ndarray:
+        """(batch, N) digit arrays -> (batch,) float64 product values."""
+        xb = ppgen.flatten_operand_bits(x_digits)
+        yb = ppgen.flatten_operand_bits(y_digits)
+        return reduction.evaluate(self.schedule, xb, yb)
+
+    def multiply_digits_split(
+        self, x_digits: np.ndarray, y_digits: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Exact split-integer products (lo, hi): value = lo + hi * 2**32."""
+        xb = ppgen.flatten_operand_bits(x_digits)
+        yb = ppgen.flatten_operand_bits(y_digits)
+        return reduction.evaluate_split(self.schedule, xb, yb)
+
+    def multiply_values(self, x, y) -> np.ndarray:
+        """Integer values -> product values (canonical MRSD encoding)."""
+        xd = mrsd.encode(np.asarray(x), self.cfg.n_digits)
+        yd = mrsd.encode(np.asarray(y), self.cfg.n_digits)
+        return self.multiply_digits(xd, yd)
+
+    # ----------------------------------------------------------------- stats
+    @property
+    def n_stages(self) -> int:
+        return self.schedule.n_stages
+
+    @property
+    def cell_counts(self) -> dict[str, int]:
+        return dict(self.schedule.cell_counts)
+
+    def cell_usage_percent(self) -> dict[str, float]:
+        """Fig. 5-style breakdown over FA-class cells (HA excluded)."""
+        fa = {k: v for k, v in self.schedule.cell_counts.items() if k != "HA"}
+        total = sum(fa.values())
+        return {k: 100.0 * v / total for k, v in sorted(fa.items())} if total else {}
+
+    @property
+    def expected_error(self) -> float:
+        return float(self.schedule.expected_error)
+
+    # ----------------------------------------------------------- monte carlo
+    def monte_carlo(
+        self,
+        n_samples: int,
+        seed: int = 0,
+        chunk: int = 32768,
+        exact_ref: "AMRMultiplier | None" = None,
+    ) -> dict[str, float]:
+        """Paper §IV accuracy protocol: uniform random digit-vector inputs.
+
+        Returns MRED/MARED/NMED (signed means as in Table I) plus aux stats.
+        """
+        rng = np.random.default_rng(seed)
+        n = self.cfg.n_digits
+        if exact_ref is None:
+            exact_ref = _exact_cached(n)
+        max_abs = (16.0 ** n * (16.0 / 15.0)) ** 2  # |min value|^2 bound
+        acc = metrics.ErrorAccumulator(max_abs=max_abs)
+        remaining = n_samples
+        while remaining > 0:
+            b = min(chunk, remaining)
+            xd = mrsd.random_digits(rng, n, b)
+            yd = mrsd.random_digits(rng, n, b)
+            alo, ahi = self.multiply_digits_split(xd, yd)
+            elo, ehi = exact_ref.multiply_digits_split(xd, yd)
+            acc.update_split(alo, ahi, elo, ehi)
+            remaining -= b
+        return acc.result()
+
+
+@lru_cache(maxsize=8)
+def _exact_cached(n_digits: int) -> AMRMultiplier:
+    return AMRMultiplier(n_digits, border=None)
+
+
+def exact_multiplier(n_digits: int) -> AMRMultiplier:
+    return _exact_cached(n_digits)

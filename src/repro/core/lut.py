@@ -1,0 +1,80 @@
+"""int8 product LUT + low-rank error factorization (TPU adaptation layer).
+
+``build_int8_lut`` evaluates the bit-accurate 2-digit AMR-MUL over all
+2^8 x 2^8 signed int8 pairs once; the resulting 256x256 int32 table *is*
+the paper's arithmetic for 8-bit operands (the 2-digit MRSD dynamic range
+[-272, 255] strictly contains int8).
+
+``lowrank_factor`` SVD-factors the error table E(a,b) = AMR(a,b) - a*b into
+rank-r terms  E ~= sum_r u_r(a) * v_r(b), which turns an approximate matmul
+into ``A @ B + U(A) @ V(B)`` — (1+r)/1 MXU matmuls instead of per-element
+gather emulation (DESIGN.md §2 L2). Rank 256 is exact by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+
+import numpy as np
+
+from . import mrsd
+from .amrmul import AMRMultiplier
+
+INT8_OFFSET = 128  # index = value + 128
+
+
+@lru_cache(maxsize=32)
+def build_int8_lut(border: int | None) -> np.ndarray:
+    """(256, 256) int32: LUT[a+128, b+128] = AMR-MUL_2digit(a, b)."""
+    m = AMRMultiplier(2, border=border)
+    vals = np.arange(-128, 128, dtype=np.int64)
+    a = np.repeat(vals, 256)
+    b = np.tile(vals, 256)
+    prod = m.multiply_values(a, b)  # float64, exact (products < 2**16)
+    lut = prod.astype(np.int32).reshape(256, 256)
+    return lut
+
+
+def exact_int8_table() -> np.ndarray:
+    vals = np.arange(-128, 128, dtype=np.int64)
+    return (vals[:, None] * vals[None, :]).astype(np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class LowRankFactors:
+    """E(a, b) ~= U[a+128] @ V[b+128].T, shapes (256, r)."""
+
+    border: int | None
+    rank: int
+    u: np.ndarray  # (256, r) float32
+    v: np.ndarray  # (256, r) float32
+    residual_fro: float  # ||E - UV'||_F / ||E||_F (0 when rank covers spectrum)
+
+    def reconstruct(self) -> np.ndarray:
+        return self.u @ self.v.T
+
+
+@lru_cache(maxsize=64)
+def lowrank_factor(border: int | None, rank: int) -> LowRankFactors:
+    lut = build_int8_lut(border).astype(np.float64)
+    err = lut - exact_int8_table().astype(np.float64)
+    U, s, Vt = np.linalg.svd(err, full_matrices=False)
+    r = min(rank, 256)
+    sr = np.sqrt(s[:r])
+    u = (U[:, :r] * sr).astype(np.float32)
+    v = (Vt[:r, :].T * sr).astype(np.float32)
+    denom = float(np.linalg.norm(err)) or 1.0
+    resid = float(np.linalg.norm(err - (u.astype(np.float64) @ v.T.astype(np.float64)))) / denom
+    return LowRankFactors(border, r, u, v, resid)
+
+
+def error_stats(border: int | None) -> dict[str, float]:
+    """Summary statistics of the int8 error table (feeds amr_noise mode)."""
+    lut = build_int8_lut(border).astype(np.float64)
+    err = lut - exact_int8_table().astype(np.float64)
+    return {
+        "mean": float(err.mean()),
+        "std": float(err.std()),
+        "max_abs": float(np.abs(err).max()),
+        "rel_std": float((err / np.maximum(np.abs(exact_int8_table()), 1)).std()),
+    }

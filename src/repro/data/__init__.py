@@ -1,0 +1,4 @@
+"""Data pipeline: deterministic synthetic LM stream + memmap corpus loader."""
+from .pipeline import MemmapDataset, SyntheticLM
+
+__all__ = ["SyntheticLM", "MemmapDataset"]

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  amr_matmul — the paper's approximate multiplier as an MXU matmul kernel
+               (low-rank error-LUT factorization; DESIGN.md §2 L2).
+  ssd_scan   — Mamba2 SSD chunked scan (intra-chunk dual form + carried
+               state), the hot loop of the ssm/hybrid architectures.
+
+Each kernel ships ops.py (jit wrapper) and ref.py (pure-jnp oracle);
+tests sweep shapes/dtypes and assert allclose under interpret=True.
+"""

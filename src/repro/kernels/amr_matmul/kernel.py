@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: AMR-MUL approximate matmul in low-rank MXU form.
+
+The paper's multiplier, as deployed on TPU (DESIGN.md §2 L2): for int8
+operands the approximate product is exactly ``a*b + E(a,b)`` with E the
+256x256 error table of the bit-accurate 2-digit AMR-MUL. E factors as
+``E ~= U V^T`` (SVD, rank r), so a block matmul becomes
+
+    acc += concat([A_f32, U[A+128]]) @ concat([B_f32, V[B+128]])
+
+— ONE (bm, bk*(1+r)) x (bk*(1+r), bn) MXU dot per block instead of per-
+element gather emulation on the VPU. U/V live whole in VMEM (256*r*4B).
+
+Tiling: grid (M/bm, N/bn, K/bk), K innermost so the f32 accumulator
+scratch carries across the K sweep; block dims multiples of the MXU tile
+(128) on M/N and of the int8 lane pack on K.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _amr_matmul_kernel(a_ref, b_ref, u_ref, v_ref, out_ref, acc_ref, *, n_k: int):
+    """One (bm, bn) output block; K swept by the innermost grid dim."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]                                  # (bm, bk) int8
+    b = b_ref[...]                                  # (bk, bn) int8
+    u = u_ref[...]                                  # (256, r) f32
+    v = v_ref[...]                                  # (256, r) f32
+    bm, bk = a.shape
+    bn = b.shape[1]
+    r = u.shape[1]
+
+    ia = (a.astype(jnp.int32) + 128)
+    ib = (b.astype(jnp.int32) + 128)
+    ua = jnp.take(u, ia.reshape(-1), axis=0).reshape(bm, bk, r)
+    vb = jnp.take(v, ib.reshape(-1), axis=0).reshape(bk, bn, r)
+
+    # augmented operands: exact lane + r error lanes -> single MXU dot.
+    # lane order along the contraction axis is (k, [exact, err_1..err_r])
+    # on BOTH sides: A flattens (bm, bk, 1+r) -> (bm, bk*(1+r)); B must put
+    # the lane axis BEFORE bn: (bk, 1+r, bn) -> (bk*(1+r), bn).
+    a_aug = jnp.concatenate(
+        [a.astype(jnp.float32)[:, :, None], ua], axis=2).reshape(bm, bk * (1 + r))
+    b_aug = jnp.concatenate(
+        [b.astype(jnp.float32)[:, None, :], vb.transpose(0, 2, 1)],
+        axis=1).reshape(bk * (1 + r), bn)
+    acc_ref[...] += jnp.dot(a_aug, b_aug, preferred_element_type=jnp.float32)
+
+    @pl.when(k_idx == n_k - 1)
+    def _store():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def amr_matmul_int8(a: jnp.ndarray, b: jnp.ndarray, u: jnp.ndarray, v: jnp.ndarray,
+                    *, bm: int = 128, bn: int = 128, bk: int = 128,
+                    interpret: bool = True) -> jnp.ndarray:
+    """a (M,K) int8, b (K,N) int8, u/v (256,r) f32 -> (M,N) f32 approx products."""
+    M, K = a.shape
+    N = b.shape[1]
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    n_k = K // bk
+    grid = (M // bm, N // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_amr_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec(u.shape, lambda i, j, k: (0, 0)),  # whole LUT in VMEM
+            pl.BlockSpec(v.shape, lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b, u, v)

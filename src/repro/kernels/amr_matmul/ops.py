@@ -1,0 +1,29 @@
+"""jit'd public wrapper: float matmul under AMR-MUL numerics via the kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lut as lut_lib
+from repro.numerics.quant import quantize_int8
+
+from .kernel import amr_matmul_int8
+
+
+def lut_factors(border: int, rank: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    f = lut_lib.lowrank_factor(border, rank)
+    return jnp.asarray(f.u), jnp.asarray(f.v)
+
+
+@partial(jax.jit, static_argnames=("border", "rank", "bm", "bn", "bk", "interpret"))
+def amr_matmul(a: jnp.ndarray, b: jnp.ndarray, *, border: int = 8, rank: int = 8,
+               bm: int = 128, bn: int = 128, bk: int = 128,
+               interpret: bool = True) -> jnp.ndarray:
+    """Float (M,K) @ (K,N) with AMR-MUL product semantics (quantize->kernel->rescale)."""
+    u, v = lut_factors(border, rank)
+    qa, sa = quantize_int8(a, axis=-1)
+    qb, sb = quantize_int8(b, axis=0)
+    out = amr_matmul_int8(qa, qb, u, v, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out * sa * sb

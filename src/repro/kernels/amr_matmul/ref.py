@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the AMR matmul kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lut as lut_lib
+
+
+def ref_lowrank_int8(a: jnp.ndarray, b: jnp.ndarray, u: jnp.ndarray, v: jnp.ndarray):
+    """Same math as the kernel, dense jnp: A@B + U[A]@V[B] contraction."""
+    fa = a.astype(jnp.float32)
+    fb = b.astype(jnp.float32)
+    ua = u[a.astype(jnp.int32) + 128]          # (M, K, r)
+    vb = v[b.astype(jnp.int32) + 128]          # (K, N, r)
+    return fa @ fb + jnp.einsum("mkr,knr->mn", ua, vb)
+
+
+def ref_bitexact_int8(a: np.ndarray, b: np.ndarray, border: int) -> np.ndarray:
+    """Ground truth: per-element products from the bit-accurate LUT."""
+    table = lut_lib.build_int8_lut(border).astype(np.int64)
+    M, K = a.shape
+    N = b.shape[1]
+    out = np.zeros((M, N), np.int64)
+    for k in range(K):
+        out += table[np.asarray(a[:, k], np.int64) + 128][:, np.asarray(b[k], np.int64) + 128]
+    return out

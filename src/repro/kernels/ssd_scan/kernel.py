@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan.
+
+One grid cell = one (batch, head, chunk) tile. The chunk axis is the
+innermost (sequential) grid dimension, so the carried SSM state lives in a
+VMEM scratch that persists across grid steps — the standard Pallas pattern
+for scans. Per tile:
+
+  intra:  y  = tril(exp(cum_t - cum_s)) * (C B^T) @ (x*dt)   (MXU dots)
+  inter:  y += exp(cum) * (C @ h_prev)
+  carry:  h  = exp(cum_Q) * h_prev + (exp(cum_Q - cum) B dt)^T @ x
+
+Tile sizes: Q (chunk) x P (head_dim) x N (d_state) — e.g. 256x64x128 ->
+well under VMEM; dims padded to lane multiples by the caller.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)       # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)        # (Q,)
+    a = a_ref[0].astype(jnp.float32)                # () log A for this head
+    b = b_ref[0, :, 0, :].astype(jnp.float32)       # (Q, N)
+    c = c_ref[0, :, 0, :].astype(jnp.float32)       # (Q, N)
+
+    la = (-jnp.exp(a)) * dt                         # (Q,) negative log decay
+    cum = jnp.cumsum(la)                            # (Q,)
+    xdt = x * dt[:, None]                           # (Q, P)
+
+    seg = cum[:, None] - cum[None, :]               # (Q, Q) t - s
+    q_len = x.shape[0]
+    tri = jnp.tril(jnp.ones((q_len, q_len), jnp.bool_))
+    decay = jnp.exp(jnp.where(tri, seg, -1e30))
+    cb = jnp.dot(c, b.T, preferred_element_type=jnp.float32)      # (Q, Q)
+    y = jnp.dot(cb * decay, xdt, preferred_element_type=jnp.float32)
+
+    h_prev = h_ref[...]                             # (N, P)
+    y += jnp.exp(cum)[:, None] * jnp.dot(c, h_prev, preferred_element_type=jnp.float32)
+
+    tail = jnp.exp(cum[-1] - cum)                   # (Q,)
+    h_new = jnp.exp(cum[-1]) * h_prev + jnp.dot(
+        (tail[:, None] * b).T, xdt, preferred_element_type=jnp.float32)
+    h_ref[...] = h_new
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
+             b: jnp.ndarray, c: jnp.ndarray, chunk: int = 256,
+             *, interpret: bool = True) -> jnp.ndarray:
+    """x (B,S,H,P), dt (B,S,H), a_log (H,), b/c (B,S,H,N) -> y (B,S,H,P).
+
+    b/c must already be head-expanded (ops.py repeats groups).
+    """
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    assert S % chunk == 0
+    nc = S // chunk
+    grid = (B, H, nc)
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, n_chunks=nc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, P), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, chunk, 1, N), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda bi, hi, ci: (bi, ci, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, P), lambda bi, hi, ci: (bi, ci, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, P), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a_log, b, c)

@@ -1,0 +1,21 @@
+"""jit'd wrapper: group expansion + dtype handling around the SSD kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_scan
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_mixer(x, dt, a_log, b_grouped, c_grouped, *, chunk: int = 256,
+              interpret: bool = True):
+    """b/c arrive grouped (B,S,G,N); expand to heads then run the kernel."""
+    H = x.shape[2]
+    G = b_grouped.shape[2]
+    rep = H // G
+    b = jnp.repeat(b_grouped, rep, axis=2)
+    c = jnp.repeat(c_grouped, rep, axis=2)
+    return ssd_scan(x, dt, a_log, b, c, chunk, interpret=interpret)

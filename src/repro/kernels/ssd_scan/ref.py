@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the SSD kernel: the model's own chunked implementation."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked
+
+
+def ref_ssd(x, dt, a_log, b, c, chunk: int = 256):
+    """Same contract as kernel.ssd_scan but with grouped (G,N) b/c expansion
+    already applied by the caller: here b/c are (B,S,H,N), so pass G=H."""
+    return ssd_chunked(x, dt, a_log, b, c, chunk)

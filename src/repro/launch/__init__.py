@@ -1,0 +1,1 @@
+"""Launch: production mesh, dry-run compiler, roofline, train/serve drivers."""

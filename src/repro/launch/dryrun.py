@@ -1,0 +1,361 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count at first init.
+#   Only the dry-run uses placeholder devices (system design: smoke tests and
+#   benches see the single real CPU device).
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) cell.
+
+For each cell this produces (JSON artifact under experiments/dryrun/):
+  * compiled.memory_analysis()  — per-device bytes: proves the cell fits HBM
+  * compiled.cost_analysis()    — per-device HLO FLOPs / bytes accessed
+  * collective byte totals      — parsed from the post-SPMD optimized HLO
+  * derived roofline terms      — see launch/roofline.py
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-2b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both        # full campaign
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from collections import defaultdict
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, shape_applicable
+from repro.configs.registry import ARCH_NAMES
+from repro.launch import mesh as mesh_lib
+from repro.launch import specs as specs_lib
+from repro.parallel import sharding as shard_lib
+from repro.train import steps as steps_lib
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.IGNORECASE)
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|u16|u8|pred|c64|c128)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        key = "f8" if dt.startswith("f8") else dt
+        total += n * _DTYPE_BYTES.get(key, 4)
+    return total
+
+
+_HEAVY_OPS = (
+    "dot", "fusion", "custom-call", "convolution", "gather", "scatter",
+    "reduce", "reduce-window", "sort", "dynamic-slice", "dynamic-update-slice",
+    "copy", "transpose", "concatenate", "pad", "parameter",
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "select-and-scatter", "cumsum",
+)
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->")
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*\S+\s+([a-z][\w\-]*)\(")
+
+
+def fused_traffic_bytes(hlo_text: str) -> float:
+    """Fusion-aware HBM traffic model from the optimized HLO.
+
+    The CPU backend's ``bytes accessed`` prices every op — including
+    elementwise/convert/broadcast chains a TPU pipeline would fuse — and
+    overstates traffic by ~10-50x. This estimator sums operand+output bytes
+    only for ops that form fusion *boundaries* on TPU (dots, fusions,
+    gathers/scatters, data movement, collectives, parameters), skipping ops
+    inside fusion/reduce sub-computations. Recorded as cost.fused_bytes;
+    the roofline memory term uses it (raw value kept alongside).
+    """
+    # first pass: computations referenced as fusion/reducer bodies — their
+    # interiors do not touch HBM (while bodies excluded from this set: they
+    # execute as real code, and in cost mode loops are unrolled anyway)
+    fused_bodies = set()
+    for line in hlo_text.splitlines():
+        if " fusion(" in line or " reduce(" in line or " scatter(" in line \
+                or "-start(" in line or " sort(" in line or " reduce-window(" in line:
+            for name in _CALLS_RE.findall(line):
+                fused_bodies.add(name)
+
+    total = 0.0
+    current = None
+    for line in hlo_text.splitlines():
+        hdr = _COMP_HDR.match(line.strip()) if "{" in line and "->" in line else None
+        if hdr:
+            current = hdr.group(1)
+            continue
+        if current in fused_bodies:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        op = m.group(1)
+        if any(op == h or op.startswith(h + ".") for h in _HEAVY_OPS):
+            total += _shape_bytes(line)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-class result-buffer bytes of every collective in the per-device HLO."""
+    out: dict[str, float] = defaultdict(float)
+    count: dict[str, int] = defaultdict(int)
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_txt, op = m.group(1), m.group(2).lower()
+        b = _shape_bytes(shape_txt)
+        out[op] += b
+        count[op] += 1
+    return {"bytes": dict(out), "counts": dict(count), "total_bytes": sum(out.values())}
+
+
+def _shardings(mesh, tree_specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool, microbatch: str = "auto",
+               cost_mode: bool = False, cfg_override=None):
+    """Returns (jitted fn, abstract args (donatable), meta) for one cell.
+
+    cost_mode: fully unroll layer scans and disable microbatching so
+    cost_analysis/collective parsing count every layer (XLA prices
+    while-loop bodies once). Deployment mode keeps scans (small HLO,
+    realistic memory picture).
+    """
+    import dataclasses as _dc
+    cfg = cfg_override or get_config(arch)
+    deploy_microbatch = microbatch
+    if cost_mode:
+        cfg = _dc.replace(cfg, unroll_layers=True)
+        microbatch = "1"
+    shape = SHAPES[shape_name]
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    dp = shard_lib.data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+
+    cost_scale = 1
+    if shape.kind == "train" and cost_mode:
+        # cost extraction: fwd+bwd of ONE deploy-sized microbatch with layers
+        # unrolled; per-step cost = n_micro x this + analytic optimizer terms
+        # (roofline.py). Full-batch unrolled would not fit memory and would
+        # distort the collective schedule. n_micro follows the --microbatch
+        # override so microbatch-count sweeps measure the FSDP re-gather tax.
+        import dataclasses as _dc2
+        n_micro = ((shape.global_batch // dp_size) if deploy_microbatch == "auto"
+                   else max(int(deploy_microbatch), 1))
+        cost_scale = n_micro
+        small_shape = _dc2.replace(shape,
+                                   global_batch=shape.global_batch // n_micro)
+        params = specs_lib.abstract_params(cfg)
+        batch = specs_lib.train_specs(cfg, small_shape)
+        p_specs = shard_lib.param_specs(mesh, params, cfg)
+        batch_specs = {k: shard_lib.batch_partition_spec(mesh, v.shape[0], len(v.shape))
+                       for k, v in batch.items()}
+        step = steps_lib.make_grads_step(cfg)
+        fn = jax.jit(
+            step,
+            in_shardings=(_shardings(mesh, p_specs), _shardings(mesh, batch_specs)),
+            out_shardings=_shardings(mesh, p_specs),
+        )
+        args = (params, batch)
+        tokens = shape.global_batch * shape.seq_len
+        flops_mult = 6
+    elif shape.kind == "train":
+        state = specs_lib.abstract_train_state(cfg)
+        batch = specs_lib.train_specs(cfg, shape)
+        state_specs = shard_lib.param_specs(mesh, state, cfg)  # rules cover opt-state mirrors
+        batch_specs = {k: shard_lib.batch_partition_spec(mesh, v.shape[0], len(v.shape))
+                       for k, v in batch.items()}
+        mb = (shape.global_batch // dp_size) if microbatch == "auto" else int(microbatch)
+        step = steps_lib.make_train_step(cfg, microbatch=mb if mb > 1 else None)
+        fn = jax.jit(
+            step,
+            in_shardings=(_shardings(mesh, state_specs), _shardings(mesh, batch_specs)),
+            out_shardings=(_shardings(mesh, state_specs),
+                           NamedSharding(mesh, P())),
+            donate_argnums=(0,),
+        )
+        args = (state, batch)
+        tokens = shape.global_batch * shape.seq_len
+        flops_mult = 6
+    elif shape.kind == "prefill":
+        params = specs_lib.abstract_params(cfg)
+        batch = specs_lib.prefill_specs(cfg, shape)
+        p_specs = shard_lib.param_specs(mesh, params, cfg)
+        batch_specs = {k: shard_lib.batch_partition_spec(mesh, v.shape[0], len(v.shape))
+                       for k, v in batch.items()}
+        step = steps_lib.make_prefill_step(cfg)
+        logits_spec = shard_lib.batch_partition_spec(mesh, shape.global_batch, 2)
+        fn = jax.jit(
+            step,
+            in_shardings=(_shardings(mesh, p_specs), _shardings(mesh, batch_specs)),
+            out_shardings=NamedSharding(mesh, logits_spec),
+        )
+        args = (params, batch)
+        tokens = shape.global_batch * shape.seq_len
+        flops_mult = 2
+    else:  # decode
+        params = specs_lib.abstract_params(cfg)
+        cache, batch = specs_lib.decode_specs(cfg, shape)
+        p_specs = shard_lib.param_specs(mesh, params, cfg)
+        c_specs = shard_lib.cache_specs(mesh, cache, shape.global_batch)
+        batch_specs = {k: shard_lib.batch_partition_spec(mesh, v.shape[0], len(v.shape))
+                       for k, v in batch.items()}
+        step = steps_lib.make_serve_step(cfg)
+        tok_spec = shard_lib.batch_partition_spec(mesh, shape.global_batch, 1)
+        fn = jax.jit(
+            step,
+            in_shardings=(_shardings(mesh, p_specs), _shardings(mesh, c_specs),
+                          _shardings(mesh, batch_specs)),
+            out_shardings=(NamedSharding(mesh, tok_spec), _shardings(mesh, c_specs)),
+            donate_argnums=(1,),
+        )
+        args = (params, cache, batch)
+        tokens = shape.global_batch  # one new token per sequence
+        flops_mult = 2
+
+    meta = {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+        "tokens_per_step": tokens,
+        "flops_mult": flops_mult,
+        "cost_scale": cost_scale,
+        "params": specs_lib.param_count(cfg),
+        "active_params": specs_lib.active_param_count(cfg),
+    }
+    return fn, args, mesh, meta
+
+
+def _memory_record(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    rec = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "hbm_per_chip": mesh_lib.HBM_PER_CHIP,
+    }
+    rec["peak_bytes"] = (rec["argument_bytes"] + rec["temp_bytes"]
+                         + rec["output_bytes"] - rec["alias_bytes"])
+    return rec
+
+
+def _cost_record(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             microbatch: str = "auto", with_cost: bool = True,
+             cfg_override=None, tag_suffix: str = "") -> dict:
+    """Two-phase dry-run for one cell.
+
+    Phase 1 (deployment): scan-over-layers (+ microbatch for train) — small
+    HLO, realistic per-device memory; proves the sharding compiles and fits.
+    Phase 2 (cost, single-pod roofline cells only): layers unrolled, no
+    microbatch — cost_analysis and the collective parse then count every
+    layer exactly (XLA prices while bodies once; DESIGN.md §Dry-run).
+    """
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    tag = f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}{tag_suffix}"
+    rec: dict = {"cell": tag}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+    else:
+        t0 = time.time()
+        try:
+            fn, args, mesh, meta = build_cell(arch, shape_name, multi_pod, microbatch,
+                                              cfg_override=cfg_override)
+            rec.update(meta)
+            with jax.set_mesh(mesh):
+                compiled = fn.lower(*args).compile()
+            rec["compile_s"] = round(time.time() - t0, 1)
+            rec["memory"] = _memory_record(compiled)
+            rec["fits"] = rec["memory"]["peak_bytes"] <= mesh_lib.HBM_PER_CHIP
+            rec["deploy_cost"] = _cost_record(compiled)  # while bodies priced once
+            del compiled
+
+            if with_cost:
+                t1 = time.time()
+                fn, args, mesh, meta2 = build_cell(arch, shape_name, multi_pod, microbatch,
+                                                   cost_mode=True, cfg_override=cfg_override)
+                with jax.set_mesh(mesh):
+                    compiled = fn.lower(*args).compile()
+                rec["cost_compile_s"] = round(time.time() - t1, 1)
+                rec["cost_scale"] = meta2["cost_scale"]
+                rec["cost"] = _cost_record(compiled)
+                txt = compiled.as_text()
+                rec["cost"]["fused_bytes"] = fused_traffic_bytes(txt)
+                rec["collectives"] = collective_bytes(txt)
+                rec["unrolled_memory"] = _memory_record(compiled)
+                del compiled, txt
+            rec["status"] = "ok"
+        except Exception as e:  # noqa: BLE001 — recorded failure is the artifact
+            rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                       traceback=traceback.format_exc()[-2000:])
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+    print(f"[dryrun] {tag}: {rec['status']}"
+          + (f" compile={rec.get('compile_s')}s/{rec.get('cost_compile_s', 0)}s"
+             if rec.get("compile_s") else "")
+          + (f" ({rec.get('reason') or rec.get('error', '')[:160]})"
+             if rec["status"] != "ok" else ""), flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true", help="every arch x shape")
+    ap.add_argument("--microbatch", default="auto")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    archs = ARCH_NAMES if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_bad = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                # roofline table is single-pod; multi-pod proves the "pod"
+                # axis shards (deployment compile only)
+                rec = run_cell(arch, shape, mp, out_dir, args.microbatch,
+                               with_cost=not mp)
+                n_bad += rec["status"] == "error"
+    raise SystemExit(1 if n_bad else 0)
+
+
+if __name__ == "__main__":
+    main()

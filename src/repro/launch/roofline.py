@@ -1,0 +1,105 @@
+"""Roofline analysis over dry-run artifacts (deliverable g).
+
+Three terms per (arch x shape x mesh) cell, all in seconds per step,
+computed from the per-device compiled HLO (cost_analysis + collective
+parse) and TPU v5e constants (launch/mesh.py):
+
+  t_compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+  t_memory     = HLO_bytes_per_device / HBM_BW
+  t_collective = collective_bytes_per_device / ICI_LINK_BW
+
+Derived:
+  bottleneck        = argmax of the three terms
+  MODEL_FLOPS       = flops_mult * N(_active) * tokens_per_step  (6ND train,
+                      2ND prefill/decode), per device
+  useful_ratio      = MODEL_FLOPS / HLO_FLOPs   (remat/redundancy waste)
+  roofline_fraction = (MODEL_FLOPS/PEAK) / max(terms) — the MFU upper bound
+                      the compiled artifact allows; §Perf's score.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.launch.mesh import HBM_BW, ICI_LINK_BW, PEAK_FLOPS_BF16
+
+
+def analyse(rec: dict) -> dict | None:
+    if rec.get("status") != "ok" or "cost" not in rec:
+        return None
+    chips = rec["chips"]
+    scale = rec.get("cost_scale", 1)
+    # train cells: cost lowering covers ONE microbatch; scale to the full
+    # step and add the (once-per-step) optimizer's analytic footprint:
+    # ~25 flops and ~26 bytes per sharded fp32 master/moment element.
+    opt_flops = 25.0 * rec["params"] / chips if rec["kind"] == "train" else 0.0
+    opt_bytes = 26.0 * rec["params"] / chips if rec["kind"] == "train" else 0.0
+    # fused_bytes = fusion-aware TPU traffic model (dryrun.fused_traffic_bytes);
+    # raw bytes_accessed (CPU-pipeline, unfused) kept as the pessimistic bound
+    raw_bytes = rec["cost"]["bytes_accessed"]
+    bytes_est = rec["cost"].get("fused_bytes", raw_bytes)
+    flops_dev = rec["cost"]["flops"] * scale + opt_flops
+    bytes_dev = bytes_est * scale + opt_bytes
+    coll_dev = rec["collectives"]["total_bytes"] * scale
+    t_comp = flops_dev / PEAK_FLOPS_BF16
+    t_mem = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    n = rec["active_params"]
+    model_flops = rec["flops_mult"] * n * rec["tokens_per_step"] / chips
+    bound = max(terms.values()) or 1e-30
+    return {
+        "cell": rec["cell"],
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "bottleneck": bottleneck,
+        "model_flops_per_dev": model_flops,
+        "useful_ratio": model_flops / flops_dev if flops_dev else 0.0,
+        "roofline_fraction": (model_flops / PEAK_FLOPS_BF16) / bound,
+        "fits": rec.get("fits"),
+        "peak_gb": rec["memory"]["peak_bytes"] / 2**30 if "memory" in rec else None,
+    }
+
+
+def table(dry_dir: Path, mesh_filter: str | None = None) -> list[dict]:
+    rows = []
+    for f in sorted(dry_dir.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if mesh_filter and not rec["cell"].endswith(mesh_filter):
+            continue
+        row = analyse(rec)
+        if row is None:
+            rows.append({"cell": rec["cell"], "status": rec.get("status"),
+                         "reason": rec.get("reason") or rec.get("error", "")[:100]})
+        else:
+            rows.append(row)
+    return rows
+
+
+def fmt_row(r: dict) -> str:
+    if "t_compute_s" not in r:
+        return f"| {r['cell']} | {r.get('status')} | {r.get('reason','')} |"
+    return ("| {cell} | {tc:.2e} | {tm:.2e} | {tl:.2e} | {b} | {ur:.2f} | {rf:.3f} | "
+            "{gb:.1f} |").format(
+        cell=r["cell"], tc=r["t_compute_s"], tm=r["t_memory_s"],
+        tl=r["t_collective_s"], b=r["bottleneck"], ur=r["useful_ratio"],
+        rf=r["roofline_fraction"], gb=r["peak_gb"] or 0)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    rows = table(Path(args.dir), args.mesh)
+    print("| cell | t_comp | t_mem | t_coll | bottleneck | useful | roofline_frac | peak_GB |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(fmt_row(r))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Serving launcher: prefill a batch of prompts, then batched greedy decode.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
+      --batch 4 --prompt-len 32 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config, get_reduced_config
+from repro.launch.mesh import make_host_mesh
+from repro.models import decode_step, forward, init_cache, init_params
+from repro.train.steps import make_serve_step
+
+
+def prefill_into_cache(cfg, params, tokens, capacity):
+    """One-shot prefill -> decode cache (models.prefill_with_cache)."""
+    from repro.models.model import prefill_with_cache
+    _, cache = prefill_with_cache(cfg, params, tokens, capacity)
+    return cache
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    mesh = make_host_mesh()
+    rng = np.random.default_rng(args.seed)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)),
+                          jnp.int32)
+
+    with jax.set_mesh(mesh):
+        params = init_params(cfg, jax.random.PRNGKey(args.seed))
+        print(f"[serve] prefilling {args.batch}x{args.prompt_len}")
+        cache = prefill_into_cache(cfg, params, prompts,
+                                   args.prompt_len + args.gen)
+
+        serve = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+        tok = prompts[:, -1:]
+        out = []
+        t0 = time.time()
+        for _ in range(args.gen):
+            nxt, cache = serve(params, cache, {"token": tok})
+            tok = nxt[:, None]
+            out.append(np.asarray(nxt))
+        dt = time.time() - t0
+    gen = np.stack(out, axis=1)
+    print(f"[serve] generated {gen.shape} in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s)")
+    print("[serve] sample:", gen[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""input_specs: ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero allocation — the dry-run lowers against
+these. For decode shapes the cache spec is derived with jax.eval_shape over
+init_cache (abstract; no memory is touched).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import init_cache
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def train_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    text = S - cfg.vision_prefix if cfg.vision_prefix else S
+    batch: dict[str, Any] = {
+        "tokens": _sds((B, text), jnp.int32),
+        "targets": _sds((B, text), jnp.int32),
+    }
+    if cfg.vision_prefix:
+        batch["extra"] = _sds((B, cfg.vision_prefix, cfg.d_model), cfg.dtype)
+    elif cfg.encoder_layers:
+        batch["extra"] = _sds((B, cfg.encoder_frames, cfg.d_model), cfg.dtype)
+    return batch
+
+
+def prefill_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    spec = train_specs(cfg, shape)
+    spec.pop("targets")
+    return spec
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig) -> tuple[Any, dict]:
+    """(cache_spec_tree, batch_specs) for one decode step with a seq_len cache."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(partial(init_cache, cfg, B, S))
+    batch: dict[str, Any] = {"token": _sds((B, 1), jnp.int32)}
+    if cfg.encoder_layers:
+        batch["enc_out"] = _sds((B, cfg.encoder_frames, cfg.d_model), cfg.dtype)
+    return cache, batch
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    from repro.models import init_params
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_train_state(cfg: ModelConfig) -> Any:
+    from repro.train.steps import make_train_state
+    return jax.eval_shape(lambda: make_train_state(cfg, jax.random.PRNGKey(0)))
+
+
+def param_count(cfg: ModelConfig) -> int:
+    import math
+    tree = abstract_params(cfg)
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(tree))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """MoE: experts count at top_k/n_experts weight (for 6*N_active*D)."""
+    tree = abstract_params(cfg)
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        names = [str(getattr(e, "key", getattr(e, "name", ""))) for e in path]
+        if cfg.moe and any(n_ in ("w_gate", "w_up", "w_down") for n_ in names) \
+                and len(leaf.shape) >= 3:
+            n = n * cfg.moe.top_k // cfg.moe.n_experts
+        total += n
+    return total

@@ -1,0 +1,4 @@
+"""Model zoo: composable LM blocks covering all assigned architecture families."""
+from .model import decode_step, forward, group_structure, init_cache, init_params
+
+__all__ = ["forward", "decode_step", "init_params", "init_cache", "group_structure"]

@@ -1,0 +1,301 @@
+"""GQA/MQA attention with qk-norm, sliding windows, RoPE, and KV caches.
+
+Three entry points per layer:
+  * ``attend_full``  — training / prefill over a whole sequence (causal,
+    optionally sliding-window masked).
+  * ``attend_decode`` — one-token step against a (possibly ring-buffered)
+    KV cache; this is what ``serve_step`` lowers for decode_* shapes.
+Cache layout: (batch, cache_len, n_kv, head_dim) — batch shards on "data",
+kv heads on "model" when divisible (parallel/sharding.py decides).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.numerics import AMRNumerics
+from repro.parallel.constraints import ambient_axis_size, pin
+
+from .layers import apply_rope, dense, init_rms_norm, rms_norm
+
+NEG_INF = -2.0e38
+
+
+def init_attention(key, d_model, n_heads, n_kv, head_dim, qk_norm, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (d_model, n_heads * head_dim)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d_model, n_kv * head_dim)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d_model, n_kv * head_dim)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (n_heads * head_dim, d_model))
+               * (n_heads * head_dim) ** -0.5).astype(dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = init_rms_norm(head_dim)
+        p["k_norm"] = init_rms_norm(head_dim)
+    return p
+
+
+def _project_qkv(params, x, n_heads, n_kv, head_dim, positions, theta, qk_norm,
+                 numerics: AMRNumerics | None, eps: float):
+    B, S, _ = x.shape
+    q = dense(x, params["wq"], numerics).reshape(B, S, n_heads, head_dim)
+    k = dense(x, params["wk"], numerics).reshape(B, S, n_kv, head_dim)
+    v = dense(x, params["wv"], numerics).reshape(B, S, n_kv, head_dim)
+    if qk_norm:
+        q = rms_norm(q, params["q_norm"], eps)
+        k = rms_norm(k, params["k_norm"], eps)
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    q = pin(q, "batch", None, "tp", None)
+    k = pin(k, "batch", None, "tp", None)
+    v = pin(v, "batch", None, "tp", None)
+    return q, k, v
+
+
+def _gqa_scores(q, k):
+    """q: (B,S,Hq,D), k: (B,T,Hkv,D) -> (B, Hq, S, T) with head grouping."""
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    q = q.reshape(B, S, Hkv, g, D)
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k) / (D ** 0.5)
+    return scores.reshape(B, Hkv * g, S, k.shape[1])
+
+
+def _gqa_combine(probs, v):
+    """probs: (B, Hq, S, T), v: (B,T,Hkv,D) -> (B,S,Hq,D)."""
+    B, Hq, S, T = probs.shape
+    Hkv = v.shape[2]
+    g = Hq // Hkv
+    probs = probs.reshape(B, Hkv, g, S, T)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, S, Hq, v.shape[-1])
+
+
+def attend_full(
+    params: dict,
+    x: jnp.ndarray,
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    theta: float,
+    qk_norm: bool = False,
+    window: int = 0,
+    causal: bool = True,
+    numerics: AMRNumerics | None = None,
+    eps: float = 1e-6,
+    unroll: bool = False,
+) -> jnp.ndarray:
+    """Self-attention over the full sequence (training / prefill).
+
+    causal=False gives the bidirectional form (encoder stacks)."""
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    q, k, v = _project_qkv(params, x, n_heads, n_kv, head_dim, positions, theta,
+                           qk_norm, numerics, eps)
+    if S >= _CHUNKED_THRESHOLD and S % _Q_CHUNK == 0 and causal:
+        out = _chunked_attention(q, k, v, window, unroll=unroll)
+    else:
+        scores = _gqa_scores(q, k).astype(jnp.float32)
+        i = jnp.arange(S)[:, None]
+        j = jnp.arange(S)[None, :]
+        mask = (j <= i) if causal else jnp.ones((S, S), bool)
+        if window > 0:
+            mask &= jnp.abs(i - j) < window
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = _gqa_combine(probs, v)
+    out = pin(out.reshape(B, S, n_heads * head_dim), "batch", None, "tp")
+    return pin(dense(out, params["wo"], numerics), "batch", None, None)
+
+
+_Q_CHUNK = 2048            # query-block size for chunked attention
+_CHUNKED_THRESHOLD = 16384  # use chunked attention from this sequence length
+
+
+def _chunked_attention(q, k, v, window: int, *, unroll: bool = False):
+    """Query-block attention: never materialises the S x S score matrix.
+
+    Memory per block is (B, H, Q_CHUNK, S) — the production path for 32k+
+    prefill (a Pallas flash kernel would stream K too; this is the XLA
+    formulation of the same idea). The block loop is a lax.scan so the HLO
+    stays small; cost-extraction unrolls it like the layer scans.
+    """
+    B, S, Hq, D = q.shape
+    nb = S // _Q_CHUNK
+    qb = jnp.moveaxis(q.reshape(B, nb, _Q_CHUNK, Hq, D), 1, 0)  # (nb,B,qc,H,D)
+    offs = jnp.arange(nb) * _Q_CHUNK
+
+    def block(_, inp):
+        qi, off = inp
+        scores = _gqa_scores(qi, k).astype(jnp.float32)         # (B,H,qc,S)
+        rows = off + jnp.arange(_Q_CHUNK)[:, None]
+        cols = jnp.arange(S)[None, :]
+        mask = cols <= rows
+        if window > 0:
+            mask &= (rows - cols) < window
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(qi.dtype)
+        return None, _gqa_combine(probs, v)                     # (B,qc,H,D)
+
+    _, outs = jax.lax.scan(block, None, (qb, offs), unroll=nb if unroll else 1)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, Hq, D)
+
+
+# ------------------------------------------------------------------ decode
+@partial(jax.tree_util.register_dataclass, data_fields=["k", "v", "length"],
+         meta_fields=[])
+@dataclasses.dataclass
+class KVCache:
+    """Ring-buffered KV cache. ``length`` = logical tokens written so far."""
+
+    k: jnp.ndarray  # (B, C, n_kv, D)
+    v: jnp.ndarray
+    length: jnp.ndarray  # () int32 — logical position of the next token
+
+    @classmethod
+    def zeros(cls, batch, capacity, n_kv, head_dim, dtype):
+        shape = (batch, capacity, n_kv, head_dim)
+        return cls(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros((), jnp.int32))
+
+
+def attend_decode(
+    params: dict,
+    x: jnp.ndarray,               # (B, 1, d_model)
+    cache: KVCache,
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    theta: float,
+    qk_norm: bool = False,
+    window: int = 0,
+    numerics: AMRNumerics | None = None,
+    eps: float = 1e-6,
+) -> tuple[jnp.ndarray, KVCache]:
+    """One decode step: write K/V at the cache slot, attend over valid slots."""
+    B = x.shape[0]
+    C = cache.k.shape[1]
+    pos = cache.length  # scalar logical position
+    positions = jnp.broadcast_to(pos.astype(jnp.int32), (B, 1))
+    q, k, v = _project_qkv(params, x, n_heads, n_kv, head_dim, positions, theta,
+                           qk_norm, numerics, eps)
+    slot = jnp.where(window > 0, pos % C, jnp.minimum(pos, C - 1)).astype(jnp.int32)
+    # masked select instead of dynamic_update_slice: a DUS with a dynamic
+    # index on the model-sharded cache dim makes GSPMD replicate the whole
+    # cache per layer ("involuntary full rematerialization"); the select is
+    # elementwise — it shards, fuses, and aliases in place under donation
+    hit = (jnp.arange(C, dtype=jnp.int32) == slot)[None, :, None, None]
+    new_k = jnp.where(hit, k.astype(cache.k.dtype), cache.k)
+    new_v = jnp.where(hit, v.astype(cache.v.dtype), cache.v)
+
+    scores = _gqa_scores(q, new_k).astype(jnp.float32)  # (B, Hq, 1, C)
+    idx = jnp.arange(C)
+    valid = idx <= slot if window <= 0 else (
+        (idx <= slot) | (pos >= C)  # ring buffer full: every slot is live
+    )
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    # scores sharding must FOLLOW the cache layout (parallel/sharding.py):
+    # kv heads divisible -> head-sharded; otherwise the cache seq dim is
+    # model-sharded (flash-decoding) and scores shard on C — pinning heads
+    # there would make XLA all-gather the whole cache (measured 135 GB/step)
+    if n_kv % ambient_axis_size("model") == 0:
+        scores = pin(scores, "batch", "tp", None, None)
+    else:
+        scores = pin(scores, "batch", None, None, "tp")
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = _gqa_combine(probs, new_v).reshape(B, 1, n_heads * head_dim)
+    out = pin(dense(out, params["wo"], numerics), "batch", None, None)
+    return out, KVCache(new_k, new_v, pos + 1)
+
+
+# --------------------------------------------------------------- cross-attn
+def init_cross_attention(key, d_model, n_heads, head_dim, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    s = d_model ** -0.5
+    return {
+        "wq": (jax.random.normal(ks[0], (d_model, n_heads * head_dim)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d_model, n_heads * head_dim)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d_model, n_heads * head_dim)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (n_heads * head_dim, d_model))
+               * (n_heads * head_dim) ** -0.5).astype(dtype),
+    }
+
+
+def attend_cross(params, x, enc_kv: tuple[jnp.ndarray, jnp.ndarray], *,
+                 n_heads: int, head_dim: int,
+                 numerics: AMRNumerics | None = None) -> jnp.ndarray:
+    """Decoder cross-attention; enc_kv = precomputed (K, V) over encoder frames."""
+    B, S, _ = x.shape
+    q = dense(x, params["wq"], numerics).reshape(B, S, n_heads, head_dim)
+    k, v = enc_kv
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) / (head_dim ** 0.5)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v).reshape(B, S, n_heads * head_dim)
+    return dense(out, params["wo"], numerics)
+
+
+def encode_cross_kv(params, enc_out: jnp.ndarray, *, n_heads: int, head_dim: int,
+                    numerics: AMRNumerics | None = None):
+    B, T, _ = enc_out.shape
+    k = dense(enc_out, params["wk"], numerics).reshape(B, T, n_heads, head_dim)
+    v = dense(enc_out, params["wv"], numerics).reshape(B, T, n_heads, head_dim)
+    return k, v
+
+
+def attend_prefill(
+    params: dict,
+    x: jnp.ndarray,
+    capacity: int,
+    *,
+    n_heads: int,
+    n_kv: int,
+    head_dim: int,
+    theta: float,
+    qk_norm: bool = False,
+    window: int = 0,
+    numerics: AMRNumerics | None = None,
+    eps: float = 1e-6,
+    unroll: bool = False,
+) -> tuple[jnp.ndarray, KVCache]:
+    """Full-sequence attention that ALSO builds the decode KV cache
+    (prefill -> decode handoff). capacity >= S for full attention; for
+    sliding-window layers capacity == min(window, S) ring slots."""
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    q, k, v = _project_qkv(params, x, n_heads, n_kv, head_dim, positions, theta,
+                           qk_norm, numerics, eps)
+    if S >= _CHUNKED_THRESHOLD and S % _Q_CHUNK == 0:
+        out = _chunked_attention(q, k, v, window, unroll=unroll)
+    else:
+        scores = _gqa_scores(q, k).astype(jnp.float32)
+        i = jnp.arange(S)[:, None]
+        j = jnp.arange(S)[None, :]
+        mask = j <= i
+        if window > 0:
+            mask &= (i - j) < window
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        out = _gqa_combine(probs, v)
+    out = pin(out.reshape(B, S, n_heads * head_dim), "batch", None, "tp")
+    out = pin(dense(out, params["wo"], numerics), "batch", None, None)
+
+    C = capacity
+    if window > 0 and C <= S:
+        # ring layout: token t lives at slot t % C; the last C tokens survive
+        roll = S % C
+        k_c = jnp.roll(k[:, -C:], roll, axis=1)
+        v_c = jnp.roll(v[:, -C:], roll, axis=1)
+    else:
+        pad = C - S
+        k_c = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_c = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = KVCache(k_c, v_c, jnp.asarray(S, jnp.int32))
+    return out, cache

@@ -1,0 +1,5 @@
+"""Numerics policy: how the paper's approximate multiplier enters NN matmuls."""
+from .approx_matmul import AMRNumerics, approx_matmul
+from .quant import dequantize, quantize_int8
+
+__all__ = ["AMRNumerics", "approx_matmul", "quantize_int8", "dequantize"]

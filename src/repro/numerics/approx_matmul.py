@@ -1,0 +1,156 @@
+"""Approximate matmul modes — the AMR-MUL as a NN numerics policy.
+
+Modes (DESIGN.md §2/§3):
+  exact        — jnp.einsum in the requested dtype (baseline).
+  amr_lut      — bit-exact AMR-MUL semantics per scalar product: int8
+                 quantize, per-element gather from the 256x256 LUT,
+                 accumulate in int32. Paper-faithful; VPU-bound on TPU.
+  amr_lowrank  — beyond-paper MXU form: C = (A@B + U(A)@V(B)) * scales,
+                 rank-r SVD factors of the LUT error table. rank=256 is
+                 bit-equivalent to amr_lut up to fp32 accumulation.
+  amr_noise    — training-scale surrogate: exact matmul + Gaussian error
+                 with moments matched to the measured AMR-MUL error table
+                 (paper Fig. 6 shows the relative error is ~Gaussian, mu~0).
+
+All functions take A: (..., M, K), B: (K, N) and contract the last/first
+axes, matching how dense layers consume them. jit/pjit-safe; the LUT and
+factors are closed-over constants (baked into the executable).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lut as lut_lib
+from .quant import quantize_int8, quantize_int8_ste
+
+Mode = str  # 'exact' | 'amr_lut' | 'amr_lowrank' | 'amr_noise'
+
+
+@dataclasses.dataclass(frozen=True)
+class AMRNumerics:
+    """Policy object threaded through models; hashable/static for jit."""
+
+    mode: Mode = "exact"
+    border: int = 8          # approximate border column (paper Table I/II)
+    rank: int = 8            # low-rank error rank (amr_lowrank)
+    noise_seed: int = 0
+
+    def is_exact(self) -> bool:
+        return self.mode == "exact"
+
+
+def _lut_constants(border: int):
+    return jnp.asarray(lut_lib.build_int8_lut(border), dtype=jnp.int32)
+
+
+def _lowrank_constants(border: int, rank: int):
+    f = lut_lib.lowrank_factor(border, rank)
+    return jnp.asarray(f.u), jnp.asarray(f.v)
+
+
+def _noise_constants(border: int) -> tuple[float, float]:
+    s = lut_lib.error_stats(border)
+    return s["mean"], s["std"]
+
+
+def matmul_exact(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.matmul(a, b)
+
+
+def matmul_amr_lut(a: jnp.ndarray, b: jnp.ndarray, border: int) -> jnp.ndarray:
+    """Bit-exact AMR-MUL matmul via LUT gather (oracle; small shapes only)."""
+    table = _lut_constants(border)
+    qa, sa = quantize_int8(a, axis=-1)           # per-row scale (..., M, 1)
+    qb, sb = quantize_int8(b, axis=0)            # per-col scale (1, N)
+    ia = qa.astype(jnp.int32) + 128              # (..., M, K)
+    ib = qb.astype(jnp.int32) + 128              # (K, N)
+    prods = table[ia[..., :, :, None], ib[None, :, :]]  # (..., M, K, N)
+    acc = prods.sum(axis=-2).astype(jnp.float32)
+    return acc * sa * sb
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def matmul_amr_lowrank(a: jnp.ndarray, b: jnp.ndarray, border: int, rank: int) -> jnp.ndarray:
+    """MXU formulation of AMR-MUL semantics (§Perf cell P, iteration 3).
+
+    Forward: augmented-K single dot (same lane layout as kernels/amr_matmul)
+    — per k the contraction lanes are [exact, err_1..err_r] on BOTH sides,
+    ONE matmul over K*(1+r) with bf16 error lanes (int8-grid exact lanes are
+    bf16-exact). No f32 (K,N,r) correction tensor materialises/reshards.
+
+    Backward (custom_vjp): plain full-precision matmul vjp — the explicit
+    straight-through surrogate. Guarantees the (1+r)x flops are paid ONLY on
+    the forward pass instead of hoping XLA DCEs dead augmented-lane grads.
+    """
+    return _lowrank_fwd(a, b, border, rank)[0]
+
+
+def _lowrank_fwd(a, b, border, rank):
+    u, v = _lowrank_constants(border, rank)
+    qa, sa = quantize_int8_ste(a, axis=-1)
+    qb, sb = quantize_int8_ste(b, axis=0)
+    ia = jax.lax.stop_gradient(qa).astype(jnp.int32) + 128
+    ib = jax.lax.stop_gradient(qb).astype(jnp.int32) + 128
+    K = a.shape[-1]
+    ua = u[ia].astype(jnp.bfloat16)              # (..., M, K, r) 1-D LUTs
+    vb = v[ib].astype(jnp.bfloat16)              # (K, N, r)
+    a_aug = jnp.concatenate([qa[..., None].astype(jnp.bfloat16), ua], axis=-1)
+    a_aug = a_aug.reshape(*a.shape[:-1], K * (1 + rank))
+    b_aug = jnp.concatenate([qb[:, None, :].astype(jnp.bfloat16),
+                             vb.transpose(0, 2, 1)], axis=1)
+    b_aug = b_aug.reshape(K * (1 + rank), b.shape[-1])
+    out = jnp.matmul(a_aug, b_aug, preferred_element_type=jnp.float32)
+    return out * sa * sb, (a, b)
+
+
+def _lowrank_bwd(border, rank, res, g):
+    a, b = res
+    ga = jnp.matmul(g, b.T.astype(g.dtype)).astype(a.dtype)
+    gb = jnp.matmul(a.reshape(-1, a.shape[-1]).T.astype(g.dtype),
+                    g.reshape(-1, g.shape[-1])).astype(b.dtype)
+    return ga, gb
+
+
+matmul_amr_lowrank.defvjp(_lowrank_fwd, _lowrank_bwd)
+
+
+def matmul_amr_noise(a: jnp.ndarray, b: jnp.ndarray, border: int, key: jax.Array) -> jnp.ndarray:
+    """Surrogate: exact matmul + error noise with AMR-MUL-matched moments.
+
+    Per-element product error has mean mu and std sigma (from the LUT);
+    a K-length accumulation contributes N(K*mu, sqrt(K)*sigma) in the int8
+    domain, rescaled by the quantization scales.
+    """
+    mu, sigma = _noise_constants(border)
+    qa, sa = quantize_int8_ste(a, axis=-1)
+    qb, sb = quantize_int8_ste(b, axis=0)
+    k = a.shape[-1]
+    exact = jnp.matmul(qa, qb)
+    noise = mu * k + jnp.sqrt(float(k)) * sigma * jax.random.normal(key, exact.shape)
+    return (exact + noise) * sa * sb
+
+
+def approx_matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    numerics: AMRNumerics | None = None,
+    *,
+    key: jax.Array | None = None,
+) -> jnp.ndarray:
+    """Dispatch a matmul under the given numerics policy (None = exact)."""
+    if numerics is None or numerics.is_exact():
+        return matmul_exact(a, b)
+    if numerics.mode == "amr_lut":
+        return matmul_amr_lut(a, b, numerics.border)
+    if numerics.mode == "amr_lowrank":
+        return matmul_amr_lowrank(a, b, numerics.border, numerics.rank)
+    if numerics.mode == "amr_noise":
+        if key is None:
+            key = jax.random.PRNGKey(numerics.noise_seed)
+        return matmul_amr_noise(a, b, numerics.border, key)
+    raise ValueError(f"unknown numerics mode {numerics.mode!r}")

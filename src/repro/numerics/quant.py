@@ -1,0 +1,53 @@
+"""Symmetric int8 quantization for approximate-multiplier matmuls.
+
+The AMR-MUL LUT operates on int8 operands (2 MRSD digits); activations and
+weights are quantized symmetrically per-tensor or per-channel, multiplied
+approximately in the integer domain, and rescaled. Scales use absmax over
+the reduction-relevant axis; all ops are jit/vmap/pjit-safe.
+
+Training note: ``jnp.round`` has zero derivative, which would cut gradients
+through every approximate matmul (QAT 101). ``quantize_int8_ste`` is the
+straight-through form — forward is the quantized value, backward passes the
+identity — matching how approximate-hardware-aware training is actually
+done (the forward models the AMR-MUL circuit; the backward is a surrogate).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INT8_MAX = 127.0
+
+
+def _absmax_scale(x, axis, eps):
+    amax = jnp.max(jnp.abs(x)) if axis is None else jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    return jnp.maximum(amax, eps) / INT8_MAX
+
+
+def quantize_int8(x: jnp.ndarray, axis=None, eps: float = 1e-8):
+    """Symmetric absmax quantization (hard int8; zero gradient through q).
+
+    axis=None -> per-tensor scale; axis=k -> scale reduced over axis k
+    (per-channel over the remaining dims). Returns (q_int8, scale) with
+    x ~= q * scale.
+    """
+    scale = _absmax_scale(x, axis, eps)
+    q = jnp.clip(jnp.round(x / scale), -INT8_MAX - 1, INT8_MAX).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def quantize_int8_ste(x: jnp.ndarray, axis=None, eps: float = 1e-8):
+    """Straight-through quantization: float values on the int8 grid.
+
+    Returns (q_float, scale): q_float holds exact int8 values in f32 with
+    d(q_float)/dx == 1/scale (identity through round/clip).
+    """
+    scale = _absmax_scale(x, axis, eps)
+    xs = x.astype(jnp.float32) / scale
+    q = jnp.clip(jnp.round(xs), -INT8_MAX - 1, INT8_MAX)
+    q = xs + jax.lax.stop_gradient(q - xs)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale

@@ -1,0 +1,7 @@
+"""Optimizers (pure-pytree, shard-friendly) + LR schedules."""
+from .adafactor import adafactor_init, adafactor_update
+from .adamw import adamw_init, adamw_update
+from .schedule import cosine_warmup
+
+__all__ = ["adamw_init", "adamw_update", "adafactor_init", "adafactor_update",
+           "cosine_warmup"]

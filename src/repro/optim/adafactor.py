@@ -1,0 +1,83 @@
+"""Adafactor (factored second moments) — memory-lean option for 70B+ archs.
+
+Matrix params keep row/col second-moment factors (O(n+m) instead of O(nm));
+vectors/scalars fall back to full moments. No momentum, no master copy:
+~2 bytes/param of optimizer state for the big matrices.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["vr", "vc", "v", "count"], meta_fields=[])
+@dataclasses.dataclass
+class AdafactorState:
+    vr: Any      # row factors (or None placeholder zeros for non-factored)
+    vc: Any      # col factors
+    v: Any       # full second moment for <2D leaves
+    count: jnp.ndarray
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params: Any) -> AdafactorState:
+    def vr(p):
+        return jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p) else jnp.zeros((1,), jnp.float32)
+
+    def vc(p):
+        return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                if _factored(p) else jnp.zeros((1,), jnp.float32))
+
+    def v(p):
+        return jnp.zeros(p.shape, jnp.float32) if not _factored(p) else jnp.zeros((1,), jnp.float32)
+
+    return AdafactorState(jax.tree.map(vr, params), jax.tree.map(vc, params),
+                          jax.tree.map(v, params), jnp.zeros((), jnp.int32))
+
+
+def adafactor_update(
+    grads: Any,
+    state: AdafactorState,
+    params: Any,
+    lr,
+    *,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> tuple[Any, AdafactorState]:
+    count = state.count + 1
+    beta = 1.0 - (count.astype(jnp.float32) + 1.0) ** (-decay)
+
+    def upd(g, vr, vc, v, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if _factored(p):
+            vr_n = beta * vr + (1 - beta) * g2.mean(-1)
+            vc_n = beta * vc + (1 - beta) * g2.mean(-2)
+            denom = (vr_n[..., None] / jnp.maximum(vr_n.mean(-1, keepdims=True)[..., None], eps))
+            u = g / jnp.sqrt(jnp.maximum(denom * vc_n[..., None, :], eps))
+            v_n = v
+        else:
+            v_n = beta * v + (1 - beta) * g2
+            u = g / jnp.sqrt(jnp.maximum(v_n, eps))
+            vr_n, vc_n = vr, vc
+        rms_u = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+        new_p = p.astype(jnp.float32) - lr * u - lr * weight_decay * p.astype(jnp.float32)
+        return vr_n, vc_n, v_n, new_p.astype(p.dtype)
+
+    g_l, treedef = jax.tree.flatten(grads)
+    out = [upd(g, vr, vc, v, p) for g, vr, vc, v, p in zip(
+        g_l, treedef.flatten_up_to(state.vr), treedef.flatten_up_to(state.vc),
+        treedef.flatten_up_to(state.v), treedef.flatten_up_to(params))]
+    unflat = lambda i: jax.tree.unflatten(treedef, [o[i] for o in out])
+    return unflat(3), AdafactorState(unflat(0), unflat(1), unflat(2), count)

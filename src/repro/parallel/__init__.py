@@ -1,0 +1,4 @@
+"""Distribution: sharding rules, mesh helpers, compressed collectives."""
+from .sharding import batch_partition_spec, cache_specs, data_axes, param_specs
+
+__all__ = ["param_specs", "cache_specs", "batch_partition_spec", "data_axes"]

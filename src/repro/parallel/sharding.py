@@ -1,0 +1,185 @@
+"""Sharding rules: parameter FSDP x TP, activation DP, cache layouts.
+
+Scheme (DESIGN.md §3):
+  * "model" axis — tensor parallelism: column-parallel in-projections
+    (wq/wk/wv/w_gate/w_up/in_proj), row-parallel out-projections
+    (wo/w_down/out_proj); vocab-parallel embeddings/logits.
+  * "data" axis — batch data-parallelism AND parameter FSDP (GSPMD
+    all-gathers params forward, reduce-scatters grads backward).
+  * "pod" axis (multi-pod mesh) — pure data parallelism: activations shard
+    on ("pod","data"); parameters replicate across pods so FSDP gathers
+    stay intra-pod (ICI), and only gradient all-reduce crosses the DCI.
+
+Every rule is divisibility-guarded: a dim is only sharded if the axis size
+divides it (e.g. vocab 50280 on 16-way "model" stays replicated).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# parameter-leaf name -> (dims to try sharding, axis per dim), applied to the
+# TRAILING dims (stack/repeat leading axes get None automatically).
+_COL = {"last": "model", "second": "data"}    # column-parallel: (D, F)
+_ROW = {"last": "data", "second": "model"}    # row-parallel:   (F, D)
+
+_RULES: dict[str, dict[str, str]] = {
+    "wq": _COL, "wk": _COL, "wv": _COL, "w_gate": _COL, "w_up": _COL,
+    "wz": _COL, "wx": _COL, "vision_proj": _COL,
+    "wb": {"second": "data"}, "wc": {"second": "data"}, "wdt": {"second": "data"},
+    "wo": _ROW, "w_down": _ROW, "out_proj": _ROW,
+    "embed": {"last": "data", "second": "model"},    # (V, D): vocab-parallel
+    "lm_head": {"last": "data", "second": "model"},
+    "conv_x": {"last": "model"},
+    "conv_bias_x": {"last": "model"},
+    "router": {"second": "data"},
+}
+
+# names whose "model"-axis sharding must respect a *head* structure: splitting
+# inside a head's dim makes GSPMD drop batch sharding through rope/GQA
+# reshapes (observed on MQA archs) — replicate instead when heads don't divide.
+_HEAD_GATED = {"wq": "q", "wo": "q", "wk": "kv", "wv": "kv",
+               "wz": "ssm", "wx": "ssm", "out_proj": "ssm",
+               "conv_x": "ssm", "conv_bias_x": "ssm"}
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Axes carrying the batch dimension (('pod','data') on multi-pod)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        size = 1
+        for a in axis:
+            size *= mesh.shape[a]
+        return size
+    return mesh.shape[axis]
+
+
+def _guard(mesh: Mesh, dim: int, axis):
+    return axis if (axis is not None and dim % _axis_size(mesh, axis) == 0) else None
+
+
+def _heads_ok(mesh: Mesh, cfg, gate: str) -> bool:
+    if cfg is None:
+        return True
+    m = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    if gate == "q":
+        return cfg.n_heads % m == 0
+    if gate == "kv":
+        return cfg.n_kv_heads % m == 0
+    if gate == "ssm":
+        if cfg.ssm is None:
+            return True
+        n_heads = cfg.ssm.expand * cfg.d_model // cfg.ssm.head_dim
+        return n_heads % m == 0
+    return True
+
+
+def _leaf_spec(mesh: Mesh, path_names: list[str], shape: tuple[int, ...], cfg=None) -> P:
+    name = path_names[-1] if path_names else ""
+    rule = _RULES.get(name)
+    spec: list[Any] = [None] * len(shape)
+    # ZeRO-1: live (bf16) params lose their "data"-axis FSDP sharding —
+    # no per-microbatch weight gathers; optimizer-state mirrors (under
+    # '.opt.') stay data-sharded, so the once-per-step update reduce-
+    # scatters grads and all-gathers fresh params exactly once.
+    zero1_live = (cfg is not None and getattr(cfg, "param_shard", "fsdp") == "zero1"
+                  and "opt" not in path_names)
+    # expert-parallel MoE (cfg.moe.dispatch_shard == "expert"): shard the
+    # expert dim on "model" instead of the FFN dim (dispatch all-to-all)
+    if (cfg is not None and getattr(cfg, "moe", None) is not None
+            and cfg.moe.dispatch_shard == "expert"
+            and name in ("w_gate", "w_up", "w_down") and len(shape) >= 3
+            and shape[-3] == cfg.moe.n_experts):
+        spec[-3] = _guard(mesh, shape[-3], "model")
+        spec[-2] = None if zero1_live else _guard(mesh, shape[-2], "data")
+        return P(*spec)
+    if rule and len(shape) >= 1:
+        gate = _HEAD_GATED.get(name)
+        heads_ok = gate is None or _heads_ok(mesh, cfg, gate)
+        last = rule.get("last")
+        second = rule.get("second")
+        if not heads_ok:
+            last = None if last == "model" else last
+            second = None if second == "model" else second
+        if zero1_live:
+            last = None if last == "data" else last
+            second = None if second == "data" else second
+        spec[-1] = _guard(mesh, shape[-1], last)
+        if len(shape) >= 2 and second is not None:
+            spec[-2] = _guard(mesh, shape[-2], second)
+        # avoid double-assigning the same axis (1-D params etc.)
+        if len(shape) >= 2 and spec[-1] is not None and spec[-1] == spec[-2]:
+            spec[-2] = None
+    return P(*spec)
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for e in path:
+        if isinstance(e, jax.tree_util.DictKey):
+            names.append(str(e.key))
+        elif isinstance(e, jax.tree_util.GetAttrKey):
+            names.append(e.name)
+    return names
+
+
+def param_specs(mesh: Mesh, abstract_params: Any, cfg=None) -> Any:
+    """PartitionSpec tree matching an (abstract) param tree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(mesh, _path_names(path), leaf.shape, cfg),
+        abstract_params,
+    )
+
+
+def param_shardings(mesh: Mesh, abstract_params: Any, cfg=None) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(mesh, abstract_params, cfg),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_partition_spec(mesh: Mesh, batch: int, rank: int) -> P:
+    """Tokens/targets: shard dim0 on the data axes when divisible."""
+    dp = data_axes(mesh)
+    axis = dp if batch % _axis_size(mesh, dp) == 0 else None
+    return P(axis, *([None] * (rank - 1)))
+
+
+def cache_specs(mesh: Mesh, abstract_cache: Any, batch: int) -> Any:
+    """Decode caches: (repeat, B, ...) leaves — B on data axes, heads on model.
+
+    KVCache: k/v (R, B, C, n_kv, hd) -> (None, dp, None, 'model'|None, None)
+    SSMState: conv (R, B, W, C) -> (None, dp, None, 'model'|None)
+              h (R, B, H, N, P) -> (None, dp, 'model'|None, None, None)
+    length (R,) replicated.
+    """
+    dp = data_axes(mesh)
+    b_axis = dp if batch % _axis_size(mesh, dp) == 0 else None
+
+    def leaf(path, l):
+        names = _path_names(path)
+        shape = l.shape
+        name = names[-1] if names else ""
+        if name in ("k", "v") and len(shape) == 5:
+            kv_axis = _guard(mesh, shape[3], "model")
+            # kv heads indivisible (GQA/MQA on a wide model axis): shard the
+            # cache SEQUENCE dim instead — flash-decoding-style sequence
+            # parallelism; each model shard holds/reads a slice of the
+            # context, XLA reduces the softmax stats (a 192 GB/device qwen3
+            # decode cache becomes 12 GB).
+            seq_axis = None if kv_axis else _guard(mesh, shape[2], "model")
+            return P(None, b_axis, seq_axis, kv_axis, None)
+        if name == "conv" and len(shape) == 4:
+            return P(None, b_axis, None, _guard(mesh, shape[3], "model"))
+        if name == "h" and len(shape) == 5:
+            return P(None, b_axis, _guard(mesh, shape[2], "model"), None, None)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(leaf, abstract_cache)

@@ -1,0 +1,4 @@
+"""Runtime: fault tolerance, straggler mitigation, elastic restart logic."""
+from .fault import FaultTolerantLoop, Heartbeat, StragglerMonitor
+
+__all__ = ["FaultTolerantLoop", "Heartbeat", "StragglerMonitor"]

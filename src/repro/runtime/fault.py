@@ -1,0 +1,179 @@
+"""Fault tolerance & straggler mitigation (the launcher's control plane).
+
+At 1000+ nodes the failure model is: (a) hard node loss — the job restarts
+from the last checkpoint, possibly on fewer/more nodes (elastic); (b) soft
+hangs/stragglers — detected by step-time outliers and surfaced to the
+scheduler; (c) preemption — SIGTERM arrives, we checkpoint and exit with a
+resumable code. This module implements that control plane host-side:
+
+  * ``Heartbeat``       — periodic progress file (external watchdogs/k8s
+                          liveness probes key off its mtime).
+  * ``StragglerMonitor``— robust step-time tracking; flags steps slower
+                          than ``threshold`` x the running median.
+  * ``FaultTolerantLoop``— runs step_fn with retry-from-checkpoint on
+                          exception, preemption-safe checkpointing, and an
+                          elastic ``remesh`` hook invoked when the device
+                          count changes between restarts.
+
+Checkpoints are mesh-agnostic (ckpt/checkpoint.py), which is what makes
+the elastic path work: restore under whatever mesh exists now.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import signal
+import threading
+import time
+from collections import deque
+from pathlib import Path
+from typing import Any, Callable
+
+from repro.ckpt import CheckpointManager
+
+
+class Heartbeat:
+    def __init__(self, path: str | Path, interval_s: float = 10.0):
+        self.path = Path(path)
+        self.interval_s = interval_s
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self.payload: dict = {}
+
+    def start(self) -> None:
+        def run():
+            while not self._stop.wait(self.interval_s):
+                self.beat()
+
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+    def beat(self) -> None:
+        self.path.write_text(json.dumps({"t": time.time(), **self.payload}))
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=1)
+
+
+class StragglerMonitor:
+    """Flags step times above ``threshold`` x running median (window-robust)."""
+
+    def __init__(self, window: int = 50, threshold: float = 2.5):
+        self.times: deque[float] = deque(maxlen=window)
+        self.threshold = threshold
+        self.flagged: list[tuple[int, float, float]] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        med = self.median()
+        is_straggler = med is not None and dt > self.threshold * med
+        if is_straggler:
+            self.flagged.append((step, dt, med))
+        self.times.append(dt)
+        return is_straggler
+
+    def median(self) -> float | None:
+        if len(self.times) < 5:
+            return None
+        s = sorted(self.times)
+        return s[len(s) // 2]
+
+
+@dataclasses.dataclass
+class LoopResult:
+    steps_done: int
+    restarts: int
+    preempted: bool
+    final_state: Any
+
+
+class FaultTolerantLoop:
+    """Checkpoint/restart training loop with preemption + retry + elasticity.
+
+    step_fn(state, batch) -> (state, metrics); state must be a pytree.
+    make_state() builds a fresh state; remesh(state_host) re-shards a
+    restored host-side state for the *current* device topology.
+    """
+
+    def __init__(
+        self,
+        *,
+        ckpt_dir: str | Path,
+        make_state: Callable[[], Any],
+        step_fn: Callable[[Any, Any], tuple[Any, dict]],
+        batch_at: Callable[[int], Any],
+        ckpt_every: int = 50,
+        keep: int = 3,
+        max_retries: int = 3,
+        remesh: Callable[[Any], Any] | None = None,
+        heartbeat: Heartbeat | None = None,
+    ):
+        self.manager = CheckpointManager(ckpt_dir, keep=keep)
+        self.make_state = make_state
+        self.step_fn = step_fn
+        self.batch_at = batch_at
+        self.ckpt_every = ckpt_every
+        self.max_retries = max_retries
+        self.remesh = remesh
+        self.heartbeat = heartbeat
+        self.straggler = StragglerMonitor()
+        self._preempted = threading.Event()
+
+    def install_preemption_handler(self) -> None:
+        def handler(signum, frame):  # noqa: ARG001
+            self._preempted.set()
+
+        signal.signal(signal.SIGTERM, handler)
+
+    def run(self, total_steps: int, log_every: int = 10,
+            log=print) -> LoopResult:
+        restarts = 0
+        state, start = self._restore_or_init()
+        step = start
+        while step < total_steps:
+            try:
+                if self._preempted.is_set():
+                    self.manager.save(state, step)
+                    return LoopResult(step, restarts, True, state)
+                t0 = time.time()
+                batch = self.batch_at(step)
+                state, metrics = self.step_fn(state, batch)
+                dt = time.time() - t0
+                if self.straggler.observe(step, dt):
+                    log(f"[fault] step {step}: straggler ({dt:.2f}s vs median "
+                        f"{self.straggler.median():.2f}s)")
+                step += 1
+                if self.heartbeat:
+                    self.heartbeat.payload = {"step": step}
+                if step % self.ckpt_every == 0:
+                    self.manager.save_async(state, step)
+                if step % log_every == 0:
+                    loss = metrics.get("loss")
+                    log(f"[train] step {step} loss {float(loss):.4f} ({dt:.2f}s)"
+                        if loss is not None else f"[train] step {step} ({dt:.2f}s)")
+            except (KeyboardInterrupt, SystemExit):
+                raise
+            except Exception as e:  # noqa: BLE001 — node-failure surrogate
+                restarts += 1
+                log(f"[fault] step {step} failed ({type(e).__name__}: {e}); "
+                    f"restart {restarts}/{self.max_retries} from checkpoint")
+                if restarts > self.max_retries:
+                    raise
+                state, step = self._restore_or_init()
+        self.manager.wait()
+        self.manager.save(state, step)
+        return LoopResult(step, restarts, False, state)
+
+    def _restore_or_init(self) -> tuple[Any, int]:
+        import jax
+
+        fresh = self.make_state()
+        abstract = jax.tree.map(lambda l: l, fresh)
+        restored, step = self.manager.restore_latest(abstract)
+        if restored is None:
+            return fresh, 0
+        if self.remesh is not None:
+            restored = self.remesh(restored)
+        return restored, int(step)

@@ -1,0 +1,5 @@
+"""Training/serving step functions (jit/pjit targets)."""
+from .steps import TrainState, loss_fn, make_serve_step, make_train_step, make_prefill_step
+
+__all__ = ["TrainState", "loss_fn", "make_train_step", "make_serve_step",
+           "make_prefill_step"]

@@ -1,0 +1,19 @@
+"""Shared pytest config: fast hypothesis profile, CPU-only JAX, 1 device.
+
+NOTE: XLA_FLAGS multi-device forcing is intentionally NOT set here — only
+launch/dryrun.py uses 512 placeholder devices (see system design). Smoke
+tests and benches must see the single real CPU device.
+"""
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "fast",
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+settings.load_profile("fast")

@@ -1,0 +1,100 @@
+"""End-to-end multiplier tests: exactness, approximation trends, Fig. 5 usage."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import amrmul, mrsd
+
+
+@pytest.fixture(scope="module")
+def exact2():
+    return amrmul.AMRMultiplier(2, border=None)
+
+
+class TestExactMultiplier:
+    @settings(max_examples=50, deadline=None)
+    @given(st.integers(-272, 255), st.integers(-272, 255))
+    def test_exact_2digit_values(self, x, y):
+        m = amrmul.exact_multiplier(2)
+        prod = m.multiply_values(np.array([x]), np.array([y]))
+        assert prod[0] == float(x * y)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 5), st.data())
+    def test_exact_any_width_random_digits(self, n, data):
+        m = amrmul.exact_multiplier(n)
+        digs = st.lists(st.integers(-16, 15), min_size=n, max_size=n)
+        xd = np.array([data.draw(digs)])
+        yd = np.array([data.draw(digs)])
+        lo, hi = m.multiply_digits_split(xd, yd)
+        got = int(lo[0]) + (int(hi[0]) << 32)
+        assert got == mrsd.decode_int(xd[0]) * mrsd.decode_int(yd[0])
+
+    def test_exact_8digit_batch(self):
+        m = amrmul.exact_multiplier(8)
+        rng = np.random.default_rng(3)
+        xd = mrsd.random_digits(rng, 8, 64)
+        yd = mrsd.random_digits(rng, 8, 64)
+        lo, hi = m.multiply_digits_split(xd, yd)
+        for i in range(64):
+            expect = mrsd.decode_int(xd[i]) * mrsd.decode_int(yd[i])
+            assert int(lo[i]) + (int(hi[i]) << 32) == expect
+
+    def test_no_approx_cells_in_exact_design(self):
+        m = amrmul.exact_multiplier(4)
+        assert all(k in ("FA", "HA") for k in m.cell_counts)
+
+
+class TestApproximateMultiplier:
+    def test_monotonic_mared_in_border(self):
+        """Table I: widening the approximate part degrades accuracy."""
+        mareds = []
+        for b in (6, 8, 10):
+            m = amrmul.AMRMultiplier(2, border=b)
+            mareds.append(m.monte_carlo(20000, seed=7)["mared"])
+        assert mareds[0] < mareds[1] < mareds[2]
+
+    def test_wider_multiplier_more_accurate(self):
+        """Table I discussion: more rows -> better compensation opportunity.
+
+        Compare at equivalent relative border position (b/columns)."""
+        m2 = amrmul.AMRMultiplier(2, border=8).monte_carlo(20000, seed=1)
+        m4 = amrmul.AMRMultiplier(4, border=16).monte_carlo(20000, seed=1)
+        assert m4["mared"] < m2["mared"]
+
+    def test_error_distribution_near_zero_mean(self):
+        """Fig. 6: relative error distribution is ~Gaussian with mu ~= 0:
+        |MRED| << MARED."""
+        m = amrmul.AMRMultiplier(2, border=8)
+        r = m.monte_carlo(50000, seed=2)
+        assert abs(r["mred"]) < 0.3 * r["mared"]
+
+    def test_exact_region_untouched(self):
+        """Products with no bits below the border are exact.
+
+        Single-digit operands only occupy low columns — instead check that a
+        border beyond the last column reproduces the exact multiplier."""
+        m = amrmul.AMRMultiplier(2, border=0)  # approximate part empty
+        rng = np.random.default_rng(0)
+        xd = mrsd.random_digits(rng, 2, 512)
+        yd = mrsd.random_digits(rng, 2, 512)
+        lo, hi = m.multiply_digits_split(xd, yd)
+        elo, ehi = amrmul.exact_multiplier(2).multiply_digits_split(xd, yd)
+        # border 0 means only column 0 may host approximate cells; column 0
+        # never has 3+ bits beyond stage 1 in practice — tolerate tiny error
+        ed = (hi - ehi).astype(np.float64) * 2**32 + (lo - elo)
+        assert np.abs(ed).max() <= 2.0
+
+    def test_fig5_fa_pp_dominant(self):
+        """Fig. 5: FA_PP is the most-used approximate cell."""
+        m = amrmul.AMRMultiplier(4, border=18)
+        usage = m.cell_usage_percent()
+        approx = {k: v for k, v in usage.items() if k != "FA"}
+        assert max(approx, key=approx.get) == "FA_PP"
+
+    def test_schedule_deterministic(self):
+        a = amrmul.AMRMultiplier(2, border=8)
+        b = amrmul.AMRMultiplier(2, border=8)
+        assert a.cell_counts == b.cell_counts
+        assert a.schedule.expected_error == b.schedule.expected_error

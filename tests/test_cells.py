@@ -1,0 +1,82 @@
+"""Tests for exact/approximate reduction cells (paper §III.A, Fig. 2)."""
+import numpy as np
+import pytest
+
+from repro.core.cells import (
+    CELLS, PAPER_AVG_ERR, APPROX_BY_NEG, logic_complexity, output_polarity,
+)
+
+_IN3 = [(x, y, z) for x in (0, 1) for y in (0, 1) for z in (0, 1)]
+
+
+class TestExactCells:
+    def test_fa_exact(self):
+        c = CELLS["FA"]
+        for m, (x, y, z) in enumerate(_IN3):
+            assert 2 * c.carry_table[m] + c.sum_table[m] == x + y + z
+
+    def test_ha_exact(self):
+        c = CELLS["HA"]
+        for m, (x, y) in enumerate([(0, 0), (0, 1), (1, 0), (1, 1)]):
+            assert 2 * c.carry_table[m] + c.sum_table[m] == x + y
+
+
+class TestApproxCells:
+    @pytest.mark.parametrize("name,err", sorted(PAPER_AVG_ERR.items()))
+    def test_paper_average_errors(self, name, err):
+        """The published signed mean errors hold exactly (paper §III.A)."""
+        assert CELLS[name].avg_err == pytest.approx(err)
+
+    @pytest.mark.parametrize("name", sorted(PAPER_AVG_ERR))
+    def test_simpler_than_exact(self, name):
+        """Approximate cells are simplifications of the exact FA."""
+        def lits(cell):
+            sk = sum(b << i for i, b in enumerate(cell.sum_table))
+            ck = sum(b << i for i, b in enumerate(cell.carry_table))
+            return logic_complexity(sk) + logic_complexity(ck)
+        assert lits(CELLS[name]) < lits(CELLS["FA"])
+
+    def test_classes_cover_all_polarity_mixes(self):
+        assert sorted(APPROX_BY_NEG) == [0, 1, 2, 3]
+        assert APPROX_BY_NEG[0] == ["FA_PP"]
+        assert len(APPROX_BY_NEG[1]) == 2 and len(APPROX_BY_NEG[2]) == 2
+        assert APPROX_BY_NEG[3] == ["FA_NN"]
+
+    def test_pn_np_variant_signs(self):
+        """Each 2-variant class has one positive and one negative cell
+        (the paper's compensation mechanism)."""
+        s1 = CELLS["FA_PN1"].avg_err
+        s2 = CELLS["FA_PN2"].avg_err
+        assert s1 > 0 > s2
+        s1 = CELLS["FA_NP1"].avg_err
+        s2 = CELLS["FA_NP2"].avg_err
+        assert s2 > 0 > s1
+
+
+class TestPolarity:
+    def test_output_polarity_table(self):
+        assert output_polarity(3, 0) == (False, False)
+        assert output_polarity(3, 1) == (True, False)
+        assert output_polarity(3, 2) == (False, True)
+        assert output_polarity(3, 3) == (True, True)
+
+    def test_polarity_arithmetic_consistency(self):
+        """2c + s - neg_in == value of outputs under polarity interpretation.
+
+        For every input combo and negabit-input count, the exact FA output
+        interpreted with output_polarity reproduces the input value sum.
+        """
+        c = CELLS["FA"]
+        for k in range(4):
+            spol, cpol = output_polarity(3, k)
+            for m, (x, y, z) in enumerate(_IN3):
+                stored = [x, y, z]
+                # inputs: first (3-k) posibits then k negabits
+                vals = stored[: 3 - k] + [b - 1 for b in stored[3 - k:]]
+                s = c.sum_table[m] - (1 if spol else 0)
+                cr = c.carry_table[m] - (1 if cpol else 0)
+                # careful: table index must match the stored-bit order used
+                idx = (stored[0] << 2) | (stored[1] << 1) | stored[2]
+                s = c.sum_table[idx] - (1 if spol else 0)
+                cr = c.carry_table[idx] - (1 if cpol else 0)
+                assert 2 * cr + s == sum(vals)

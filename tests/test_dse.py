@@ -1,0 +1,67 @@
+"""Branch-and-bound DSE tests (paper Fig. 3): optimality + bound admissibility."""
+from fractions import Fraction
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import dse
+
+
+class TestOptimality:
+    @settings(max_examples=60, deadline=None)
+    @given(
+        st.integers(min_value=0, max_value=12),
+        st.integers(min_value=0, max_value=6),
+        st.integers(min_value=-8, max_value=8),
+        st.booleans(),
+    )
+    def test_matches_brute_force(self, pos, neg, err4, exact_fa):
+        """Bounds never prune the optimum (paper: 'do not prevent ... best')."""
+        err_in = Fraction(err4, 4)
+        res = dse.assign_column(pos, neg, err_in, allow_exact_fa=exact_fa)
+        ref = dse.brute_force_column(pos, neg, err_in, allow_exact_fa=exact_fa)
+        assert abs(res.err) == ref
+
+    def test_consumption_accounting(self):
+        res = dse.assign_column(7, 4, 0)
+        used_p = sum(p for _, p, _ in res.cells)
+        used_n = sum(n for _, _, n in res.cells)
+        assert used_p <= 7 and used_n <= 4
+        assert len(res.cells) == (7 + 4) // 3
+
+    def test_zero_bits(self):
+        res = dse.assign_column(0, 0, Fraction(1, 2))
+        assert res.cells == [] and res.err == Fraction(1, 2)
+
+
+class TestCompensation:
+    def test_positive_error_compensated(self):
+        """With a positive running error the DSE picks negative-error cells."""
+        res = dse.assign_column(2, 1, Fraction(1, 2))
+        # one FA consuming 2 pos + 1 neg: FA_PN2 (-0.5) is the unique optimum
+        assert res.cells == [("FA_PN2", 2, 1)]
+        assert res.err == 0
+
+    def test_negative_error_compensated(self):
+        res = dse.assign_column(1, 2, Fraction(-1, 2))
+        assert res.cells == [("FA_NP2", 1, 2)]
+        assert res.err == 0
+
+    def test_all_posibits_forced(self):
+        """Only posibits -> all FA_PP (+0.25 each), error fully determined."""
+        res = dse.assign_column(9, 0, 0)
+        assert all(c[0] == "FA_PP" for c in res.cells)
+        assert res.err == Fraction(3, 4)
+
+    def test_exact_fa_used_when_it_wins(self):
+        """Border column: exact FA gives 0 error when approximates cannot."""
+        res = dse.assign_column(3, 0, 0, allow_exact_fa=True)
+        assert res.cells == [("FA", 3, 0)]
+        assert res.err == 0
+
+    def test_pruning_happens(self):
+        """B&B visits far fewer nodes than brute force on a tall column."""
+        res = dse.assign_column(24, 6, 0)
+        # brute force would be ~6^10 ~ 6e7 nodes; bounded search must be tiny
+        assert res.nodes < 50_000

@@ -1,0 +1,112 @@
+"""Pallas kernel tests: shape/dtype sweeps vs pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lut as lut_lib
+from repro.kernels.amr_matmul.kernel import amr_matmul_int8
+from repro.kernels.amr_matmul.ops import amr_matmul, lut_factors
+from repro.kernels.amr_matmul.ref import ref_bitexact_int8, ref_lowrank_int8
+from repro.kernels.ssd_scan.kernel import ssd_scan
+from repro.kernels.ssd_scan.ref import ref_ssd
+
+
+class TestAMRMatmulKernel:
+    @pytest.mark.parametrize("m,n,k,bm,bn,bk", [
+        (128, 128, 128, 128, 128, 128),
+        (256, 128, 256, 128, 128, 128),
+        (128, 256, 384, 128, 128, 128),
+        (256, 256, 256, 128, 256, 64),
+    ])
+    def test_matches_ref_lowrank(self, m, n, k, bm, bn, bk):
+        rng = np.random.default_rng(m + n + k)
+        a = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
+        b = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
+        u, v = lut_factors(border=8, rank=8)
+        got = amr_matmul_int8(a, b, u, v, bm=bm, bn=bn, bk=bk, interpret=True)
+        want = ref_lowrank_int8(a, b, u, v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2.0)
+
+    @pytest.mark.parametrize("rank", [2, 16])
+    def test_rank_sweep(self, rank):
+        rng = np.random.default_rng(rank)
+        a = jnp.asarray(rng.integers(-128, 128, (128, 128)), jnp.int8)
+        b = jnp.asarray(rng.integers(-128, 128, (128, 128)), jnp.int8)
+        u, v = lut_factors(border=8, rank=rank)
+        got = amr_matmul_int8(a, b, u, v, interpret=True)
+        want = ref_lowrank_int8(a, b, u, v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2.0)
+
+    def test_rank256_bitexact(self):
+        """Full-rank kernel == bit-accurate AMR-MUL LUT accumulation."""
+        rng = np.random.default_rng(0)
+        a = jnp.asarray(rng.integers(-128, 128, (128, 128)), jnp.int8)
+        b = jnp.asarray(rng.integers(-128, 128, (128, 128)), jnp.int8)
+        u, v = lut_factors(border=8, rank=256)
+        got = np.asarray(amr_matmul_int8(a, b, u, v, interpret=True))
+        want = ref_bitexact_int8(np.asarray(a), np.asarray(b), border=8)
+        # fp32 accumulation of ~1e4-magnitude products over K=128: tiny rounding
+        np.testing.assert_allclose(got, want.astype(np.float64), rtol=1e-5, atol=8.0)
+
+    def test_float_wrapper(self):
+        rng = np.random.default_rng(1)
+        a = jnp.asarray(rng.normal(size=(128, 128)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(128, 128)), jnp.float32)
+        out = amr_matmul(a, b, border=8, rank=8, interpret=True)
+        exact = a @ b
+        rel = np.abs(np.asarray(out - exact)) / (np.abs(np.asarray(exact)) + 1e-2)
+        assert np.median(rel) < 0.25  # border-8 approximate semantics
+
+    def test_exact_border_is_exact_quantized(self):
+        """border=None factors encode E=0: kernel == plain int8 matmul."""
+        rng = np.random.default_rng(2)
+        a = jnp.asarray(rng.integers(-128, 128, (128, 128)), jnp.int8)
+        b = jnp.asarray(rng.integers(-128, 128, (128, 128)), jnp.int8)
+        u, v = lut_factors(border=None, rank=8)
+        got = amr_matmul_int8(a, b, u, v, interpret=True)
+        want = a.astype(jnp.float32) @ b.astype(jnp.float32)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1.0)
+
+
+class TestSSDKernel:
+    @pytest.mark.parametrize("B,S,H,P,N,chunk", [
+        (1, 128, 2, 64, 64, 64),
+        (2, 256, 4, 32, 16, 128),
+        (1, 512, 1, 64, 128, 256),
+        (2, 128, 8, 16, 32, 32),
+    ])
+    def test_matches_ref(self, B, S, H, P, N, chunk):
+        rng = np.random.default_rng(B * S + H)
+        x = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
+        dt = jnp.asarray(rng.uniform(0.01, 0.2, (B, S, H)), jnp.float32)
+        a_log = jnp.asarray(rng.uniform(0.0, 1.5, (H,)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(B, S, H, N)), jnp.float32)
+        c = jnp.asarray(rng.normal(size=(B, S, H, N)), jnp.float32)
+        got = ssd_scan(x, dt, a_log, b, c, chunk, interpret=True)
+        want = ref_ssd(x, dt, a_log, b, c, chunk)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+    def test_dtype_bf16_inputs(self):
+        rng = np.random.default_rng(9)
+        B, S, H, P, N, chunk = 1, 128, 2, 32, 32, 64
+        x = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.bfloat16)
+        dt = jnp.asarray(rng.uniform(0.01, 0.2, (B, S, H)), jnp.float32)
+        a_log = jnp.asarray(rng.uniform(0.0, 1.5, (H,)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(B, S, H, N)), jnp.bfloat16)
+        c = jnp.asarray(rng.normal(size=(B, S, H, N)), jnp.bfloat16)
+        got = ssd_scan(x, dt, a_log, b, c, chunk, interpret=True)
+        want = ref_ssd(x.astype(jnp.float32), dt, a_log, b.astype(jnp.float32),
+                       c.astype(jnp.float32), chunk)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0.05, atol=0.05)
+
+    def test_state_carries_across_chunks(self):
+        """A single impulse at t=0 must influence outputs in later chunks."""
+        B, S, H, P, N, chunk = 1, 256, 1, 8, 8, 64
+        x = jnp.zeros((B, S, H, P)).at[0, 0, 0, :].set(1.0)
+        dt = jnp.full((B, S, H), 0.05, jnp.float32)
+        a_log = jnp.asarray([0.1], jnp.float32)
+        b = jnp.ones((B, S, H, N), jnp.float32)
+        c = jnp.ones((B, S, H, N), jnp.float32)
+        y = np.asarray(ssd_scan(x, dt, a_log, b, c, chunk, interpret=True))
+        assert np.abs(y[0, chunk + 5]).sum() > 0  # crossed the chunk boundary

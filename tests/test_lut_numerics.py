@@ -1,0 +1,103 @@
+"""LUT layer + numerics-policy tests (DESIGN.md L1/L2)."""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import lut  # noqa: E402
+from repro.numerics import AMRNumerics, approx_matmul, dequantize, quantize_int8  # noqa: E402
+from repro.numerics.approx_matmul import (  # noqa: E402
+    matmul_amr_lowrank, matmul_amr_lut,
+)
+
+
+class TestLUT:
+    def test_exact_border_lut_is_exact(self):
+        assert np.array_equal(lut.build_int8_lut(None), lut.exact_int8_table())
+
+    def test_lut_matches_bitaccurate_spot(self):
+        from repro.core.amrmul import AMRMultiplier
+        m = AMRMultiplier(2, border=8)
+        table = lut.build_int8_lut(8)
+        rng = np.random.default_rng(0)
+        a = rng.integers(-128, 128, 100)
+        b = rng.integers(-128, 128, 100)
+        want = m.multiply_values(a, b)
+        got = table[a + 128, b + 128]
+        np.testing.assert_array_equal(got, want.astype(np.int64))
+
+    def test_rank256_exact(self):
+        f = lut.lowrank_factor(8, 256)
+        assert f.residual_fro < 1e-6  # float32 factors
+        err = lut.build_int8_lut(8).astype(np.float64) - lut.exact_int8_table()
+        np.testing.assert_allclose(f.reconstruct(), err, atol=1e-2)
+
+    def test_residual_monotone_in_rank(self):
+        r = [lut.lowrank_factor(8, k).residual_fro for k in (4, 16, 64)]
+        assert r[0] > r[1] > r[2]
+
+
+class TestQuant:
+    def test_roundtrip_small_error(self):
+        x = jnp.linspace(-3.0, 3.0, 64).reshape(8, 8)
+        q, s = quantize_int8(x)
+        back = dequantize(q, s)
+        assert float(jnp.abs(back - x).max()) < 3.0 / 127 + 1e-6
+
+    def test_per_axis_scales(self):
+        x = jnp.array([[1.0, 100.0], [0.01, 1.0]])
+        q, s = quantize_int8(x, axis=0)
+        assert s.shape == (1, 2)
+
+
+class TestApproxMatmul:
+    def setup_method(self):
+        k = jax.random.PRNGKey(0)
+        self.a = jax.random.normal(k, (4, 16), dtype=jnp.float32)
+        self.b = jax.random.normal(jax.random.PRNGKey(1), (16, 8), dtype=jnp.float32)
+
+    def test_exact_mode(self):
+        out = approx_matmul(self.a, self.b, AMRNumerics("exact"))
+        np.testing.assert_allclose(out, self.a @ self.b, rtol=1e-5)
+
+    def test_lut_mode_close_to_exact(self):
+        out = approx_matmul(self.a, self.b, AMRNumerics("amr_lut", border=6))
+        rel = np.abs(np.asarray(out - self.a @ self.b)) / (np.abs(np.asarray(self.a @ self.b)) + 1e-3)
+        assert np.median(rel) < 0.2
+
+    def test_lowrank_rank256_matches_lut(self):
+        """rank-256 low-rank ~= bit-exact LUT path.
+
+        The jnp training path stores error lanes in bf16 (§Perf cell P i3),
+        so agreement is to bf16 precision of the *correction term*; the
+        Pallas kernel keeps f32 lanes and stays bit-exact at rank 256
+        (tests/test_kernels.py::test_rank256_bitexact)."""
+        lut_out = np.asarray(matmul_amr_lut(self.a, self.b, border=8))
+        lr_out = np.asarray(matmul_amr_lowrank(self.a, self.b, border=8, rank=256))
+        scale = np.abs(lut_out).mean() + 1e-6
+        assert np.abs(lr_out - lut_out).mean() / scale < 0.02
+
+    def test_lowrank_fidelity_improves_with_rank(self):
+        lut_out = np.asarray(matmul_amr_lut(self.a, self.b, border=8))
+        errs = []
+        for r in (4, 32, 128):
+            lr = np.asarray(matmul_amr_lowrank(self.a, self.b, border=8, rank=r))
+            errs.append(np.abs(lr - lut_out).mean())
+        assert errs[0] > errs[2]
+
+    def test_noise_mode_runs_and_unbiased_scale(self):
+        out = approx_matmul(self.a, self.b, AMRNumerics("amr_noise", border=8),
+                            key=jax.random.PRNGKey(7))
+        assert out.shape == (4, 8)
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_batched_lhs(self):
+        a3 = jnp.stack([self.a, self.a * 0.5])
+        out = approx_matmul(a3, self.b, AMRNumerics("amr_lowrank", border=8, rank=8))
+        assert out.shape == (2, 4, 8)
+
+    def test_jit_compatible(self):
+        f = jax.jit(lambda a, b: approx_matmul(a, b, AMRNumerics("amr_lowrank", border=8, rank=8)))
+        out = f(self.a, self.b)
+        assert out.shape == (4, 8)

@@ -1,0 +1,64 @@
+"""Property + unit tests for the MRSD number system."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import mrsd
+
+
+class TestEncodeDecode:
+    @given(st.integers(min_value=-272, max_value=255))
+    def test_roundtrip_2digit(self, x):
+        d = mrsd.encode(x, 2)
+        assert mrsd.decode_int(d) == x
+        assert np.all(d >= mrsd.DIGIT_MIN) and np.all(d <= mrsd.DIGIT_MAX)
+
+    @given(st.integers(min_value=1, max_value=6), st.data())
+    def test_roundtrip_any_width(self, n, data):
+        x = data.draw(st.integers(mrsd.min_value(n), mrsd.max_value(n)))
+        assert mrsd.decode_int(mrsd.encode(x, n)) == x
+
+    def test_range_matches_paper(self):
+        # paper §IV.B: 2-digit MRSD dynamic range is [-272, 255]
+        assert mrsd.min_value(2) == -272
+        assert mrsd.max_value(2) == 255
+
+    def test_out_of_range_raises(self):
+        with pytest.raises(ValueError):
+            mrsd.encode(256, 2)
+        with pytest.raises(ValueError):
+            mrsd.encode(-273, 2)
+
+    def test_vectorized_encode(self):
+        xs = np.arange(-272, 256)
+        d = mrsd.encode(xs, 2)
+        vals = mrsd.decode(d)
+        np.testing.assert_array_equal(vals, xs.astype(np.float64))
+
+
+class TestBits:
+    @given(st.integers(min_value=-16, max_value=15))
+    def test_single_digit_bits(self, v):
+        pos, neg = mrsd.digits_to_bits(np.array([v]))
+        # value = sum posibits*2^i + (stored_negabit - 1)*16
+        val = sum(int(pos[i]) << i for i in range(4)) + (int(neg[0]) - 1) * 16
+        assert val == v
+
+    @given(st.lists(st.integers(-16, 15), min_size=1, max_size=8))
+    def test_bits_value_matches_decode(self, digits):
+        d = np.array(digits)
+        pos, neg = mrsd.digits_to_bits(d)
+        assert mrsd.bits_value(pos, neg) == pytest.approx(float(mrsd.decode_int(d)))
+
+    @given(st.lists(st.integers(-16, 15), min_size=1, max_size=8))
+    def test_bits_digits_roundtrip(self, digits):
+        d = np.array(digits)
+        pos, neg = mrsd.digits_to_bits(d)
+        np.testing.assert_array_equal(mrsd.bits_to_digits(pos, neg), d)
+
+    def test_batch_shapes(self):
+        rng = np.random.default_rng(0)
+        d = mrsd.random_digits(rng, 4, 10)
+        pos, neg = mrsd.digits_to_bits(d)
+        assert pos.shape == (10, 16) and neg.shape == (10, 4)

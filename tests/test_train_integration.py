@@ -1,0 +1,91 @@
+"""End-to-end integration: real launcher path on a tiny model (CPU).
+
+Covers: loss decreases on learnable synthetic data; checkpoint resume
+continues mid-stream; AMR numerics trains without divergence.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.data import SyntheticLM
+from repro.numerics import AMRNumerics
+from repro.runtime import FaultTolerantLoop
+from repro.train.steps import make_train_state, make_train_step
+
+TINY = ModelConfig(
+    name="tiny", family="dense", n_layers=2, d_model=64, n_heads=4,
+    n_kv_heads=4, head_dim=16, d_ff=128, vocab=128, mlp_act="swiglu",
+    tie_embeddings=True, remat="none")
+
+
+def _train(cfg, steps, batch=8, seq=32, seed=0):
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=seq, batch=batch, seed=seed,
+                       noise=0.02)
+    state = make_train_state(cfg, jax.random.PRNGKey(seed))
+    step = jax.jit(make_train_step(cfg, peak_lr=5e-3, warmup=5, total_steps=steps),
+                   donate_argnums=(0,))
+    losses = []
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+        state, m = step(state, b)
+        losses.append(float(m["loss"]))
+    return losses
+
+
+class TestTraining:
+    def test_loss_decreases(self):
+        losses = _train(TINY, steps=30)
+        assert losses[-1] < losses[0] - 0.5, losses[::6]
+
+    def test_amr_numerics_trains(self):
+        cfg = dataclasses.replace(
+            TINY, numerics=AMRNumerics("amr_lowrank", border=6, rank=8))
+        losses = _train(cfg, steps=30)
+        assert np.isfinite(losses).all()
+        assert losses[-1] < losses[0] - 0.3, losses[::6]
+
+    def test_microbatched_matches_unbatched_shape(self):
+        data = SyntheticLM(vocab=TINY.vocab, seq_len=32, batch=8, seed=0)
+        b = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+        s1 = make_train_state(TINY, jax.random.PRNGKey(0))
+        s2 = make_train_state(TINY, jax.random.PRNGKey(0))
+        st1 = jax.jit(make_train_step(TINY))
+        st2 = jax.jit(make_train_step(TINY, microbatch=4))
+        (n1, m1) = st1(s1, b)
+        (n2, m2) = st2(s2, b)
+        # same data, same init: microbatched loss == mean of micro losses and
+        # the resulting params should be very close (identical grads averaged)
+        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=0.05)
+        a1 = np.asarray(jax.tree.leaves(n1.params)[0], np.float32)
+        a2 = np.asarray(jax.tree.leaves(n2.params)[0], np.float32)
+        np.testing.assert_allclose(a1, a2, atol=5e-3)
+
+
+class TestResume:
+    def test_checkpoint_resume_continues(self, tmp_path):
+        data = SyntheticLM(vocab=TINY.vocab, seq_len=32, batch=4, seed=1)
+        step = jax.jit(make_train_step(TINY, peak_lr=1e-3, total_steps=100))
+
+        def make_state():
+            return make_train_state(TINY, jax.random.PRNGKey(1))
+
+        def step_fn(state, batch):
+            b = {k: jnp.asarray(v) for k, v in batch.items()}
+            return step(state, b)
+
+        loop1 = FaultTolerantLoop(ckpt_dir=tmp_path, make_state=make_state,
+                                  step_fn=step_fn, batch_at=data.batch_at,
+                                  ckpt_every=5)
+        r1 = loop1.run(10, log=lambda *_: None)
+        assert r1.steps_done == 10
+
+        loop2 = FaultTolerantLoop(ckpt_dir=tmp_path, make_state=make_state,
+                                  step_fn=step_fn, batch_at=data.batch_at,
+                                  ckpt_every=5)
+        r2 = loop2.run(15, log=lambda *_: None)
+        assert r2.steps_done == 15
+        assert int(r2.final_state.step) == 15  # resumed, not restarted
