@@ -2,6 +2,11 @@
 
 Contrast: AMR-MUL's signed-cell compensation vs a truncation multiplier's
 one-sided error (the paper's point about prior compressors' negative bias).
+
+The AMR replay runs on the selected backend (``engine="jax"`` compiles the
+schedule once and evaluates batched on-device; ``"numpy"`` is the host
+reference).  On the jax backend an extra row reports the measured replay
+speedup over numpy at a >= 64K batch.
 """
 from __future__ import annotations
 
@@ -10,8 +15,10 @@ import time
 import numpy as np
 
 from repro.core import AMRMultiplier, exact_multiplier, relative_errors
-from repro.core import mrsd
+from repro.core import mrsd, ppgen, reduction
 from repro.core.baselines import trunc_mul
+
+SPEEDUP_BATCH = 65_536  # acceptance batch for the engine-vs-numpy timing row
 
 
 def _moments(re: np.ndarray) -> dict:
@@ -22,15 +29,40 @@ def _moments(re: np.ndarray) -> dict:
             "within_1sigma": float((np.abs(z) < 1).mean())}
 
 
-def run(quick: bool = False) -> list[str]:
+def _time_backends(m: AMRMultiplier, batch: int, repeats: int = 3) -> tuple[float, float]:
+    """Best-of-N wall time (s) of the numpy vs jax replay on one batch."""
+    from repro.core import engine as engine_mod
+
+    rng = np.random.default_rng(42)
+    xd = mrsd.random_digits(rng, m.cfg.n_digits, batch)
+    yd = mrsd.random_digits(rng, m.cfg.n_digits, batch)
+    xb = ppgen.flatten_operand_bits(xd)
+    yb = ppgen.flatten_operand_bits(yd)
+    eng = engine_mod.get_engine(m.cfg.n_digits, m.cfg.border)
+    eng.evaluate_split(xb, yb)  # warm-up: compile outside the timed region
+    t_np = min(
+        _timed(lambda: reduction.evaluate_split(m.schedule, xb, yb))
+        for _ in range(repeats)
+    )
+    t_jax = min(_timed(lambda: eng.evaluate_split(xb, yb)) for _ in range(repeats))
+    return t_np, t_jax
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def run(quick: bool = False, engine: str = "jax") -> list[str]:
     n = 20_000 if quick else 100_000
     t0 = time.time()
     rng = np.random.default_rng(0)
     xd = mrsd.random_digits(rng, 2, n)
     yd = mrsd.random_digits(rng, 2, n)
-    m = AMRMultiplier(2, border=8)
+    m = AMRMultiplier(2, border=8, engine=engine)
     approx = m.multiply_digits(xd, yd)
-    exact = exact_multiplier(2).multiply_digits(xd, yd)
+    exact = exact_multiplier(2).multiply_digits(xd, yd, engine=engine)
     re_amr = relative_errors(approx, exact)
     re_amr = re_amr[np.abs(re_amr) < 1.0]  # paper plots the [-1, 1] window
     amr = _moments(re_amr)
@@ -45,10 +77,18 @@ def run(quick: bool = False) -> list[str]:
     trm = _moments(re_tr)
 
     us = (time.time() - t0) * 1e6
-    return [
-        f"fig6_amr_2d_b8,{us:.0f},mean={amr['mean']:+.3e};std={amr['std']:.3e};"
+    rows = [
+        f"fig6_amr_2d_b8[{engine}],{us:.0f},mean={amr['mean']:+.3e};std={amr['std']:.3e};"
         f"skew={amr['skew']:+.2f};exkurt={amr['exkurt']:+.2f};"
         f"within1sigma={amr['within_1sigma']:.2f}",
         f"fig6_trunc8_t4,{us:.0f},mean={trm['mean']:+.3e};std={trm['std']:.3e};"
         f"skew={trm['skew']:+.2f} (one-sided bias vs AMR's ~0 mean)",
     ]
+    if engine == "jax":
+        batch = SPEEDUP_BATCH // 4 if quick else SPEEDUP_BATCH
+        t_np, t_jax = _time_backends(m, batch)
+        rows.append(
+            f"fig6_engine_speedup_b{batch},{t_jax*1e6:.0f},"
+            f"numpy_ms={t_np*1e3:.1f};jax_ms={t_jax*1e3:.1f};"
+            f"speedup={t_np/t_jax:.1f}x")
+    return rows

@@ -3,10 +3,15 @@
 Prints ``name,us_per_call,derived`` CSV lines.
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only table1,...]
+                                          [--engine jax|numpy]
+
+``--engine`` selects the bit-accurate replay backend for modules that
+support it (table1/fig6): the compiled jax engine or the numpy host path.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 import traceback
@@ -30,6 +35,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--engine", choices=["jax", "numpy"], default="jax")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(MODULES)
 
@@ -38,7 +44,10 @@ def main() -> None:
     for name in names:
         t0 = time.time()
         try:
-            for row in MODULES[name].run(quick=args.quick):
+            kwargs = {"quick": args.quick}
+            if "engine" in inspect.signature(MODULES[name].run).parameters:
+                kwargs["engine"] = args.engine
+            for row in MODULES[name].run(**kwargs):
                 print(row)
         except Exception:  # noqa: BLE001
             failures += 1

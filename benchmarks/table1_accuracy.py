@@ -13,18 +13,18 @@ SAMPLES = {2: 50_000, 4: 100_000, 8: 50_000}
 SAMPLES_QUICK = {2: 20_000, 4: 20_000, 8: 5_000}
 
 
-def run(quick: bool = False) -> list[str]:
+def run(quick: bool = False, engine: str = "jax") -> list[str]:
     rows = []
     samples = SAMPLES_QUICK if quick else SAMPLES
     for digits, ref in TABLE1.items():
         for i, border in enumerate(ref["borders"]):
             t0 = time.time()
-            m = AMRMultiplier(digits, border=border)
+            m = AMRMultiplier(digits, border=border, engine=engine)
             r = m.monte_carlo(samples[digits], seed=0)
             us = (time.time() - t0) * 1e6
             ratio = r["mared"] / ref["mared"][i]
             rows.append(
-                f"table1_{digits}d_b{border},{us:.0f},"
+                f"table1_{digits}d_b{border}[{engine}],{us:.0f},"
                 f"mared={r['mared']:.3e};paper={ref['mared'][i]:.3e};"
                 f"ratio={ratio:.2f};mred={r['mred']:+.2e};nmed={r['nmed']:+.2e}")
     return rows

@@ -3,6 +3,7 @@
 Layers (DESIGN.md §2):
   L0 bit-accurate MRSD multiplier model — mrsd / cells / ppgen / reduction /
      dse / amrmul / metrics / energy / baselines
+  L0' compiled batched replay (jit + vmap, bit-exact vs L0) — engine
   L1 int8 LUT semantics + low-rank MXU factorization — lut
 (L2, the matmul numerics policy, lives in repro.numerics; TPU kernels in
 repro.kernels.)
@@ -11,11 +12,11 @@ from .amrmul import AMRMulConfig, AMRMultiplier, exact_multiplier
 from .cells import CELLS, PAPER_AVG_ERR
 from .dse import assign_column
 from .lut import build_int8_lut, error_stats, exact_int8_table, lowrank_factor
-from .metrics import ErrorAccumulator, relative_errors
+from .metrics import ErrorAccumulator, monte_carlo_metrics, relative_errors
 
 __all__ = [
     "AMRMulConfig", "AMRMultiplier", "exact_multiplier",
     "CELLS", "PAPER_AVG_ERR", "assign_column",
     "build_int8_lut", "exact_int8_table", "lowrank_factor", "error_stats",
-    "ErrorAccumulator", "relative_errors",
+    "ErrorAccumulator", "monte_carlo_metrics", "relative_errors",
 ]

@@ -1,8 +1,14 @@
 """AMR-MUL: the approximate maximally-redundant signed-digit multiplier.
 
-Facade over ppgen/reduction/dse: builds the static schedule once, then
-evaluates bit-accurately (vectorised numpy) and reports the paper's
-metrics, cell-usage breakdown (Fig. 5) and cost-model hooks (Table II).
+Facade over ppgen/reduction/dse: pulls the static schedule from the
+process-level cache, then evaluates bit-accurately on one of two backends
+and reports the paper's metrics, cell-usage breakdown (Fig. 5) and
+cost-model hooks (Table II).
+
+Backends (``engine=`` at construction or per call):
+  * ``"numpy"`` — host replay via ``reduction.evaluate_split``,
+  * ``"jax"``   — compiled batched replay via ``core.engine`` (jit + vmap),
+    bit-exact against the numpy path and much faster at large batch.
 """
 from __future__ import annotations
 
@@ -12,6 +18,8 @@ from functools import lru_cache
 import numpy as np
 
 from . import metrics, mrsd, ppgen, reduction
+
+ENGINES = ("numpy", "jax")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,30 +35,43 @@ class AMRMulConfig:
 class AMRMultiplier:
     """N x N-digit radix-16 MRSD multiplier with approximate border ``b``."""
 
-    def __init__(self, n_digits: int, border: int | None = None):
+    def __init__(self, n_digits: int, border: int | None = None, engine: str = "numpy"):
+        if engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
         self.cfg = AMRMulConfig(n_digits, border)
-        self.schedule = reduction.build_schedule(n_digits, border)
+        self.engine = engine
+        self.schedule = reduction.get_schedule(n_digits, border)
 
     # ------------------------------------------------------------------ eval
-    def multiply_digits(self, x_digits: np.ndarray, y_digits: np.ndarray) -> np.ndarray:
+    def multiply_digits(
+        self, x_digits: np.ndarray, y_digits: np.ndarray, engine: str | None = None
+    ) -> np.ndarray:
         """(batch, N) digit arrays -> (batch,) float64 product values."""
-        xb = ppgen.flatten_operand_bits(x_digits)
-        yb = ppgen.flatten_operand_bits(y_digits)
-        return reduction.evaluate(self.schedule, xb, yb)
+        return reduction.split_to_float(
+            *self.multiply_digits_split(x_digits, y_digits, engine=engine)
+        )
 
     def multiply_digits_split(
-        self, x_digits: np.ndarray, y_digits: np.ndarray
+        self, x_digits: np.ndarray, y_digits: np.ndarray, engine: str | None = None
     ) -> tuple[np.ndarray, np.ndarray]:
         """Exact split-integer products (lo, hi): value = lo + hi * 2**32."""
+        backend = engine or self.engine
         xb = ppgen.flatten_operand_bits(x_digits)
         yb = ppgen.flatten_operand_bits(y_digits)
+        if backend == "jax":
+            from . import engine as engine_mod  # lazy: numpy path stays jax-free
+
+            eng = engine_mod.get_engine(self.cfg.n_digits, self.cfg.border)
+            return eng.evaluate_split(xb, yb)
+        if backend != "numpy":
+            raise ValueError(f"engine must be one of {ENGINES}, got {backend!r}")
         return reduction.evaluate_split(self.schedule, xb, yb)
 
-    def multiply_values(self, x, y) -> np.ndarray:
+    def multiply_values(self, x, y, engine: str | None = None) -> np.ndarray:
         """Integer values -> product values (canonical MRSD encoding)."""
         xd = mrsd.encode(np.asarray(x), self.cfg.n_digits)
         yd = mrsd.encode(np.asarray(y), self.cfg.n_digits)
-        return self.multiply_digits(xd, yd)
+        return self.multiply_digits(xd, yd, engine=engine)
 
     # ----------------------------------------------------------------- stats
     @property
@@ -78,27 +99,18 @@ class AMRMultiplier:
         seed: int = 0,
         chunk: int = 32768,
         exact_ref: "AMRMultiplier | None" = None,
+        engine: str | None = None,
     ) -> dict[str, float]:
         """Paper §IV accuracy protocol: uniform random digit-vector inputs.
 
         Returns MRED/MARED/NMED (signed means as in Table I) plus aux stats.
         """
-        rng = np.random.default_rng(seed)
-        n = self.cfg.n_digits
         if exact_ref is None:
-            exact_ref = _exact_cached(n)
-        max_abs = (16.0 ** n * (16.0 / 15.0)) ** 2  # |min value|^2 bound
-        acc = metrics.ErrorAccumulator(max_abs=max_abs)
-        remaining = n_samples
-        while remaining > 0:
-            b = min(chunk, remaining)
-            xd = mrsd.random_digits(rng, n, b)
-            yd = mrsd.random_digits(rng, n, b)
-            alo, ahi = self.multiply_digits_split(xd, yd)
-            elo, ehi = exact_ref.multiply_digits_split(xd, yd)
-            acc.update_split(alo, ahi, elo, ehi)
-            remaining -= b
-        return acc.result()
+            exact_ref = _exact_cached(self.cfg.n_digits)
+        return metrics.monte_carlo_metrics(
+            self, exact_ref, n_samples,
+            seed=seed, chunk=chunk, engine=engine or self.engine,
+        )
 
 
 @lru_cache(maxsize=8)

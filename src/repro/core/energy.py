@@ -26,7 +26,7 @@ import dataclasses
 import numpy as np
 
 from .amrmul import AMRMultiplier
-from .cells import CELLS, FA_CARRY_EXACT, FA_SUM_EXACT, logic_complexity
+from .cells import CELLS, logic_complexity
 
 
 def _cell_literals(name: str) -> int:

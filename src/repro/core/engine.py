@@ -1,0 +1,255 @@
+"""JAX schedule-compilation engine: batched bit-accurate AMR-MUL replay.
+
+``reduction.evaluate_split`` replays the Wallace schedule group-by-group in
+numpy on the host — fine for unit tests, but the bottleneck for the paper's
+Monte-Carlo accuracy protocol (Table I / Fig. 6) and for the 256x256 int8
+error table that feeds the Pallas low-rank kernel.  This module *compiles*
+a ``reduction.Schedule`` once per ``(n_digits, border)`` design point into
+dense per-stage tensors and replays it under ``jax.jit`` in **bit-sliced**
+form: every wire holds a uint32 word whose 32 bits are 32 independent batch
+samples, so
+
+  * a reduction cell is evaluated as pure bitwise logic — the 8-entry
+    sum/carry truth table of each cell type becomes 8 full-word minterm
+    masks, and the whole stage is AND/OR/NOT on ``(n_cells, words)`` lanes
+    (no per-sample LUT gathers); HA (2-input) tables are tiled twice so the
+    padded third input is a don't-care,
+  * wire routing is gather + concat over a wire-major ``(n_wires, words)``
+    value array: new wires are emitted in allocation order through a static
+    permutation, so the replay never scatters,
+  * exactness is preserved without ``jax_enable_x64``: final bits unpack
+    into 16-bit position limbs accumulated in int32 inside the jitted
+    function and combined into the canonical ``(lo, hi)`` int64 split
+    (value = lo + hi * 2**32) on the host.
+
+``get_engine(n_digits, border)`` is the process-level cache: schedules
+(``reduction.get_schedule``) and compiled artifacts are built at most once
+per design point per process, shared across benchmarks, the LUT builder
+and the DSE scripts.  Parity with the numpy path is asserted bit-for-bit
+in tests/test_engine.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+from functools import lru_cache
+
+import numpy as np
+
+from . import ppgen, reduction
+from .cells import CELLS
+
+# Stable cell-type order; per-type truth tables are padded/tiled to 8 entries.
+CELL_ORDER: tuple[str, ...] = tuple(sorted(CELLS))
+_CELL_INDEX = {name: i for i, name in enumerate(CELL_ORDER)}
+
+_LIMB_BITS = 16   # int32-safe: max limb weight 2**15, few hundred bits per limb
+_LANE_BITS = 32   # batch samples per uint32 word
+
+
+def _type_tables() -> tuple[np.ndarray, np.ndarray]:
+    """(n_cell_types, 8) sum/carry truth tables over stored input bits."""
+    sums = np.zeros((len(CELL_ORDER), 8), dtype=np.uint32)
+    carries = np.zeros_like(sums)
+    for name, t in _CELL_INDEX.items():
+        cell = CELLS[name]
+        s, c = np.asarray(cell.sum_table), np.asarray(cell.carry_table)
+        if cell.n_in == 2:  # tile: the padded high input bit is a don't-care
+            s, c = np.tile(s, 2), np.tile(c, 2)
+        sums[t] = s
+        carries[t] = c
+    return sums, carries
+
+
+# PP gate truth tables over (x, y), index x*2 + y (ppgen gate-type order).
+_GATE_TABLES = np.array(
+    [[0, 0, 0, 1],   # G_AND    x & y
+     [1, 1, 0, 1],   # G_ORN_X  !x | y
+     [1, 0, 1, 1],   # G_ORN_Y  !y | x
+     [1, 0, 0, 0]],  # G_NOR
+    dtype=np.uint32,
+)
+
+_FULL = np.uint32(0xFFFFFFFF)
+
+
+@dataclasses.dataclass(frozen=True)
+class StageTensors:
+    """One reduction stage, densely packed (all cell groups concatenated)."""
+
+    in3: np.ndarray        # (n_cells, 3) int32 wire ids; 2-in cells padded with 0
+    sum_masks: np.ndarray  # (n_cells, 8) uint32 minterm masks (0 or all-ones)
+    carry_masks: np.ndarray
+    perm: np.ndarray       # (2 * n_cells,) int32: id-order slot -> concat slot
+
+
+def _compile_stage(stage, stage_start: int) -> StageTensors:
+    type_sum, type_carry = _type_tables()
+    in3_rows: list[list[int]] = []
+    cell_type: list[int] = []
+    sum_ids: list[int] = []
+    carry_ids: list[int] = []
+    for g in stage:
+        t = _CELL_INDEX[g.name]
+        for row, sid, cid in zip(g.in_ids, g.sum_ids, g.carry_ids):
+            ins = [int(b) for b in row]
+            if len(ins) == 2:  # pad slot reads wire 0; tiled table ignores it
+                ins = [0] + ins
+            in3_rows.append(ins)
+            cell_type.append(t)
+            sum_ids.append(int(sid))
+            carry_ids.append(int(cid))
+    n_cells = len(in3_rows)
+    # New wires of a stage are allocated contiguously during scheduling; the
+    # permutation rebuilds allocation order from [all sums | all carries].
+    if sorted(sum_ids + carry_ids) != list(range(stage_start, stage_start + 2 * n_cells)):
+        raise AssertionError("stage outputs are not a contiguous wire-id block")
+    perm = np.empty(2 * n_cells, dtype=np.int32)
+    for k, (sid, cid) in enumerate(zip(sum_ids, carry_ids)):
+        perm[sid - stage_start] = k
+        perm[cid - stage_start] = n_cells + k
+    t_idx = np.asarray(cell_type, dtype=np.int64)
+    return StageTensors(
+        in3=np.asarray(in3_rows, dtype=np.int32),
+        sum_masks=(type_sum[t_idx] * _FULL).astype(np.uint32),
+        carry_masks=(type_carry[t_idx] * _FULL).astype(np.uint32),
+        perm=perm,
+    )
+
+
+def _pack_lanes(bits: np.ndarray) -> np.ndarray:
+    """(batch, n_bits) {0,1} -> bit-sliced (n_bits, words) uint32.
+
+    Sample ``w * 32 + k`` lives in bit ``k`` of word ``w`` of each wire row.
+    The batch is zero-padded up to a whole number of 32-sample words.
+    """
+    bits = np.ascontiguousarray(bits.T, dtype=np.uint8)
+    pad = (-bits.shape[1]) % _LANE_BITS
+    if pad:
+        bits = np.pad(bits, ((0, 0), (0, pad)))
+    if sys.byteorder == "little":
+        packed = np.packbits(bits, axis=1, bitorder="little")
+        return np.ascontiguousarray(packed).view(np.uint32)
+    words = np.zeros((bits.shape[0], bits.shape[1] // _LANE_BITS), dtype=np.uint32)
+    for k in range(_LANE_BITS):  # big-endian fallback: explicit lane packing
+        words |= bits[:, k::_LANE_BITS].astype(np.uint32) << np.uint32(k)
+    return words
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledSchedule:
+    """A design point lowered to dense tensors + a jitted batched evaluator.
+
+    ``evaluate_split`` is bit-exact against ``reduction.evaluate_split``
+    (asserted by tests/test_engine.py across design points).
+    """
+
+    schedule: reduction.Schedule
+    n_limbs: int
+    _replay: object  # jit'd: (n_opbits, words) x2 uint32 -> (n_limbs, batch) i32
+
+    def evaluate_split(
+        self, xbits: np.ndarray, ybits: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """(batch, 5N) stored operand bits -> exact (lo, hi) int64 split."""
+        import jax.numpy as jnp
+
+        batch = xbits.shape[0]
+        limbs = np.asarray(
+            self._replay(jnp.asarray(_pack_lanes(xbits)), jnp.asarray(_pack_lanes(ybits)))
+        ).astype(np.int64)[:, :batch]
+        lo = limbs[0].copy()
+        if self.n_limbs > 1:
+            lo += limbs[1] * (1 << _LIMB_BITS)
+        hi = np.zeros_like(lo)
+        for limb in range(2, self.n_limbs):
+            hi += limbs[limb] * (1 << (_LIMB_BITS * (limb - 2)))
+        return lo, hi
+
+    def evaluate(self, xbits: np.ndarray, ybits: np.ndarray) -> np.ndarray:
+        """Float64 result value (exact only below ~2**53, as the numpy path)."""
+        return reduction.split_to_float(*self.evaluate_split(xbits, ybits))
+
+
+def compile_schedule(schedule: reduction.Schedule) -> CompiledSchedule:
+    """Lower a schedule to dense tensors and build its jitted evaluator."""
+    import jax
+    import jax.numpy as jnp
+
+    layout = schedule.layout
+    stages = []
+    n_wires = layout.n_pp
+    for stage in schedule.stages:
+        st = _compile_stage(stage, n_wires)
+        stages.append(st)
+        n_wires += st.perm.shape[0]
+    if n_wires != schedule.n_bits:
+        raise AssertionError("compiled wire count disagrees with schedule")
+
+    pos = schedule.final_positions
+    pol = schedule.bit_polarity[schedule.final_ids].astype(np.int64)
+    n_limbs = int(pos.max()) // _LIMB_BITS + 1
+    # weights[i, l] = 2**(pos_i mod 16) when bit i lands in limb l, else 0
+    weights_np = np.zeros((pos.shape[0], n_limbs), dtype=np.int32)
+    weights_np[np.arange(pos.shape[0]), pos // _LIMB_BITS] = 1 << (pos % _LIMB_BITS)
+    offsets_np = (pol[:, None] * weights_np).sum(0).astype(np.int32)
+
+    gate_masks = jnp.asarray((_GATE_TABLES[layout.gate] * _FULL).astype(np.uint32))
+    x_idx = jnp.asarray(layout.x_idx.astype(np.int32))
+    y_idx = jnp.asarray(layout.y_idx.astype(np.int32))
+    stage_consts = [
+        (jnp.asarray(st.in3), jnp.asarray(st.sum_masks),
+         jnp.asarray(st.carry_masks), jnp.asarray(st.perm))
+        for st in stages
+    ]
+    final_ids = jnp.asarray(schedule.final_ids.astype(np.int32))
+    weights = jnp.asarray(weights_np)
+    offsets = jnp.asarray(offsets_np)
+    lane_shifts = jnp.arange(_LANE_BITS, dtype=jnp.uint32)
+
+    def replay(xw, yw):
+        """Bit-sliced replay: rows are wires, uint32 words hold 32 samples."""
+        x = xw[x_idx]
+        y = yw[y_idx]
+        nx, ny = ~x, ~y
+        vals = ((gate_masks[:, 0, None] & (nx & ny))
+                | (gate_masks[:, 1, None] & (nx & y))
+                | (gate_masks[:, 2, None] & (x & ny))
+                | (gate_masks[:, 3, None] & (x & y)))
+        for in3, sum_masks, carry_masks, perm in stage_consts:
+            ins = vals[in3]  # (n_cells, 3, words)
+            a, b, c = ins[:, 0], ins[:, 1], ins[:, 2]
+            na, nb, nc = ~a, ~b, ~c
+            minterms = (na & nb & nc, na & nb & c, na & b & nc, na & b & c,
+                        a & nb & nc, a & nb & c, a & b & nc, a & b & c)
+            s_out = sum_masks[:, 0, None] & minterms[0]
+            c_out = carry_masks[:, 0, None] & minterms[0]
+            for k in range(1, 8):
+                s_out |= sum_masks[:, k, None] & minterms[k]
+                c_out |= carry_masks[:, k, None] & minterms[k]
+            vals = jnp.concatenate([vals, jnp.concatenate([s_out, c_out], 0)[perm]], 0)
+        stored = vals[final_ids]  # (n_final, words)
+        bits = ((stored[:, None, :] >> lane_shifts[None, :, None]) & 1).astype(jnp.int32)
+        limbs = jnp.einsum("fl,fsw->lws", weights, bits)  # (n_limbs, words, 32)
+        return limbs.reshape(n_limbs, -1) - offsets[:, None]
+
+    return CompiledSchedule(
+        schedule=schedule,
+        n_limbs=n_limbs,
+        _replay=jax.jit(replay),
+    )
+
+
+@lru_cache(maxsize=64)
+def get_engine(n_digits: int, border: int | None) -> CompiledSchedule:
+    """Process-level compiled-artifact cache, keyed on the design point."""
+    return compile_schedule(reduction.get_schedule(n_digits, border))
+
+
+def evaluate_digits_split(
+    n_digits: int, border: int | None, x_digits: np.ndarray, y_digits: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Convenience: digit arrays -> exact (lo, hi) via the cached engine."""
+    xb = ppgen.flatten_operand_bits(x_digits)
+    yb = ppgen.flatten_operand_bits(y_digits)
+    return get_engine(n_digits, border).evaluate_split(xb, yb)

@@ -17,16 +17,25 @@ from functools import lru_cache
 
 import numpy as np
 
-from . import mrsd
 from .amrmul import AMRMultiplier
 
 INT8_OFFSET = 128  # index = value + 128
 
 
+def build_int8_lut(border: int | None, engine: str = "jax") -> np.ndarray:
+    """(256, 256) int32: LUT[a+128, b+128] = AMR-MUL_2digit(a, b).
+
+    All 2^16 products are evaluated in one batched call; ``engine="jax"``
+    (default) replays the schedule through the compiled engine, bit-exact
+    against the ``"numpy"`` host path (tests/test_engine.py asserts parity).
+    """
+    # normalize to positional args so default/keyword calls share a cache key
+    return _build_int8_lut(border, engine)
+
+
 @lru_cache(maxsize=32)
-def build_int8_lut(border: int | None) -> np.ndarray:
-    """(256, 256) int32: LUT[a+128, b+128] = AMR-MUL_2digit(a, b)."""
-    m = AMRMultiplier(2, border=border)
+def _build_int8_lut(border: int | None, engine: str) -> np.ndarray:
+    m = AMRMultiplier(2, border=border, engine=engine)
     vals = np.arange(-128, 128, dtype=np.int64)
     a = np.repeat(vals, 256)
     b = np.tile(vals, 256)
@@ -49,14 +58,19 @@ class LowRankFactors:
     u: np.ndarray  # (256, r) float32
     v: np.ndarray  # (256, r) float32
     residual_fro: float  # ||E - UV'||_F / ||E||_F (0 when rank covers spectrum)
+    engine: str = "jax"  # provenance: backend that produced the source table
 
     def reconstruct(self) -> np.ndarray:
         return self.u @ self.v.T
 
 
+def lowrank_factor(border: int | None, rank: int, engine: str = "jax") -> LowRankFactors:
+    return _lowrank_factor(border, rank, engine)
+
+
 @lru_cache(maxsize=64)
-def lowrank_factor(border: int | None, rank: int) -> LowRankFactors:
-    lut = build_int8_lut(border).astype(np.float64)
+def _lowrank_factor(border: int | None, rank: int, engine: str) -> LowRankFactors:
+    lut = build_int8_lut(border, engine=engine).astype(np.float64)
     err = lut - exact_int8_table().astype(np.float64)
     U, s, Vt = np.linalg.svd(err, full_matrices=False)
     r = min(rank, 256)
@@ -65,12 +79,12 @@ def lowrank_factor(border: int | None, rank: int) -> LowRankFactors:
     v = (Vt[:r, :].T * sr).astype(np.float32)
     denom = float(np.linalg.norm(err)) or 1.0
     resid = float(np.linalg.norm(err - (u.astype(np.float64) @ v.T.astype(np.float64)))) / denom
-    return LowRankFactors(border, r, u, v, resid)
+    return LowRankFactors(border, r, u, v, resid, engine)
 
 
-def error_stats(border: int | None) -> dict[str, float]:
+def error_stats(border: int | None, engine: str = "jax") -> dict[str, float]:
     """Summary statistics of the int8 error table (feeds amr_noise mode)."""
-    lut = build_int8_lut(border).astype(np.float64)
+    lut = build_int8_lut(border, engine=engine).astype(np.float64)
     err = lut - exact_int8_table().astype(np.float64)
     return {
         "mean": float(err.mean()),

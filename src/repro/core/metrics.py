@@ -15,6 +15,8 @@ import dataclasses
 
 import numpy as np
 
+from . import mrsd
+
 
 @dataclasses.dataclass
 class ErrorAccumulator:
@@ -62,6 +64,37 @@ class ErrorAccumulator:
             "std_ed": float(np.sqrt(max(self.sum_ed2 / n - mean_ed**2, 0.0))),
             "n_samples": float(self.n),
         }
+
+
+def monte_carlo_metrics(
+    approx_mul,
+    exact_mul,
+    n_samples: int,
+    *,
+    seed: int = 0,
+    chunk: int = 32768,
+    engine: str = "numpy",
+) -> dict[str, float]:
+    """Streaming Monte-Carlo error metrics for one design point.
+
+    ``approx_mul``/``exact_mul`` are AMRMultiplier-likes; ``engine`` selects
+    the replay backend ("numpy" host replay or the jitted "jax" engine) —
+    both are bit-exact, so the metrics are backend-independent.
+    """
+    rng = np.random.default_rng(seed)
+    n = approx_mul.cfg.n_digits
+    max_abs = (16.0 ** n * (16.0 / 15.0)) ** 2  # |min value|^2 bound
+    acc = ErrorAccumulator(max_abs=max_abs)
+    remaining = n_samples
+    while remaining > 0:
+        b = min(chunk, remaining)
+        xd = mrsd.random_digits(rng, n, b)
+        yd = mrsd.random_digits(rng, n, b)
+        alo, ahi = approx_mul.multiply_digits_split(xd, yd, engine=engine)
+        elo, ehi = exact_mul.multiply_digits_split(xd, yd, engine=engine)
+        acc.update_split(alo, ahi, elo, ehi)
+        remaining -= b
+    return acc.result()
 
 
 def relative_errors(approx: np.ndarray, exact: np.ndarray) -> np.ndarray:

@@ -21,6 +21,7 @@ from __future__ import annotations
 import dataclasses
 from collections import defaultdict
 from fractions import Fraction
+from functools import lru_cache
 
 import numpy as np
 
@@ -178,6 +179,13 @@ def build_schedule(n_digits: int, border: int | None) -> Schedule:
         cell_counts=dict(cell_counts),
         dse_nodes=dse_nodes,
     )
+
+
+@lru_cache(maxsize=None)
+def get_schedule(n_digits: int, border: int | None) -> Schedule:
+    """Process-level schedule cache: build_schedule + DSE run once per design
+    point and are shared across multipliers, the jax engine and benchmarks."""
+    return build_schedule(n_digits, border)
 
 
 _SPLIT = 32  # result value = lo + hi * 2**_SPLIT, both exact int64

@@ -12,8 +12,13 @@ from repro.numerics.quant import quantize_int8
 from .kernel import amr_matmul_int8
 
 
-def lut_factors(border: int, rank: int) -> tuple[jnp.ndarray, jnp.ndarray]:
-    f = lut_lib.lowrank_factor(border, rank)
+def lut_factors(
+    border: int, rank: int, engine: str = "jax"
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Low-rank error factors for the kernel; the source 256x256 table is
+    built by the compiled schedule engine (``engine="jax"``, bit-exact vs the
+    numpy host replay — provenance recorded on the LowRankFactors)."""
+    f = lut_lib.lowrank_factor(border, rank, engine=engine)
     return jnp.asarray(f.u), jnp.asarray(f.v)
 
 

@@ -14,7 +14,7 @@ import numpy as np
 
 from repro.configs.registry import get_config, get_reduced_config
 from repro.launch.mesh import make_host_mesh
-from repro.models import decode_step, forward, init_cache, init_params
+from repro.models import init_params
 from repro.train.steps import make_serve_step
 
 

@@ -14,15 +14,12 @@ leaves with a leading ``n_repeat`` axis, scanned in lockstep with params.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.numerics import AMRNumerics
 from repro.parallel.constraints import pin
 
 from . import attention as attn
@@ -289,7 +286,8 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> Any:
     def one(kind):
         if kind == "ssm":
             return ssm_lib.SSMState.zeros(batch, cfg.d_model, cfg.ssm, dtype)
-        cap = min(capacity, cfg.sliding_window) if kind == "swa" and cfg.sliding_window else capacity
+        cap = (min(capacity, cfg.sliding_window)
+               if kind == "swa" and cfg.sliding_window else capacity)
         return attn.KVCache.zeros(batch, cap, cfg.n_kv_heads, cfg.head_dim, dtype)
 
     group = tuple(one(k) for k in kinds)

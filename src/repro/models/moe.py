@@ -19,7 +19,6 @@ from repro.configs.base import MoEConfig
 from repro.numerics import AMRNumerics
 from repro.parallel.constraints import pin
 
-from .layers import dense
 
 
 def init_moe(key, d_model: int, cfg: MoEConfig, dtype) -> dict:

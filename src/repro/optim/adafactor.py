@@ -30,7 +30,8 @@ def _factored(p) -> bool:
 
 def adafactor_init(params: Any) -> AdafactorState:
     def vr(p):
-        return jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p) else jnp.zeros((1,), jnp.float32)
+        return (jnp.zeros(p.shape[:-1], jnp.float32)
+                if _factored(p) else jnp.zeros((1,), jnp.float32))
 
     def vc(p):
         return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)

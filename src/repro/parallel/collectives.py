@@ -13,7 +13,6 @@ the quantized representation is what crosses the links.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any
 
 import jax

@@ -1,0 +1,9 @@
+"""Shared environment-gating markers for the test suite."""
+import jax
+import pytest
+
+# Mesh/sharding machinery targets modern jax (jax.sharding.AxisType et al.);
+# on older jax it fails inside jax itself before testing anything of ours.
+requires_modern_jax = pytest.mark.skipif(
+    not hasattr(jax.sharding, "AxisType"),
+    reason="requires modern jax.sharding (AxisType-era) APIs")

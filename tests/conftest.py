@@ -3,17 +3,24 @@
 NOTE: XLA_FLAGS multi-device forcing is intentionally NOT set here — only
 launch/dryrun.py uses 512 placeholder devices (see system design). Smoke
 tests and benches must see the single real CPU device.
+
+``hypothesis`` is optional: without it the property tests skip (via the
+tests/_hyp.py shim) and the rest of the suite still collects and runs —
+CI exercises that configuration on purpose.
 """
 import os
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-from hypothesis import HealthCheck, settings
-
-settings.register_profile(
-    "fast",
-    max_examples=25,
-    deadline=None,
-    suppress_health_check=[HealthCheck.too_slow],
-)
-settings.load_profile("fast")
+try:
+    from hypothesis import HealthCheck, settings
+except ModuleNotFoundError:  # property tests skip through tests/_hyp.py
+    pass
+else:
+    settings.register_profile(
+        "fast",
+        max_examples=25,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    settings.load_profile("fast")

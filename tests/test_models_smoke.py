@@ -11,6 +11,10 @@ import pytest
 from repro.configs import ARCH_NAMES, get_reduced_config
 from repro.models import decode_step, forward, init_cache, init_params
 
+from _markers import requires_modern_jax
+
+pytestmark = requires_modern_jax
+
 ALL = ARCH_NAMES + ["amr-paper-100m"]
 
 

@@ -1,8 +1,7 @@
 """Property + unit tests for the MRSD number system."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.core import mrsd
 

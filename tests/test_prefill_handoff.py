@@ -9,6 +9,10 @@ from repro.configs import get_reduced_config
 from repro.models import decode_step, forward, init_params
 from repro.models.model import _encoder_forward, prefill_with_cache
 
+from _markers import requires_modern_jax
+
+pytestmark = requires_modern_jax
+
 FAMILIES = ["gemma-2b", "mamba2-370m", "zamba2-1.2b", "gemma3-1b",
             "whisper-small", "dbrx-132b"]
 

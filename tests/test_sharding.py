@@ -9,6 +9,8 @@ from repro.configs import get_config
 from repro.launch import specs as specs_lib
 from repro.parallel import sharding as shard_lib
 
+from _markers import requires_modern_jax
+
 
 def _mesh_1x1(names=("data", "model")):
     return jax.make_mesh((1,) * len(names), names,
@@ -87,6 +89,7 @@ class TestParamRules:
                 == specs.opt.mu["layers"][0]["mlp"]["w_gate"])
 
 
+@requires_modern_jax
 class TestBatchAndCache:
     def test_batch_spec_divisible(self):
         assert shard_lib.batch_partition_spec(MESH, 256, 2) == P(("data",), None)
@@ -105,6 +108,7 @@ class TestBatchAndCache:
         assert kv_spec[1] == "data"  # batch dim
 
 
+@requires_modern_jax
 class TestConstraints:
     def test_pin_noop_without_mesh(self):
         from repro.parallel.constraints import pin

@@ -12,6 +12,8 @@ from repro.data import SyntheticLM
 from repro.optim import adamw_init, adamw_update, adafactor_init, adafactor_update
 from repro.runtime import FaultTolerantLoop, StragglerMonitor
 
+from _markers import requires_modern_jax
+
 
 class TestCheckpoint:
     def _tree(self, k=0):
@@ -151,6 +153,7 @@ class TestFaultTolerance:
         assert res.steps_done == 6
 
 
+@requires_modern_jax
 class TestCompressedCollective:
     def test_quant_psum_single_axis(self):
         """int8-compressed psum matches exact within quantization error."""

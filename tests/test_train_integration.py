@@ -16,6 +16,8 @@ from repro.numerics import AMRNumerics
 from repro.runtime import FaultTolerantLoop
 from repro.train.steps import make_train_state, make_train_step
 
+from _markers import requires_modern_jax
+
 TINY = ModelConfig(
     name="tiny", family="dense", n_layers=2, d_model=64, n_heads=4,
     n_kv_heads=4, head_dim=16, d_ff=128, vocab=128, mlp_act="swiglu",
@@ -36,6 +38,7 @@ def _train(cfg, steps, batch=8, seq=32, seed=0):
     return losses
 
 
+@requires_modern_jax
 class TestTraining:
     def test_loss_decreases(self):
         losses = _train(TINY, steps=30)
@@ -65,6 +68,7 @@ class TestTraining:
         np.testing.assert_allclose(a1, a2, atol=5e-3)
 
 
+@requires_modern_jax
 class TestResume:
     def test_checkpoint_resume_continues(self, tmp_path):
         data = SyntheticLM(vocab=TINY.vocab, seq_len=32, batch=4, seed=1)
