@@ -1,0 +1,65 @@
+"""Docs link checker: every internal markdown link must resolve (no fetches).
+
+Scans README.md and docs/**/*.md for inline links/images. External schemes
+(http/https/mailto) and pure-anchor links are skipped — CI must not touch
+the network; links that escape the repo root (e.g. the CI badge's
+``../../actions/...`` GitHub-relative path) are skipped too. Everything
+else must exist on disk relative to the file that links it.
+
+  python scripts/check_links.py            # from the repo root
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+# inline links [text](target) and images ![alt](target); reference-style not used
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def iter_links(md: Path):
+    in_fence = False
+    for lineno, line in enumerate(md.read_text().splitlines(), 1):
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+        if in_fence:
+            continue
+        for m in _LINK.finditer(line):
+            yield lineno, m.group(1)
+
+
+def check(md: Path) -> list[str]:
+    errors = []
+    for lineno, target in iter_links(md):
+        if target.startswith(_EXTERNAL) or target.startswith("#"):
+            continue
+        path = target.split("#", 1)[0]
+        resolved = (md.parent / path).resolve()
+        if ROOT not in resolved.parents and resolved != ROOT:
+            continue  # escapes the repo (GitHub-relative badge links etc.)
+        if not resolved.exists():
+            errors.append(f"{md.relative_to(ROOT)}:{lineno}: broken link -> {target}")
+    return errors
+
+
+def main() -> int:
+    files = [ROOT / "README.md", *sorted((ROOT / "docs").glob("**/*.md"))]
+    errors = []
+    n_links = 0
+    for md in files:
+        if not md.exists():
+            errors.append(f"missing expected file: {md.relative_to(ROOT)}")
+            continue
+        n_links += sum(1 for _ in iter_links(md))
+        errors.extend(check(md))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} files, {n_links} links, {len(errors)} broken")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

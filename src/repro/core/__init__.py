@@ -11,12 +11,14 @@ repro.kernels.)
 from .amrmul import AMRMulConfig, AMRMultiplier, exact_multiplier
 from .cells import CELLS, PAPER_AVG_ERR
 from .dse import assign_column
-from .lut import build_int8_lut, error_stats, exact_int8_table, lowrank_factor
+from .lut import (Int8LUT, build_int8_lut, build_int8_luts, error_stats,
+                  exact_int8_table, lowrank_factor, lut_record)
 from .metrics import ErrorAccumulator, monte_carlo_metrics, relative_errors
 
 __all__ = [
     "AMRMulConfig", "AMRMultiplier", "exact_multiplier",
     "CELLS", "PAPER_AVG_ERR", "assign_column",
-    "build_int8_lut", "exact_int8_table", "lowrank_factor", "error_stats",
+    "Int8LUT", "build_int8_lut", "build_int8_luts", "lut_record",
+    "exact_int8_table", "lowrank_factor", "error_stats",
     "ErrorAccumulator", "monte_carlo_metrics", "relative_errors",
 ]

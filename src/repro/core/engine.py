@@ -152,19 +152,16 @@ class CompiledSchedule:
         self, xbits: np.ndarray, ybits: np.ndarray
     ) -> tuple[np.ndarray, np.ndarray]:
         """(batch, 5N) stored operand bits -> exact (lo, hi) int64 split."""
+        import jax
         import jax.numpy as jnp
 
-        batch = xbits.shape[0]
-        limbs = np.asarray(
-            self._replay(jnp.asarray(_pack_lanes(xbits)), jnp.asarray(_pack_lanes(ybits)))
-        ).astype(np.int64)[:, :batch]
-        lo = limbs[0].copy()
-        if self.n_limbs > 1:
-            lo += limbs[1] * (1 << _LIMB_BITS)
-        hi = np.zeros_like(lo)
-        for limb in range(2, self.n_limbs):
-            hi += limbs[limb] * (1 << (_LIMB_BITS * (limb - 2)))
-        return lo, hi
+        # Host-facing: escape any ambient jit trace (e.g. a LUT being built
+        # lazily while a consumer kernel traces) so the replay runs concretely.
+        with jax.ensure_compile_time_eval():
+            limbs = np.asarray(
+                self._replay(jnp.asarray(_pack_lanes(xbits)), jnp.asarray(_pack_lanes(ybits)))
+            )
+        return _combine_limbs(limbs, self.n_limbs, xbits.shape[0])
 
     def evaluate(self, xbits: np.ndarray, ybits: np.ndarray) -> np.ndarray:
         """Float64 result value (exact only below ~2**53, as the numpy path)."""
@@ -194,18 +191,21 @@ def compile_schedule(schedule: reduction.Schedule) -> CompiledSchedule:
     weights_np[np.arange(pos.shape[0]), pos // _LIMB_BITS] = 1 << (pos % _LIMB_BITS)
     offsets_np = (pol[:, None] * weights_np).sum(0).astype(np.int32)
 
-    gate_masks = jnp.asarray((_GATE_TABLES[layout.gate] * _FULL).astype(np.uint32))
-    x_idx = jnp.asarray(layout.x_idx.astype(np.int32))
-    y_idx = jnp.asarray(layout.y_idx.astype(np.int32))
-    stage_consts = [
-        (jnp.asarray(st.in3), jnp.asarray(st.sum_masks),
-         jnp.asarray(st.carry_masks), jnp.asarray(st.perm))
-        for st in stages
-    ]
-    final_ids = jnp.asarray(schedule.final_ids.astype(np.int32))
-    weights = jnp.asarray(weights_np)
-    offsets = jnp.asarray(offsets_np)
-    lane_shifts = jnp.arange(_LANE_BITS, dtype=jnp.uint32)
+    # Concrete closure constants even when the engine is built lazily inside
+    # an ambient jit trace (e.g. a kernel tracing while its LUT first builds).
+    with jax.ensure_compile_time_eval():
+        gate_masks = jnp.asarray((_GATE_TABLES[layout.gate] * _FULL).astype(np.uint32))
+        x_idx = jnp.asarray(layout.x_idx.astype(np.int32))
+        y_idx = jnp.asarray(layout.y_idx.astype(np.int32))
+        stage_consts = [
+            (jnp.asarray(st.in3), jnp.asarray(st.sum_masks),
+             jnp.asarray(st.carry_masks), jnp.asarray(st.perm))
+            for st in stages
+        ]
+        final_ids = jnp.asarray(schedule.final_ids.astype(np.int32))
+        weights = jnp.asarray(weights_np)
+        offsets = jnp.asarray(offsets_np)
+        lane_shifts = jnp.arange(_LANE_BITS, dtype=jnp.uint32)
 
     def replay(xw, yw):
         """Bit-sliced replay: rows are wires, uint32 words hold 32 samples."""
@@ -240,10 +240,61 @@ def compile_schedule(schedule: reduction.Schedule) -> CompiledSchedule:
     )
 
 
+def _combine_limbs(limbs: np.ndarray, n_limbs: int, batch: int) -> tuple[np.ndarray, np.ndarray]:
+    """(n_limbs, padded_batch) int32 limbs -> exact (lo, hi) int64 split."""
+    limbs = limbs.astype(np.int64)[:, :batch]
+    lo = limbs[0].copy()
+    if n_limbs > 1:
+        lo += limbs[1] * (1 << _LIMB_BITS)
+    hi = np.zeros_like(lo)
+    for limb in range(2, n_limbs):
+        hi += limbs[limb] * (1 << (_LIMB_BITS * (limb - 2)))
+    return lo, hi
+
+
 @lru_cache(maxsize=64)
 def get_engine(n_digits: int, border: int | None) -> CompiledSchedule:
     """Process-level compiled-artifact cache, keyed on the design point."""
     return compile_schedule(reduction.get_schedule(n_digits, border))
+
+
+@lru_cache(maxsize=16)
+def _multi_replay(n_digits: int, borders: tuple):
+    """Fuse several design points' replays into ONE jitted dispatch."""
+    import jax
+
+    engines = tuple(get_engine(n_digits, b) for b in borders)
+    replays = tuple(e._replay for e in engines)
+    return engines, jax.jit(lambda xw, yw: tuple(r(xw, yw) for r in replays))
+
+
+def evaluate_split_many(
+    n_digits: int, borders: tuple, xbits: np.ndarray, ybits: np.ndarray
+) -> dict:
+    """One fused engine call across approximate borders on a shared batch.
+
+    The host-side costs that dominate multi-design sweeps — bit-slicing the
+    operand batch into uint32 lanes and the host->device transfer — are paid
+    ONCE; every border's compiled replay then runs inside a single jitted
+    dispatch (the per-border replays are composed into one XLA program).
+    Returns ``{border: (lo, hi)}`` with the same exact int64 split as
+    ``CompiledSchedule.evaluate_split``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    borders = tuple(borders)
+    engines, fused = _multi_replay(n_digits, borders)
+    batch = xbits.shape[0]
+    # Host-facing (see evaluate_split): run concretely under ambient traces.
+    with jax.ensure_compile_time_eval():
+        xw = jnp.asarray(_pack_lanes(xbits))
+        yw = jnp.asarray(_pack_lanes(ybits))
+        outs = [np.asarray(limbs) for limbs in fused(xw, yw)]
+    return {
+        b: _combine_limbs(limbs, eng.n_limbs, batch)
+        for b, eng, limbs in zip(borders, engines, outs)
+    }
 
 
 def evaluate_digits_split(

@@ -3,12 +3,28 @@
 ``build_int8_lut`` evaluates the bit-accurate 2-digit AMR-MUL over all
 2^8 x 2^8 signed int8 pairs once; the resulting 256x256 int32 table *is*
 the paper's arithmetic for 8-bit operands (the 2-digit MRSD dynamic range
-[-272, 255] strictly contains int8).
+[-272, 255] strictly contains int8).  ``build_int8_luts`` is the batched
+multi-border entry point: the 2^16 operand pairs are MRSD-encoded and
+bit-packed once, then every requested border's compiled schedule replays
+inside ONE fused engine dispatch (``engine.evaluate_split_many``).  Tables
+are cached per ``(n_digits, border, engine)`` with provenance (``Int8LUT``
+records which backend produced each table).
 
 ``lowrank_factor`` SVD-factors the error table E(a,b) = AMR(a,b) - a*b into
 rank-r terms  E ~= sum_r u_r(a) * v_r(b), which turns an approximate matmul
 into ``A @ B + U(A) @ V(B)`` — (1+r)/1 MXU matmuls instead of per-element
-gather emulation (DESIGN.md §2 L2). Rank 256 is exact by construction.
+gather emulation (DESIGN.md §2 L2).  Error bound vs the full table: the
+rank-r residual is the tail of the SVD, so every entry obeys
+``|E(a,b) - (U V^T)(a,b)| <= sigma_{r+1}`` (max entry <= spectral norm of
+the residual, which equals the first dropped singular value), and a K-term
+dot product accumulates at most ``K * sigma_{r+1}`` of extra error.  Rank
+256 is exact by construction (``residual_fro ~ 0``); the full-table Pallas
+kernel (``kernels/amr_matmul``, ``method="lut"``) skips the factorization
+entirely and gathers from the int32 table for bit-exact products.
+
+The jnp-constant accessors ``table_array`` / ``factor_arrays`` are the
+single cached conversion point shared by the kernels and the numerics
+policy — call sites must not rebuild factors themselves.
 """
 from __future__ import annotations
 
@@ -17,36 +33,98 @@ from functools import lru_cache
 
 import numpy as np
 
-from .amrmul import AMRMultiplier
+from . import mrsd, ppgen, reduction
+from .amrmul import ENGINES, AMRMultiplier
 
 INT8_OFFSET = 128  # index = value + 128
+_N_DIGITS = 2      # int8 operands need exactly 2 radix-16 MRSD digits
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8LUT:
+    """A cached product table plus the provenance of the backend that built it."""
+
+    n_digits: int
+    border: int | None
+    engine: str          # "jax" (fused engine replay) | "numpy" (host reference)
+    table: np.ndarray    # (256, 256) int32, LUT[a+128, b+128] = AMR(a, b)
+
+
+_LUT_CACHE: dict[tuple[int, int | None, str], Int8LUT] = {}
+
+
+def _int8_value_grid() -> tuple[np.ndarray, np.ndarray]:
+    """All 2^16 int8 pairs in row-major table order: (a repeated, b tiled)."""
+    vals = np.arange(-128, 128, dtype=np.int64)
+    return np.repeat(vals, 256), np.tile(vals, 256)
+
+
+@lru_cache(maxsize=1)
+def _int8_operand_bits() -> tuple[np.ndarray, np.ndarray]:
+    """Stored operand bits for all 2^16 int8 pairs — encoded/flattened once.
+
+    MRSD encoding is border-independent, so the same packed operands feed
+    every border's replay in the multi-border build.
+    """
+    a, b = _int8_value_grid()
+    xb = ppgen.flatten_operand_bits(mrsd.encode(a, _N_DIGITS))
+    yb = ppgen.flatten_operand_bits(mrsd.encode(b, _N_DIGITS))
+    return xb, yb
+
+
+def build_int8_luts(
+    borders: tuple[int | None, ...], engine: str = "jax"
+) -> dict[int | None, np.ndarray]:
+    """Batched multi-border build: ``{border: (256, 256) int32 table}``.
+
+    All borders missing from the process-level cache are produced by ONE
+    fused engine call (``engine="jax"``) over a shared bit-packed operand
+    batch; ``engine="numpy"`` falls back to per-border host replay (the
+    reference path the jax tables are asserted bit-exact against).
+    """
+    if engine not in ENGINES:
+        raise ValueError(f"engine must be one of {ENGINES}, got {engine!r}")
+    borders = tuple(borders)
+    missing = tuple(dict.fromkeys(
+        b for b in borders if (_N_DIGITS, b, engine) not in _LUT_CACHE))
+    if missing and engine == "jax":
+        from . import engine as engine_mod  # lazy: numpy path stays jax-free
+
+        xb, yb = _int8_operand_bits()
+        splits = engine_mod.evaluate_split_many(_N_DIGITS, missing, xb, yb)
+        for b, (lo, hi) in splits.items():
+            prod = reduction.split_to_float(lo, hi)  # exact: products < 2**16
+            _LUT_CACHE[(_N_DIGITS, b, engine)] = Int8LUT(
+                _N_DIGITS, b, engine, prod.astype(np.int32).reshape(256, 256))
+    elif missing:
+        a, b2 = _int8_value_grid()
+        for b in missing:
+            m = AMRMultiplier(_N_DIGITS, border=b, engine=engine)
+            prod = m.multiply_values(a, b2)
+            _LUT_CACHE[(_N_DIGITS, b, engine)] = Int8LUT(
+                _N_DIGITS, b, engine, prod.astype(np.int32).reshape(256, 256))
+    return {b: _LUT_CACHE[(_N_DIGITS, b, engine)].table for b in borders}
 
 
 def build_int8_lut(border: int | None, engine: str = "jax") -> np.ndarray:
     """(256, 256) int32: LUT[a+128, b+128] = AMR-MUL_2digit(a, b).
 
-    All 2^16 products are evaluated in one batched call; ``engine="jax"``
-    (default) replays the schedule through the compiled engine, bit-exact
-    against the ``"numpy"`` host path (tests/test_engine.py asserts parity).
+    Single-border convenience over ``build_int8_luts`` — same cache, same
+    fused engine build, bit-exact against the ``"numpy"`` host path
+    (tests/test_engine.py + tests/test_lut_numerics.py assert parity).
     """
-    # normalize to positional args so default/keyword calls share a cache key
-    return _build_int8_lut(border, engine)
+    return build_int8_luts((border,), engine)[border]
 
 
-@lru_cache(maxsize=32)
-def _build_int8_lut(border: int | None, engine: str) -> np.ndarray:
-    m = AMRMultiplier(2, border=border, engine=engine)
-    vals = np.arange(-128, 128, dtype=np.int64)
-    a = np.repeat(vals, 256)
-    b = np.tile(vals, 256)
-    prod = m.multiply_values(a, b)  # float64, exact (products < 2**16)
-    lut = prod.astype(np.int32).reshape(256, 256)
-    return lut
+def lut_record(border: int | None, engine: str = "jax") -> Int8LUT:
+    """The cached table WITH provenance (which backend produced it)."""
+    build_int8_luts((border,), engine)
+    return _LUT_CACHE[(_N_DIGITS, border, engine)]
 
 
 def exact_int8_table() -> np.ndarray:
-    vals = np.arange(-128, 128, dtype=np.int64)
-    return (vals[:, None] * vals[None, :]).astype(np.int32)
+    a, b = _int8_value_grid()
+    return (a * b).astype(np.int32).reshape(256, 256)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,6 +158,38 @@ def _lowrank_factor(border: int | None, rank: int, engine: str) -> LowRankFactor
     denom = float(np.linalg.norm(err)) or 1.0
     resid = float(np.linalg.norm(err - (u.astype(np.float64) @ v.T.astype(np.float64)))) / denom
     return LowRankFactors(border, r, u, v, resid, engine)
+
+
+def table_array(border: int | None, engine: str = "jax"):
+    """Cached jnp int32 view of the product table (single conversion point)."""
+    return _table_array(border, engine)
+
+
+@lru_cache(maxsize=64)
+def _table_array(border: int | None, engine: str):
+    import jax  # lazy: numpy-only users never pull in jax
+    import jax.numpy as jnp
+
+    # Concrete even when first materialized inside an ambient jit trace —
+    # a tracer must never be cached.
+    with jax.ensure_compile_time_eval():
+        return jnp.asarray(build_int8_lut(border, engine=engine), dtype=jnp.int32)
+
+
+def factor_arrays(border: int | None, rank: int, engine: str = "jax"):
+    """Cached jnp (u, v) factors — ALL kernel/numerics call sites route here
+    instead of re-converting ``lowrank_factor`` output per call."""
+    return _factor_arrays(border, rank, engine)
+
+
+@lru_cache(maxsize=64)
+def _factor_arrays(border: int | None, rank: int, engine: str):
+    import jax
+    import jax.numpy as jnp
+
+    f = lowrank_factor(border, rank, engine=engine)
+    with jax.ensure_compile_time_eval():  # see _table_array
+        return jnp.asarray(f.u), jnp.asarray(f.v)
 
 
 def error_stats(border: int | None, engine: str = "jax") -> dict[str, float]:

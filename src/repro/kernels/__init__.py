@@ -1,10 +1,16 @@
-"""Pallas TPU kernels for the perf-critical compute layers.
+"""Pallas kernels for the perf-critical compute layers.
 
-  amr_matmul — the paper's approximate multiplier as an MXU matmul kernel
-               (low-rank error-LUT factorization; DESIGN.md §2 L2).
+  amr_matmul — the paper's approximate multiplier as a matmul kernel, in
+               two variants: low-rank error-LUT factorization on the MXU
+               (DESIGN.md §2 L2) and a bit-exact full-table LUT-gather
+               form; shared backend-keyed tiling table (amr_matmul/tiling).
   ssd_scan   — Mamba2 SSD chunked scan (intra-chunk dual form + carried
                state), the hot loop of the ssm/hybrid architectures.
 
-Each kernel ships ops.py (jit wrapper) and ref.py (pure-jnp oracle);
-tests sweep shapes/dtypes and assert allclose under interpret=True.
+Execution mode is backend-autodetected (``interpret=None`` -> compiled
+Mosaic on real TPU, interpreter mode on CPU/GPU) with a global
+``REPRO_PALLAS_INTERPRET`` env override — see pallas_config.py and
+docs/kernels.md.  Each kernel ships ops.py (jit wrapper) and ref.py
+(pure-jnp oracle); tests sweep shapes/dtypes vs the oracles on CPU and
+assert the full-LUT variant bit-exact vs the schedule engine's replay.
 """

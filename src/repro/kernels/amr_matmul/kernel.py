@@ -1,18 +1,36 @@
-"""Pallas TPU kernel: AMR-MUL approximate matmul in low-rank MXU form.
+"""Pallas TPU kernels: AMR-MUL approximate matmul, low-rank and full-LUT forms.
 
 The paper's multiplier, as deployed on TPU (DESIGN.md §2 L2): for int8
 operands the approximate product is exactly ``a*b + E(a,b)`` with E the
-256x256 error table of the bit-accurate 2-digit AMR-MUL. E factors as
-``E ~= U V^T`` (SVD, rank r), so a block matmul becomes
+256x256 error table of the bit-accurate 2-digit AMR-MUL.  Two kernel
+variants trade fidelity against the unit they load:
+
+**Low-rank (MXU)** — E factors as ``E ~= U V^T`` (SVD, rank r), so a block
+matmul becomes
 
     acc += concat([A_f32, U[A+128]]) @ concat([B_f32, V[B+128]])
 
 — ONE (bm, bk*(1+r)) x (bk*(1+r), bn) MXU dot per block instead of per-
 element gather emulation on the VPU. U/V live whole in VMEM (256*r*4B).
+Per-product error vs the full table is bounded by the first dropped
+singular value ``sigma_{r+1}`` (see core/lut.py), i.e. <= K*sigma_{r+1}
+per output element.
 
-Tiling: grid (M/bm, N/bn, K/bk), K innermost so the f32 accumulator
-scratch carries across the K sweep; block dims multiples of the MXU tile
-(128) on M/N and of the int8 lane pack on K.
+**Full-LUT (gather)** — the whole 256x256 int32 product table lives in
+VMEM (256KB) and each K step gathers the (bm, bn) outer-product block
+``LUT[a_k + 128, b_k + 128]`` from the flattened table, accumulating in
+int32.  Bit-exact by construction (zero error vs the schedule engine's
+replay — asserted in tests/test_kernels.py), VPU/gather-bound, so the
+shared tiling table (tiling.py) gives it narrower K tiles on accelerators.
+
+Tiling (both variants): grid (M/bm, N/bn, K/bk), K innermost so the
+accumulator scratch carries across the K sweep; block dims come from the
+shared ``tiling.AUTOTUNE`` table keyed on backend, clamped to divisors.
+
+``interpret=None`` (default) autodetects per backend — compiled Mosaic on
+real TPU, interpreter mode on CPU and GPU (the kernels use pltpu memory
+spaces the Triton lowering lacks) — overridable via the
+``REPRO_PALLAS_INTERPRET`` env var (see kernels/pallas_config.py).
 """
 from __future__ import annotations
 
@@ -22,6 +40,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pallas_config import resolve_interpret
 
 
 def _amr_matmul_kernel(a_ref, b_ref, u_ref, v_ref, out_ref, acc_ref, *, n_k: int):
@@ -62,10 +82,7 @@ def _amr_matmul_kernel(a_ref, b_ref, u_ref, v_ref, out_ref, acc_ref, *, n_k: int
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
-def amr_matmul_int8(a: jnp.ndarray, b: jnp.ndarray, u: jnp.ndarray, v: jnp.ndarray,
-                    *, bm: int = 128, bn: int = 128, bk: int = 128,
-                    interpret: bool = True) -> jnp.ndarray:
-    """a (M,K) int8, b (K,N) int8, u/v (256,r) f32 -> (M,N) f32 approx products."""
+def _amr_matmul_int8_jit(a, b, u, v, *, bm, bn, bk, interpret):
     M, K = a.shape
     N = b.shape[1]
     assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
@@ -77,7 +94,7 @@ def amr_matmul_int8(a: jnp.ndarray, b: jnp.ndarray, u: jnp.ndarray, v: jnp.ndarr
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
             pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
-            pl.BlockSpec(u.shape, lambda i, j, k: (0, 0)),  # whole LUT in VMEM
+            pl.BlockSpec(u.shape, lambda i, j, k: (0, 0)),  # whole factors in VMEM
             pl.BlockSpec(v.shape, lambda i, j, k: (0, 0)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
@@ -85,3 +102,77 @@ def amr_matmul_int8(a: jnp.ndarray, b: jnp.ndarray, u: jnp.ndarray, v: jnp.ndarr
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(a, b, u, v)
+
+
+def amr_matmul_int8(a: jnp.ndarray, b: jnp.ndarray, u: jnp.ndarray, v: jnp.ndarray,
+                    *, bm: int = 128, bn: int = 128, bk: int = 128,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """a (M,K) int8, b (K,N) int8, u/v (256,r) f32 -> (M,N) f32 approx products.
+
+    ``interpret=None`` resolves via pallas_config (env override / backend
+    autodetect) BEFORE the jitted inner function, so the jit cache is always
+    keyed on a concrete bool."""
+    return _amr_matmul_int8_jit(a, b, u, v, bm=bm, bn=bn, bk=bk,
+                                interpret=resolve_interpret(interpret))
+
+
+def _amr_matmul_lut_kernel(a_ref, b_ref, lut_ref, out_ref, acc_ref, *, n_k: int):
+    """Full-table variant: per-K-step (bm, bn) gather from the flat LUT."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]                                  # (bm, bk) int8
+    b = b_ref[...]                                  # (bk, bn) int8
+    flat = lut_ref[...].reshape(-1)                 # (65536,) int32
+    bm, bk = a.shape
+    bn = b.shape[1]
+    ia = a.astype(jnp.int32) + 128
+    ib = b.astype(jnp.int32) + 128
+
+    def body(k, acc):
+        # flat index LUT[a_k, b_k] = flat[a_k * 256 + b_k], outer-product shaped
+        iak = jax.lax.dynamic_index_in_dim(ia, k, axis=1, keepdims=True)   # (bm, 1)
+        ibk = jax.lax.dynamic_index_in_dim(ib, k, axis=0, keepdims=True)   # (1, bn)
+        idx = iak * 256 + ibk                                              # (bm, bn)
+        return acc + jnp.take(flat, idx.reshape(-1), axis=0).reshape(bm, bn)
+
+    acc_ref[...] = jax.lax.fori_loop(0, bk, body, acc_ref[...])
+
+    @pl.when(k_idx == n_k - 1)
+    def _store():
+        out_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def _amr_matmul_int8_lut_jit(a, b, table, *, bm, bn, bk, interpret):
+    M, K = a.shape
+    N = b.shape[1]
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    n_k = K // bk
+    grid = (M // bm, N // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_amr_matmul_lut_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec(table.shape, lambda i, j, k: (0, 0)),  # whole LUT: 256KB VMEM
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(a, b, table)
+
+
+def amr_matmul_int8_lut(a: jnp.ndarray, b: jnp.ndarray, table: jnp.ndarray,
+                        *, bm: int = 128, bn: int = 128, bk: int = 128,
+                        interpret: bool | None = None) -> jnp.ndarray:
+    """Bit-exact variant: a (M,K) int8, b (K,N) int8, table (256,256) int32
+    -> (M,N) int32 — int32 accumulation of true AMR products (exact for
+    K * 2^16 < 2^31, i.e. any realistic K)."""
+    return _amr_matmul_int8_lut_jit(a, b, table, bm=bm, bn=bn, bk=bk,
+                                    interpret=resolve_interpret(interpret))

@@ -1,4 +1,24 @@
-"""jit'd public wrapper: float matmul under AMR-MUL numerics via the kernel."""
+"""Public AMR-matmul op: float matmul under AMR-MUL numerics via Pallas.
+
+Dispatches between the two kernel variants (kernel.py):
+
+  * ``method="lowrank"`` — rank-r SVD factors of the error table, single
+    augmented MXU dot per block; per-product error <= sigma_{r+1} of the
+    error table's spectrum (core/lut.py documents the bound);
+  * ``method="lut"``     — full 256x256 int32 table gather, bit-exact AMR
+    products with int32 accumulation.
+
+Both source their constants from ``core/lut.py``'s cached accessors — the
+factors/table for a ``(border, rank, engine)`` point are built once per
+process by the fused multi-border engine and converted to jnp once
+(``lut.factor_arrays`` / ``lut.table_array``); no call site rebuilds them.
+
+Tiling (``bm/bn/bk=None``) and execution mode (``interpret=None``) resolve
+in THIS non-jitted wrapper — tiles from the shared backend-keyed autotune
+table clamped to shape divisors, interpret from the backend autodetect
+with the ``REPRO_PALLAS_INTERPRET`` env override — then the jitted inner
+function is keyed on the concrete values.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -7,28 +27,53 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import lut as lut_lib
+from repro.kernels.pallas_config import resolve_interpret
 from repro.numerics.quant import quantize_int8
 
-from .kernel import amr_matmul_int8
+from .kernel import _amr_matmul_int8_jit, _amr_matmul_int8_lut_jit
+from .tiling import pick_tiles
 
 
 def lut_factors(
-    border: int, rank: int, engine: str = "jax"
+    border: int | None, rank: int, engine: str = "jax"
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Low-rank error factors for the kernel; the source 256x256 table is
-    built by the compiled schedule engine (``engine="jax"``, bit-exact vs the
-    numpy host replay — provenance recorded on the LowRankFactors)."""
-    f = lut_lib.lowrank_factor(border, rank, engine=engine)
-    return jnp.asarray(f.u), jnp.asarray(f.v)
+    """Cached low-rank error factors for the kernel (u, v) as jnp arrays.
+
+    Thin alias for ``core.lut.factor_arrays`` — the single process-level
+    cache behind every kernel/numerics call site (the source 256x256 table
+    comes from the fused multi-border engine build, provenance recorded on
+    the underlying LowRankFactors)."""
+    return lut_lib.factor_arrays(border, rank, engine)
 
 
-@partial(jax.jit, static_argnames=("border", "rank", "bm", "bn", "bk", "interpret"))
-def amr_matmul(a: jnp.ndarray, b: jnp.ndarray, *, border: int = 8, rank: int = 8,
-               bm: int = 128, bn: int = 128, bk: int = 128,
-               interpret: bool = True) -> jnp.ndarray:
-    """Float (M,K) @ (K,N) with AMR-MUL product semantics (quantize->kernel->rescale)."""
-    u, v = lut_factors(border, rank)
+@partial(jax.jit, static_argnames=("border", "rank", "method", "bm", "bn", "bk",
+                                   "interpret"))
+def _amr_matmul_jit(a, b, *, border, rank, method, bm, bn, bk, interpret):
     qa, sa = quantize_int8(a, axis=-1)
     qb, sb = quantize_int8(b, axis=0)
-    out = amr_matmul_int8(qa, qb, u, v, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    if method == "lut":
+        table = lut_lib.table_array(border)
+        out = _amr_matmul_int8_lut_jit(qa, qb, table, bm=bm, bn=bn, bk=bk,
+                                       interpret=interpret).astype(jnp.float32)
+    elif method == "lowrank":
+        u, v = lut_factors(border, rank)
+        out = _amr_matmul_int8_jit(qa, qb, u, v, bm=bm, bn=bn, bk=bk,
+                                   interpret=interpret)
+    else:
+        raise ValueError(f"method must be 'lowrank' or 'lut', got {method!r}")
     return out * sa * sb
+
+
+def amr_matmul(a: jnp.ndarray, b: jnp.ndarray, *, border: int | None = 8,
+               rank: int = 8, method: str = "lowrank",
+               bm: int | None = None, bn: int | None = None, bk: int | None = None,
+               interpret: bool | None = None) -> jnp.ndarray:
+    """Float (M,K) @ (K,N) with AMR-MUL product semantics
+    (quantize -> kernel variant -> rescale)."""
+    if method not in ("lowrank", "lut"):
+        raise ValueError(f"method must be 'lowrank' or 'lut', got {method!r}")
+    tiles = pick_tiles(a.shape[0], b.shape[1], a.shape[1],
+                       variant=method, bm=bm, bn=bn, bk=bk)
+    return _amr_matmul_jit(a, b, border=border, rank=rank, method=method,
+                           bm=tiles.bm, bn=tiles.bn, bk=tiles.bk,
+                           interpret=resolve_interpret(interpret))

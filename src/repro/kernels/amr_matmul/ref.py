@@ -1,4 +1,14 @@
-"""Pure-jnp oracles for the AMR matmul kernel."""
+"""Pure-jnp/numpy oracles for the AMR matmul kernel variants.
+
+``ref_lowrank_int8`` mirrors the low-rank kernel's math densely
+(A@B + U[A]@V[B] einsum contraction) — agreement with the kernel is to
+f32 accumulation order.  ``ref_bitexact_int8`` is the ground truth for
+BOTH the full-LUT kernel (which must match it bit-for-bit, int64 exact)
+and the rank-256 low-rank kernel (which matches to fp32 rounding): it
+accumulates per-element products straight from the engine-built 256x256
+table, i.e. it *is* the schedule engine's exact replay lifted to a matmul.
+The gap between a rank-r kernel and this oracle is bounded by
+K * sigma_{r+1} per element (core/lut.py)."""
 from __future__ import annotations
 
 import jax.numpy as jnp

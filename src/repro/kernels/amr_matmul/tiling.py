@@ -1,0 +1,67 @@
+"""Shared tiling policy for the amr_matmul kernel variants.
+
+One autotune table keyed on ``(backend, variant)`` serves both the
+low-rank MXU kernel and the full-table LUT-gather kernel; callers pass
+``bm/bn/bk=None`` to take the table entry, clamped down to divisors of the
+actual problem shape so ``pallas_call`` grids always tile exactly.
+
+Entries encode where each variant is bound:
+
+  * ``lowrank`` is MXU-bound — big square 128-multiple tiles keep the
+    (bm, bk*(1+r)) x (bk*(1+r), bn) dot on the systolic array;
+  * ``lut`` is VPU/gather-bound and walks K sequentially inside the block,
+    so K tiles shrink on real accelerators to bound the per-step gather
+    footprint while M/N stay MXU-tile aligned for the output block.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.kernels.pallas_config import backend_kind
+
+
+@dataclasses.dataclass(frozen=True)
+class TileConfig:
+    bm: int
+    bn: int
+    bk: int
+
+
+# (backend, variant) -> preferred tiles; clamped to shape divisors at pick
+# time. The gpu rows size VMEM-equivalent footprints for a future Triton
+# variant — today GPU runs the interpreter (pallas_config) so they only
+# shape the grid.
+AUTOTUNE: dict[tuple[str, str], TileConfig] = {
+    ("tpu", "lowrank"): TileConfig(128, 128, 128),
+    ("tpu", "lut"): TileConfig(128, 128, 32),
+    ("gpu", "lowrank"): TileConfig(64, 128, 64),
+    ("gpu", "lut"): TileConfig(64, 128, 32),
+    ("cpu", "lowrank"): TileConfig(128, 128, 128),
+    ("cpu", "lut"): TileConfig(128, 128, 128),
+}
+
+VARIANTS = ("lowrank", "lut")
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    for d in range(min(n, cap), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def pick_tiles(
+    m: int, n: int, k: int, *, variant: str = "lowrank", backend: str | None = None,
+    bm: int | None = None, bn: int | None = None, bk: int | None = None,
+) -> TileConfig:
+    """Resolve block sizes: explicit overrides win, else the autotune entry
+    for the (detected) backend, each clamped to the largest divisor of its
+    dimension so the grid covers the problem exactly."""
+    if variant not in VARIANTS:
+        raise ValueError(f"variant must be one of {VARIANTS}, got {variant!r}")
+    pref = AUTOTUNE[(backend or backend_kind(), variant)]
+    return TileConfig(
+        bm=bm if bm is not None else _largest_divisor_leq(m, pref.bm),
+        bn=bn if bn is not None else _largest_divisor_leq(n, pref.bn),
+        bk=bk if bk is not None else _largest_divisor_leq(k, pref.bk),
+    )

@@ -1,0 +1,55 @@
+"""Pallas execution-mode policy: backend autodetection + env override.
+
+Kernels default to ``interpret=None`` and resolve it here at trace time:
+
+  * ``REPRO_PALLAS_INTERPRET`` set to ``1/true/yes/on`` forces interpreter
+    mode everywhere (debugging on real hardware), ``0/false/no/off`` forces
+    compiled Mosaic/Triton lowering (e.g. to verify a CPU CI job fails fast
+    rather than silently interpreting), ``auto``/unset defers to detection;
+  * detection: compiled kernels on real TPU backends only. CPU has no
+    compiled Pallas lowering, and the amr_matmul kernels use TPU memory
+    spaces (``pltpu.VMEM`` scratch) that the Triton/GPU lowering does not
+    support — so both fall back to interpreter mode until a Triton variant
+    of the kernels lands.
+
+``resolve_interpret`` is called by the NON-jitted public wrappers (see
+kernels/amr_matmul/ops.py) so the env var is re-read on every call and a
+changed override never collides with a stale jit cache entry keyed on
+``interpret=None``.
+"""
+from __future__ import annotations
+
+import os
+
+ENV_VAR = "REPRO_PALLAS_INTERPRET"
+_TRUE = ("1", "true", "yes", "on")
+_FALSE = ("0", "false", "no", "off")
+
+
+def backend_kind() -> str:
+    """Coarse platform for the tiling/interpret tables: 'tpu'|'gpu'|'cpu'."""
+    import jax
+
+    plat = jax.default_backend()
+    if plat in ("gpu", "cuda", "rocm"):
+        return "gpu"
+    return plat if plat == "tpu" else "cpu"
+
+
+def default_interpret() -> bool:
+    """Env override if set, else compiled only where the kernels can lower
+    (TPU); CPU and GPU run the interpreter (see module docstring)."""
+    raw = os.environ.get(ENV_VAR, "").strip().lower()
+    if raw in _TRUE:
+        return True
+    if raw in _FALSE:
+        return False
+    if raw and raw != "auto":
+        raise ValueError(
+            f"{ENV_VAR}={raw!r}: expected one of {_TRUE + _FALSE} or 'auto'")
+    return backend_kind() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """None -> autodetected/env-overridden mode; explicit bool wins."""
+    return default_interpret() if interpret is None else interpret

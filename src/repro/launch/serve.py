@@ -1,11 +1,20 @@
 """Serving launcher: prefill a batch of prompts, then batched greedy decode.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
-      --batch 4 --prompt-len 32 --gen 32
+      --batch 4 --prompt-len 32 --gen 32 \
+      --numerics amr_kernel --border 8 --rank 8
+
+``--numerics`` overrides the config's matmul policy so serving exercises
+the approximate multiplier end to end; ``amr_kernel`` runs the Pallas
+kernel path (compiled on real TPU, interpreter mode on CPU/GPU).
+``--pallas-interpret {auto,0,1}`` sets the ``REPRO_PALLAS_INTERPRET``
+override before any kernel traces (docs/kernels.md).
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import os
 import time
 
 import jax
@@ -15,6 +24,7 @@ import numpy as np
 from repro.configs.registry import get_config, get_reduced_config
 from repro.launch.mesh import make_host_mesh
 from repro.models import init_params
+from repro.numerics import AMRNumerics
 from repro.train.steps import make_serve_step
 
 
@@ -34,9 +44,29 @@ def main(argv=None) -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--numerics", default=None,
+                    choices=["exact", "amr_lut", "amr_lowrank", "amr_noise", "amr_kernel"],
+                    help="override the config's matmul numerics policy")
+    ap.add_argument("--border", type=int, default=8,
+                    help="approximate border column for the AMR modes")
+    ap.add_argument("--rank", type=int, default=8,
+                    help="low-rank error rank; 0 with amr_kernel = full-LUT kernel")
+    ap.add_argument("--pallas-interpret", default=None, choices=["auto", "0", "1"],
+                    help="set REPRO_PALLAS_INTERPRET before any kernel traces")
     args = ap.parse_args(argv)
 
+    if args.pallas_interpret is not None:
+        from repro.kernels.pallas_config import ENV_VAR, default_interpret
+
+        os.environ[ENV_VAR] = args.pallas_interpret
+        print(f"[serve] {ENV_VAR}={args.pallas_interpret} "
+              f"(resolved interpret={default_interpret()})")
+
     cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    if args.numerics is not None:
+        cfg = dataclasses.replace(cfg, numerics=AMRNumerics(
+            args.numerics, border=args.border, rank=args.rank))
+        print(f"[serve] numerics policy: {cfg.numerics}")
     mesh = make_host_mesh()
     rng = np.random.default_rng(args.seed)
     prompts = jnp.asarray(rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)),

@@ -11,6 +11,14 @@ scan body un-stacked, giving true weight sharing.
 
 Caches for decode are pytrees mirroring the grouped structure: stacked
 leaves with a leading ``n_repeat`` axis, scanned in lockstep with params.
+
+Approximate numerics: every matmul in every layer routes through
+``cfg.numerics`` (repro.numerics.AMRNumerics) via layers.dense — including
+the ``amr_kernel`` mode that dispatches to the Pallas amr_matmul kernel,
+whose interpret/compiled execution is backend-autodetected and overridable
+with ``REPRO_PALLAS_INTERPRET`` (docs/kernels.md). launch/serve.py exposes
+the policy (``--numerics/--border/--rank/--pallas-interpret``) so the
+serving path exercises the approximate multiplier end to end.
 """
 from __future__ import annotations
 

@@ -11,10 +11,16 @@ Modes (DESIGN.md §2/§3):
   amr_noise    — training-scale surrogate: exact matmul + Gaussian error
                  with moments matched to the measured AMR-MUL error table
                  (paper Fig. 6 shows the relative error is ~Gaussian, mu~0).
+  amr_kernel   — the production Pallas kernel path (kernels/amr_matmul):
+                 low-rank MXU kernel at numerics.rank, or the bit-exact
+                 full-table LUT-gather kernel when rank == 0. Compiled on
+                 real TPU backends, interpreter mode on CPU/GPU
+                 (REPRO_PALLAS_INTERPRET overrides; kernels/pallas_config).
 
 All functions take A: (..., M, K), B: (K, N) and contract the last/first
 axes, matching how dense layers consume them. jit/pjit-safe; the LUT and
-factors are closed-over constants (baked into the executable).
+factors are closed-over constants (baked into the executable), pulled from
+core/lut.py's process-level caches — never rebuilt per call site.
 """
 from __future__ import annotations
 
@@ -28,7 +34,7 @@ import numpy as np
 from repro.core import lut as lut_lib
 from .quant import quantize_int8, quantize_int8_ste
 
-Mode = str  # 'exact' | 'amr_lut' | 'amr_lowrank' | 'amr_noise'
+Mode = str  # 'exact' | 'amr_lut' | 'amr_lowrank' | 'amr_noise' | 'amr_kernel'
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,7 +43,8 @@ class AMRNumerics:
 
     mode: Mode = "exact"
     border: int = 8          # approximate border column (paper Table I/II)
-    rank: int = 8            # low-rank error rank (amr_lowrank)
+    rank: int = 8            # low-rank error rank (amr_lowrank/amr_kernel; 0 in
+                             # amr_kernel mode selects the full-LUT variant)
     noise_seed: int = 0
 
     def is_exact(self) -> bool:
@@ -45,12 +52,11 @@ class AMRNumerics:
 
 
 def _lut_constants(border: int):
-    return jnp.asarray(lut_lib.build_int8_lut(border), dtype=jnp.int32)
+    return lut_lib.table_array(border)
 
 
 def _lowrank_constants(border: int, rank: int):
-    f = lut_lib.lowrank_factor(border, rank)
-    return jnp.asarray(f.u), jnp.asarray(f.v)
+    return lut_lib.factor_arrays(border, rank)
 
 
 def _noise_constants(border: int) -> tuple[float, float]:
@@ -119,6 +125,31 @@ def _lowrank_bwd(border, rank, res, g):
 matmul_amr_lowrank.defvjp(_lowrank_fwd, _lowrank_bwd)
 
 
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def matmul_amr_kernel(a: jnp.ndarray, b: jnp.ndarray, border: int, rank: int) -> jnp.ndarray:
+    """Pallas-kernel-backed AMR matmul (the servable hot path).
+
+    Forward: kernels/amr_matmul — low-rank MXU kernel at ``rank``, or the
+    bit-exact full-table gather kernel when ``rank == 0``; tiling and
+    interpret mode resolve per backend (autotune table + autodetect).
+    Backward: the same straight-through full-precision surrogate as
+    amr_lowrank, so serving and training share one policy surface.
+    """
+    return _kernel_fwd(a, b, border, rank)[0]
+
+
+def _kernel_fwd(a, b, border, rank):
+    from repro.kernels.amr_matmul.ops import amr_matmul  # lazy: break pkg cycle
+
+    a2 = a.reshape(-1, a.shape[-1])
+    out = amr_matmul(a2, b, border=border, rank=max(rank, 1),
+                     method="lut" if rank == 0 else "lowrank")
+    return out.reshape(*a.shape[:-1], b.shape[-1]), (a, b)
+
+
+matmul_amr_kernel.defvjp(_kernel_fwd, _lowrank_bwd)
+
+
 def matmul_amr_noise(a: jnp.ndarray, b: jnp.ndarray, border: int, key: jax.Array) -> jnp.ndarray:
     """Surrogate: exact matmul + error noise with AMR-MUL-matched moments.
 
@@ -149,6 +180,8 @@ def approx_matmul(
         return matmul_amr_lut(a, b, numerics.border)
     if numerics.mode == "amr_lowrank":
         return matmul_amr_lowrank(a, b, numerics.border, numerics.rank)
+    if numerics.mode == "amr_kernel":
+        return matmul_amr_kernel(a, b, numerics.border, numerics.rank)
     if numerics.mode == "amr_noise":
         if key is None:
             key = jax.random.PRNGKey(numerics.noise_seed)

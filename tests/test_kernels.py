@@ -5,9 +5,11 @@ import numpy as np
 import pytest
 
 from repro.core import lut as lut_lib
-from repro.kernels.amr_matmul.kernel import amr_matmul_int8
+from repro.kernels import pallas_config
+from repro.kernels.amr_matmul.kernel import amr_matmul_int8, amr_matmul_int8_lut
 from repro.kernels.amr_matmul.ops import amr_matmul, lut_factors
 from repro.kernels.amr_matmul.ref import ref_bitexact_int8, ref_lowrank_int8
+from repro.kernels.amr_matmul.tiling import TileConfig, pick_tiles
 from repro.kernels.ssd_scan.kernel import ssd_scan
 from repro.kernels.ssd_scan.ref import ref_ssd
 
@@ -67,6 +69,111 @@ class TestAMRMatmulKernel:
         got = amr_matmul_int8(a, b, u, v, interpret=True)
         want = a.astype(jnp.float32) @ b.astype(jnp.float32)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1.0)
+
+
+class TestAMRMatmulLUTKernel:
+    """Full-table LUT-gather variant: bit-exact AMR products."""
+
+    @pytest.mark.parametrize("m,n,k,bm,bn,bk", [
+        (128, 128, 128, 128, 128, 128),
+        (256, 128, 256, 128, 128, 64),
+        (128, 256, 384, 64, 128, 128),
+    ])
+    def test_bitexact_vs_ref(self, m, n, k, bm, bn, bk):
+        """int32 kernel output == int64 per-element LUT accumulation, exactly."""
+        rng = np.random.default_rng(m + n + k + 1)
+        a = jnp.asarray(rng.integers(-128, 128, (m, k)), jnp.int8)
+        b = jnp.asarray(rng.integers(-128, 128, (k, n)), jnp.int8)
+        table = lut_lib.table_array(8)
+        got = np.asarray(amr_matmul_int8_lut(a, b, table, bm=bm, bn=bn, bk=bk,
+                                             interpret=True))
+        want = ref_bitexact_int8(np.asarray(a), np.asarray(b), border=8)
+        np.testing.assert_array_equal(got.astype(np.int64), want)
+
+    def test_bitexact_vs_engine_replay(self):
+        """Kernel products == the compiled schedule engine's replay, with the
+        per-element products evaluated by the engine directly (not via the
+        table), then accumulated host-side."""
+        from repro.core.amrmul import AMRMultiplier
+
+        m_, n_, k_ = 8, 8, 64
+        rng = np.random.default_rng(5)
+        a = rng.integers(-128, 128, (m_, k_))
+        b = rng.integers(-128, 128, (k_, n_))
+        mult = AMRMultiplier(2, border=8, engine="jax")
+        aa = np.repeat(a[:, :, None], n_, axis=2)          # (M, K, N)
+        bb = np.repeat(b.T[None, :, :], m_, axis=0).transpose(0, 2, 1)
+        prods = mult.multiply_values(aa.reshape(-1), bb.reshape(-1))
+        want = prods.reshape(m_, k_, n_).sum(axis=1).astype(np.int64)
+        got = np.asarray(amr_matmul_int8_lut(
+            jnp.asarray(a, jnp.int8), jnp.asarray(b, jnp.int8),
+            lut_lib.table_array(8), bm=8, bn=8, bk=64, interpret=True))
+        np.testing.assert_array_equal(got.astype(np.int64), want)
+
+    def test_exact_border_matches_int_matmul(self):
+        rng = np.random.default_rng(6)
+        a = jnp.asarray(rng.integers(-128, 128, (128, 128)), jnp.int8)
+        b = jnp.asarray(rng.integers(-128, 128, (128, 128)), jnp.int8)
+        got = np.asarray(amr_matmul_int8_lut(a, b, lut_lib.table_array(None),
+                                             interpret=True))
+        want = np.asarray(a, np.int64) @ np.asarray(b, np.int64)
+        np.testing.assert_array_equal(got.astype(np.int64), want)
+
+    def test_float_wrapper_method_lut(self):
+        """method='lut' through the float wrapper == the jnp LUT-gather mode."""
+        from repro.numerics.approx_matmul import matmul_amr_lut
+
+        rng = np.random.default_rng(7)
+        a = jnp.asarray(rng.normal(size=(128, 128)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(128, 128)), jnp.float32)
+        got = np.asarray(amr_matmul(a, b, border=8, method="lut", interpret=True))
+        want = np.asarray(matmul_amr_lut(a, b, border=8))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+class TestPallasPolicy:
+    """Interpret autodetection, env override, shared tiling table."""
+
+    def test_cpu_autodetects_interpret(self, monkeypatch):
+        if pallas_config.backend_kind() != "cpu":
+            pytest.skip("autodetect assertions are for CPU-backed runs")
+        monkeypatch.delenv(pallas_config.ENV_VAR, raising=False)
+        assert pallas_config.default_interpret() is True
+        assert pallas_config.resolve_interpret(None) is True
+
+    def test_only_tpu_compiles_by_default(self, monkeypatch):
+        monkeypatch.delenv(pallas_config.ENV_VAR, raising=False)
+        for backend, interp in (("tpu", False), ("gpu", True), ("cpu", True)):
+            monkeypatch.setattr(pallas_config, "backend_kind", lambda b=backend: b)
+            assert pallas_config.default_interpret() is interp, backend
+
+    def test_env_override_wins(self, monkeypatch):
+        monkeypatch.setenv(pallas_config.ENV_VAR, "0")
+        assert pallas_config.default_interpret() is False
+        monkeypatch.setenv(pallas_config.ENV_VAR, "true")
+        assert pallas_config.default_interpret() is True
+        if pallas_config.backend_kind() == "cpu":
+            monkeypatch.setenv(pallas_config.ENV_VAR, "auto")
+            assert pallas_config.default_interpret() is True  # cpu fallback
+        monkeypatch.setenv(pallas_config.ENV_VAR, "bogus")
+        with pytest.raises(ValueError):
+            pallas_config.default_interpret()
+
+    def test_explicit_interpret_beats_env(self, monkeypatch):
+        monkeypatch.setenv(pallas_config.ENV_VAR, "0")
+        assert pallas_config.resolve_interpret(True) is True
+
+    def test_pick_tiles_divides_shapes(self):
+        for variant in ("lowrank", "lut"):
+            for (m, n, k) in [(128, 128, 128), (96, 64, 160), (100, 12, 7)]:
+                t = pick_tiles(m, n, k, variant=variant)
+                assert m % t.bm == 0 and n % t.bn == 0 and k % t.bk == 0
+
+    def test_pick_tiles_overrides_and_backends(self):
+        t = pick_tiles(256, 256, 256, variant="lut", backend="tpu")
+        assert t == TileConfig(128, 128, 32)  # autotune entry, no clamping
+        t = pick_tiles(256, 256, 256, variant="lut", backend="tpu", bk=256)
+        assert t.bk == 256  # explicit override wins over the table
 
 
 class TestSSDKernel:

@@ -37,6 +37,33 @@ class TestLUT:
         r = [lut.lowrank_factor(8, k).residual_fro for k in (4, 16, 64)]
         assert r[0] > r[1] > r[2]
 
+    def test_multi_border_batch_equals_per_border(self):
+        """build_int8_luts (one fused engine call) == per-border builds."""
+        tables = lut.build_int8_luts((None, 4, 8))
+        for b in (None, 4, 8):
+            np.testing.assert_array_equal(tables[b], lut.build_int8_lut(b))
+            np.testing.assert_array_equal(
+                tables[b], lut.build_int8_lut(b, engine="numpy"))
+
+    def test_lut_record_provenance(self):
+        rec = lut.lut_record(8)
+        assert (rec.n_digits, rec.border, rec.engine) == (2, 8, "jax")
+        assert rec.table.shape == (256, 256) and rec.table.dtype == np.int32
+        assert lut.lut_record(8, engine="numpy").engine == "numpy"
+
+    def test_build_rejects_unknown_engine(self):
+        with pytest.raises(ValueError):
+            lut.build_int8_luts((8,), engine="torch")
+
+    def test_cached_arrays_are_concrete_and_shared(self):
+        t1 = lut.table_array(8)
+        t2 = lut.table_array(8)
+        assert t1 is t2  # one process-level conversion, no per-call rebuild
+        u1, v1 = lut.factor_arrays(8, 8)
+        u2, _ = lut.factor_arrays(8, 8)
+        assert u1 is u2
+        np.testing.assert_array_equal(np.asarray(t1), lut.build_int8_lut(8))
+
 
 class TestQuant:
     def test_roundtrip_small_error(self):
@@ -101,3 +128,31 @@ class TestApproxMatmul:
         f = jax.jit(lambda a, b: approx_matmul(a, b, AMRNumerics("amr_lowrank", border=8, rank=8)))
         out = f(self.a, self.b)
         assert out.shape == (4, 8)
+
+    def test_kernel_mode_matches_lowrank(self):
+        """amr_kernel (Pallas, interpret on CPU) ~= the jnp lowrank path.
+
+        The kernel keeps f32 error lanes where the jnp training path uses
+        bf16, so agreement is to bf16 precision of the correction term."""
+        got = np.asarray(approx_matmul(self.a, self.b,
+                                       AMRNumerics("amr_kernel", border=8, rank=8)))
+        want = np.asarray(approx_matmul(self.a, self.b,
+                                        AMRNumerics("amr_lowrank", border=8, rank=8)))
+        scale = np.abs(want).mean() + 1e-6
+        assert np.abs(got - want).mean() / scale < 0.02
+
+    def test_kernel_mode_rank0_is_full_lut(self):
+        """rank=0 selects the bit-exact full-table kernel == amr_lut gather."""
+        got = np.asarray(approx_matmul(self.a, self.b,
+                                       AMRNumerics("amr_kernel", border=8, rank=0)))
+        want = np.asarray(matmul_amr_lut(self.a, self.b, border=8))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+    def test_kernel_mode_batched_and_grad(self):
+        a3 = jnp.stack([self.a, self.a * 0.5])
+        out = approx_matmul(a3, self.b, AMRNumerics("amr_kernel", border=8, rank=8))
+        assert out.shape == (2, 4, 8)
+        g = jax.grad(lambda a, b: approx_matmul(
+            a, b, AMRNumerics("amr_kernel", border=8, rank=8)).sum())(self.a, self.b)
+        assert g.shape == self.a.shape  # STE surrogate: plain matmul vjp
+        assert np.isfinite(np.asarray(g)).all()
