@@ -3,7 +3,7 @@ from __future__ import annotations
 
 from pathlib import Path
 
-from repro.launch.roofline import fmt_row, table
+from repro.launch.roofline import table
 
 
 def run(quick: bool = False) -> list[str]:

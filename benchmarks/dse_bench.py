@@ -1,0 +1,185 @@
+"""Engine-in-the-loop DSE sweep: measured (error, energy) Pareto frontier.
+
+For each digit width the whole-multiplier search (``core.dse``) produces k
+candidate cell assignments per border; every candidate is materialized into
+a real ``reduction.Schedule``, Monte-Carlo-measured through ONE fused engine
+dispatch per operand chunk (``engine.compile_candidates``), and costed with
+the component energy model calibrated against the paper's Table II.  The
+run fails (exit 1) unless the measured (|MRED|, energy) frontier keeps at
+least ``MIN_FRONTIER`` non-dominated points per digit width, and every
+candidate's measured metrics are re-derived from a *direct* per-candidate
+engine replay of the exported schedule — ``replay_match`` must be
+bit-identical (float-equal) or the run fails.
+
+  PYTHONPATH=src python -m benchmarks.dse_bench --quick --out BENCH_dse.json
+
+JSON schema (``BENCH_dse.json``)::
+
+  {"schema": "BENCH_dse/v1", "engine": "jax", "quick": bool,
+   "samples": {"<n_digits>": int},
+   "results": [{"n_digits": int, "border": int, "candidate": int,
+                "expected_error": float, "mred": float, "mared": float,
+                "nmed": float, "energy_pj": float, "nodes": int,
+                "complete": bool, "frontier": bool, "replay_match": bool}],
+   "frontier_sizes": {"<n_digits>": int},
+   "nodes_visited": int, "wall_clock_s": float}
+
+``scripts/check_bench.py`` diffs the error fields against the committed
+baseline under ``benchmarks/baselines/`` — accuracy drift fails CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import dse, metrics, mrsd, ppgen, reduction
+from repro.core.energy import DesignFeatures, fit
+
+from .paper_data import TABLE2
+
+MIN_FRONTIER = 3  # acceptance floor: non-dominated points per digit width
+
+# borders swept per digit width (paper Table I/II design points; the last
+# paper border per width is dropped in --quick to bound CI time)
+SWEEP = {
+    False: {4: (12, 15, 18, 21, 24), 8: (45, 48, 50, 53, 55)},
+    True: {4: (12, 15, 18, 21), 8: (45, 48, 50, 53)},
+}
+SAMPLES = {False: {4: 65536, 8: 32768}, True: {4: 16384, 8: 8192}}
+SEARCH_KW = {
+    False: dict(beam_width=32, branch_cap=6, max_nodes=40_000),
+    True: dict(beam_width=16, branch_cap=4, max_nodes=8_000),
+}
+
+
+def calibrated_model():
+    """Energy model fit on ALL of the paper's Table II design points."""
+    feats, area, energy, delay = [], [], [], []
+    for digits, ref in TABLE2.items():
+        for i, border in enumerate(ref["borders"]):
+            feats.append(DesignFeatures.from_schedule(
+                reduction.get_schedule(digits, border)))
+            area.append(ref["area_um2"][i])
+            energy.append(ref["energy_pj"][i])
+            delay.append(ref["delay_ns"][i])
+    return fit(feats, np.asarray(area), np.asarray(energy), np.asarray(delay))
+
+
+def _direct_metrics(schedule, n_samples: int, seed: int, chunk: int) -> dict:
+    """Reference metrics from a DIRECT single-schedule engine replay.
+
+    Same rng protocol as ``dse.measure_candidates`` but each chunk runs the
+    candidate's own compiled replay and the exact schedule's, separately —
+    the oracle the fused-dispatch measurement must match bit for bit.
+    """
+    from repro.core import engine as engine_mod
+
+    n = schedule.n_digits
+    eng = engine_mod.compile_schedule(schedule)
+    exact = engine_mod.get_engine(n, None)
+    acc = metrics.ErrorAccumulator(max_abs=(16.0 ** n * (16.0 / 15.0)) ** 2)
+    rng = np.random.default_rng(seed)
+    remaining = n_samples
+    while remaining > 0:
+        b = min(chunk, remaining)
+        xd = mrsd.random_digits(rng, n, b)
+        yd = mrsd.random_digits(rng, n, b)
+        xb = ppgen.flatten_operand_bits(xd)
+        yb = ppgen.flatten_operand_bits(yd)
+        acc.update_split(*eng.evaluate_split(xb, yb),
+                         *exact.evaluate_split(xb, yb))
+        remaining -= b
+    return acc.result()
+
+
+def run(quick: bool = False, out: str | None = None) -> list[str]:
+    t0 = time.time()
+    rows = []
+    model = calibrated_model()
+    cost = lambda s: model.energy(DesignFeatures.from_schedule(s))  # noqa: E731
+
+    results = []
+    frontier_sizes = {}
+    samples_used = {}
+    total_nodes = 0
+    for n_digits, borders in sorted(SWEEP[quick].items()):
+        n_samples = SAMPLES[quick][n_digits]
+        chunk = min(n_samples, 16384)
+        samples_used[str(n_digits)] = n_samples
+        t_sweep = time.time()
+        points = dse.pareto_sweep(
+            n_digits, borders, k=2 if n_digits <= 4 else 1,
+            n_samples=n_samples, seed=0, chunk=chunk, cost_fn=cost,
+            err_key="mred", **SEARCH_KW[quick])
+        sweep_us = (time.time() - t_sweep) * 1e6
+        for pt in points:
+            direct = _direct_metrics(pt.schedule, n_samples, seed=0, chunk=chunk)
+            replay_match = direct == pt.measured
+            if pt.candidate == 0:
+                # candidates of one border share one search's node total
+                total_nodes += pt.assignment.nodes
+            results.append({
+                "n_digits": pt.n_digits, "border": pt.border,
+                "candidate": pt.candidate,
+                "expected_error": float(pt.assignment.expected_error),
+                "mred": pt.measured["mred"], "mared": pt.measured["mared"],
+                "nmed": pt.measured["nmed"],
+                "energy_pj": round(pt.energy, 6),
+                "nodes": pt.assignment.nodes,
+                "complete": pt.assignment.complete,
+                "frontier": pt.frontier, "replay_match": replay_match,
+            })
+            rows.append(
+                f"dse_{pt.n_digits}d_b{pt.border}_c{pt.candidate},0,"
+                f"mred={pt.measured['mred']:+.3e};mared={pt.measured['mared']:.3e};"
+                f"energy_pj={pt.energy:.2f};frontier={pt.frontier};"
+                f"replay_match={replay_match}")
+        n_front = sum(pt.frontier for pt in points)
+        frontier_sizes[str(n_digits)] = n_front
+        rows.append(f"dse_sweep_{n_digits}d,{sweep_us:.0f},"
+                    f"{len(points)}_candidates;{n_front}_on_frontier")
+
+    artifact = {
+        "schema": "BENCH_dse/v1",
+        "engine": "jax",
+        "quick": quick,
+        "samples": samples_used,
+        "results": results,
+        "frontier_sizes": frontier_sizes,
+        "nodes_visited": total_nodes,
+        "wall_clock_s": round(time.time() - t0, 2),
+    }
+    out = out or os.environ.get("REPRO_BENCH_DSE_OUT", "BENCH_dse.json")
+    with open(out, "w") as f:
+        json.dump(artifact, f, indent=1)
+    rows.append(f"dse_bench_artifact,0,{out}:{len(results)}_results")
+
+    # Hard gates: the artifact is only worth shipping if the frontier is
+    # populated and the fused measurement matches the direct replay exactly.
+    bad_replay = [r for r in results if not r["replay_match"]]
+    if bad_replay:
+        raise RuntimeError(
+            f"fused measurement != direct engine replay for "
+            f"{[(r['n_digits'], r['border'], r['candidate']) for r in bad_replay]}")
+    thin = {d: n for d, n in frontier_sizes.items() if n < MIN_FRONTIER}
+    if thin:
+        raise RuntimeError(
+            f"measured Pareto frontier too thin (< {MIN_FRONTIER}): {thin}")
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None, help="artifact path (BENCH_dse.json)")
+    args = ap.parse_args(argv)
+    for row in run(quick=args.quick, out=args.out):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

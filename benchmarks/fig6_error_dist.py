@@ -14,8 +14,8 @@ import time
 
 import numpy as np
 
-from repro.core import AMRMultiplier, exact_multiplier, relative_errors
-from repro.core import mrsd, ppgen, reduction
+from repro.core import (AMRMultiplier, exact_multiplier, mrsd, ppgen,
+                        reduction, relative_errors)
 from repro.core.baselines import trunc_mul
 
 SPEEDUP_BATCH = 65_536  # acceptance batch for the engine-vs-numpy timing row

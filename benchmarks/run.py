@@ -16,8 +16,9 @@ import sys
 import time
 import traceback
 
-from . import (dryrun_summary, fig4_comparison, fig5_fa_usage, fig6_error_dist,
-               kernel_bench, lowrank_fidelity, table1_accuracy, table2_energy)
+from . import (dryrun_summary, dse_bench, fig4_comparison, fig5_fa_usage,
+               fig6_error_dist, kernel_bench, lowrank_fidelity,
+               table1_accuracy, table2_energy)
 
 MODULES = {
     "table1": table1_accuracy,
@@ -27,6 +28,7 @@ MODULES = {
     "fig6": fig6_error_dist,
     "lowrank": lowrank_fidelity,
     "kernels": kernel_bench,
+    "dse": dse_bench,
     "dryrun": dryrun_summary,
 }
 

@@ -1,15 +1,20 @@
 """Design-space exploration walkthrough (paper §III.B / Fig. 3 + Fig. 5).
 
-Sweeps border columns for a chosen digit count, printing accuracy metrics,
-cell-usage breakdown, and the calibrated cost model's energy estimates —
-i.e. the paper's Tables I/II + Fig. 5 for any configuration you like.
+Runs the engine-in-the-loop DSE for a chosen digit width: the
+whole-multiplier search proposes candidate cell assignments per border,
+each is materialized into a real schedule and Monte-Carlo-measured through
+ONE fused engine dispatch, costed by the energy model's structural proxy,
+and the measured (|MRED|, energy) Pareto frontier is flagged — i.e. the
+paper's Tables I/II + Fig. 5 exploration for any configuration you like,
+scored by measurement instead of the analytic mean alone.
 
   PYTHONPATH=src python examples/dse_explore.py --digits 4 --borders 12 18 24
+  PYTHONPATH=src python examples/dse_explore.py --digits 2 --candidates 3
 """
 import argparse
 
 from repro.core import AMRMultiplier
-from repro.core.energy import DesignFeatures
+from repro.core.dse import pareto_sweep
 
 
 def main() -> None:
@@ -17,24 +22,37 @@ def main() -> None:
     ap.add_argument("--digits", type=int, default=2)
     ap.add_argument("--borders", type=int, nargs="+", default=[6, 7, 8, 9, 10])
     ap.add_argument("--samples", type=int, default=50000)
+    ap.add_argument("--candidates", type=int, default=2,
+                    help="assignments explored per border (k-best)")
     args = ap.parse_args()
 
     exact = AMRMultiplier(args.digits, border=None)
-    fe = DesignFeatures.from_multiplier(exact)
     print(f"exact {args.digits}-digit MRSD multiplier: "
           f"{sum(exact.cell_counts.values())} cells, {exact.n_stages} PPR stages")
 
-    print(f"{'border':>7} {'MRED':>11} {'MARED':>10} {'NMED':>11} "
-          f"{'approx-lit':>10} {'DSE nodes':>9}")
-    for b in args.borders:
-        m = AMRMultiplier(args.digits, border=b)
-        r = m.monte_carlo(args.samples, seed=0)
-        f = DesignFeatures.from_multiplier(m)
-        print(f"{b:7d} {r['mred']:+.3e} {r['mared']:.3e} {r['nmed']:+.3e} "
-              f"{f.approx_cell_literals:10d} {m.schedule.dse_nodes:9d}")
-        usage = m.cell_usage_percent()
-        line = "  ".join(f"{k}:{v:.0f}%" for k, v in usage.items())
-        print(f"        cells: {line}")
+    points = pareto_sweep(
+        args.digits, args.borders, k=args.candidates,
+        n_samples=args.samples, seed=0)
+
+    print(f"{'border':>7} {'cand':>4} {'MRED':>11} {'MARED':>10} {'NMED':>11} "
+          f"{'analytic':>11} {'energy':>8} {'nodes':>9} {'front':>5}")
+    for pt in points:
+        m = pt.measured
+        a = pt.assignment
+        print(f"{pt.border:7d} {pt.candidate:4d} {m['mred']:+.3e} "
+              f"{m['mared']:.3e} {m['nmed']:+.3e} "
+              f"{float(a.expected_error):+.4e} {pt.energy:8.0f} "
+              f"{a.nodes:9d} {'  *' if pt.frontier else '':>5}")
+
+    front = [pt for pt in points if pt.frontier]
+    print(f"\nmeasured (|MRED|, energy) frontier: {len(front)} of "
+          f"{len(points)} candidates (*)")
+    best = min(front, key=lambda pt: abs(pt.measured["mred"]))
+    counts = best.schedule.cell_counts
+    fa = {k: v for k, v in counts.items() if k != "HA"}
+    total = sum(fa.values())
+    usage = "  ".join(f"{k}:{100.0 * v / total:.0f}%" for k, v in sorted(fa.items()))
+    print(f"lowest-error frontier design (border {best.border}): cells {usage}")
 
 
 if __name__ == "__main__":

@@ -8,10 +8,9 @@
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import AMRMultiplier, assign_column, exact_multiplier
 from repro.core.lut import lowrank_factor

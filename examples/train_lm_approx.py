@@ -12,7 +12,6 @@ LM training still converges under approximate matmuls.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import time
 from pathlib import Path

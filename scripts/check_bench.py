@@ -1,0 +1,146 @@
+"""CI bench-regression gate: diff fresh BENCH_*.json against baselines.
+
+Accuracy fields of the benchmark artifacts are *deterministic* — they come
+from bit-exact integer replays over seeded operand streams — so any drift
+is a real numerics regression, not noise.  This script compares a freshly
+produced ``BENCH_kernel.json`` / ``BENCH_dse.json`` against the committed
+baselines under ``benchmarks/baselines/`` and fails the build on:
+
+  * schema or row-set mismatches (missing/extra sweep points),
+  * any change in an error field (``max_abs_err_vs_amr``, ``mred``/``mared``/
+    ``nmed``, ``expected_error``) or exactness flag (``bit_exact_vs_amr``,
+    ``replay_match``, ``frontier``, ``complete``) — float-path kernel rows
+    (low-rank, not bit-exact) compare within ``FLOAT_RTOL`` to tolerate
+    BLAS/SVD last-ulp variation across platforms; integer-exact rows must
+    match exactly.
+
+Timings (``us_per_call``, ``wall_clock_s``), energy-model outputs
+(``energy_pj``) and search-effort counters (``nodes``) are ADVISORY: drift
+is reported but never fails the gate.
+
+  PYTHONPATH=src python scripts/check_bench.py                 # both artifacts
+  python scripts/check_bench.py BENCH_dse.json                 # just one
+  python scripts/check_bench.py --fresh-dir . --baseline-dir benchmarks/baselines
+
+Exit status: 0 clean, 1 regression, 2 usage/IO error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DEFAULT_ARTIFACTS = ("BENCH_kernel.json", "BENCH_dse.json")
+FLOAT_RTOL = 1e-6  # float-path (non-bit-exact) kernel error rows only
+
+
+def _row_key(schema: str, row: dict) -> tuple:
+    if schema.startswith("BENCH_kernel/"):
+        return (row["variant"], row["border"], row["rank"],
+                row["m"], row["n"], row["k"])
+    if schema.startswith("BENCH_dse/"):
+        return (row["n_digits"], row["border"], row["candidate"])
+    raise ValueError(f"unknown artifact schema {schema!r}")
+
+
+def _gated_fields(schema: str, row: dict) -> list[tuple[str, bool]]:
+    """(field, exact) pairs the gate enforces for one row."""
+    if schema.startswith("BENCH_kernel/"):
+        integer_exact = row["variant"] in ("exact", "lut") or row["bit_exact_vs_amr"]
+        return [("bit_exact_vs_amr", True),
+                ("max_abs_err_vs_amr", integer_exact)]
+    return [("expected_error", True), ("mred", True), ("mared", True),
+            ("nmed", True), ("replay_match", True), ("frontier", True),
+            ("complete", True)]
+
+
+def _advisory_fields(schema: str) -> list[str]:
+    if schema.startswith("BENCH_kernel/"):
+        return ["us_per_call"]
+    return ["energy_pj", "nodes"]
+
+
+def _close(a, b) -> bool:
+    if a == b:
+        return True
+    try:
+        return abs(a - b) <= FLOAT_RTOL * max(abs(a), abs(b))
+    except TypeError:
+        return False
+
+
+def compare_artifacts(fresh: dict, baseline: dict, name: str) -> tuple[list[str], list[str]]:
+    """Returns (errors, advisories) for one fresh/baseline artifact pair."""
+    errors: list[str] = []
+    advisories: list[str] = []
+    schema = baseline.get("schema", "")
+    if fresh.get("schema") != schema:
+        return [f"{name}: schema {fresh.get('schema')!r} != baseline {schema!r}"], []
+    for meta in ("samples", "quick", "engine"):
+        if meta in baseline and fresh.get(meta) != baseline[meta]:
+            errors.append(f"{name}: run config {meta}={fresh.get(meta)!r} "
+                          f"!= baseline {baseline[meta]!r}")
+
+    fresh_rows = {_row_key(schema, r): r for r in fresh.get("results", [])}
+    base_rows = {_row_key(schema, r): r for r in baseline.get("results", [])}
+    for key in sorted(base_rows.keys() - fresh_rows.keys(), key=repr):
+        errors.append(f"{name}: sweep point {key} missing from fresh run")
+    for key in sorted(fresh_rows.keys() - base_rows.keys(), key=repr):
+        errors.append(f"{name}: unexpected new sweep point {key} "
+                      f"(refresh the baseline deliberately)")
+
+    for key in sorted(fresh_rows.keys() & base_rows.keys(), key=repr):
+        got, want = fresh_rows[key], base_rows[key]
+        for field, exact in _gated_fields(schema, want):
+            g, w = got.get(field), want.get(field)
+            ok = (g == w) if exact else _close(g, w)
+            if not ok:
+                errors.append(f"{name}: {key} {field} drifted: "
+                              f"{g!r} != baseline {w!r}")
+        for field in _advisory_fields(schema):
+            g, w = got.get(field), want.get(field)
+            if isinstance(g, (int, float)) and isinstance(w, (int, float)) \
+                    and w and abs(g - w) / abs(w) > 0.25:
+                advisories.append(f"{name}: {key} {field} {w} -> {g} "
+                                  f"({(g - w) / w:+.0%}, advisory)")
+    return errors, advisories
+
+
+def check_pair(fresh_path: Path, baseline_path: Path) -> tuple[list[str], list[str]]:
+    if not baseline_path.exists():
+        return [f"baseline {baseline_path} missing — commit one "
+                f"(run the bench and copy the artifact)"], []
+    if not fresh_path.exists():
+        return [f"fresh artifact {fresh_path} missing — did the bench run?"], []
+    fresh = json.loads(fresh_path.read_text())
+    baseline = json.loads(baseline_path.read_text())
+    return compare_artifacts(fresh, baseline, fresh_path.name)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("artifacts", nargs="*", default=None,
+                    help=f"artifact file names (default: {', '.join(DEFAULT_ARTIFACTS)})")
+    ap.add_argument("--fresh-dir", default=".", help="directory of fresh artifacts")
+    ap.add_argument("--baseline-dir", default=str(ROOT / "benchmarks" / "baselines"))
+    args = ap.parse_args(argv)
+
+    names = args.artifacts or list(DEFAULT_ARTIFACTS)
+    all_errors: list[str] = []
+    for artifact in names:
+        errors, advisories = check_pair(
+            Path(args.fresh_dir) / artifact, Path(args.baseline_dir) / artifact)
+        for line in advisories:
+            print(f"  note: {line}")
+        for line in errors:
+            print(f"FAIL: {line}", file=sys.stderr)
+        if not errors:
+            print(f"ok: {artifact} matches baseline")
+        all_errors.extend(errors)
+    return 1 if all_errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

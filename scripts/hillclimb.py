@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """§Perf hillclimb variants — each produces a tagged dry-run artifact.
 
 Cells (chosen per the assignment from the baseline table):
@@ -11,19 +8,24 @@ Cells (chosen per the assignment from the baseline table):
       intra-chunk quadratic work/traffic scales linearly with Q).
   C — most collective-bound: dbrx-132b train_4k (MoE dispatch sharding:
       replicate -> batch-local -> expert-parallel; microbatch count sweep).
+  D — DSE-in-the-loop: like P, but the numerics border is *chosen by the
+      measured Pareto sweep* (repro.core.dse.select_border) under an
+      accuracy budget instead of being hard-coded.
 
   PYTHONPATH=src python scripts/hillclimb.py --variant P.r16
+  PYTHONPATH=src python scripts/hillclimb.py --variant D.tight
   PYTHONPATH=src python scripts/hillclimb.py --list
 """
 import argparse
 import dataclasses
+import os
 import sys
 from pathlib import Path
 
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 
 from repro.configs import get_config  # noqa: E402
-from repro.configs.base import MoEConfig, SSMConfig  # noqa: E402
 from repro.launch.dryrun import run_cell  # noqa: E402
 from repro.numerics import AMRNumerics  # noqa: E402
 
@@ -31,6 +33,25 @@ from repro.numerics import AMRNumerics  # noqa: E402
 def _gemma_amr(rank):
     cfg = get_config("gemma-2b")
     return dataclasses.replace(cfg, numerics=AMRNumerics("amr_lowrank", border=8, rank=rank))
+
+
+def _gemma_amr_dse(max_mared, rank=16):
+    """Pick the cheapest int8 (2-digit) border meeting the accuracy budget.
+
+    The DSE Pareto sweep measures each candidate border's Monte-Carlo MARED
+    through the fused engine dispatch and returns the lowest-energy design
+    under ``max_mared`` — the hillclimb then dry-runs gemma-2b with that
+    border's low-rank numerics.
+    """
+    from repro.core.dse import select_border
+
+    border = select_border(
+        2, (5, 6, 7, 8, 9, 10), max_err=max_mared, err_key="mared",
+        n_samples=20000, beam_width=16, branch_cap=4, max_nodes=8000)
+    print(f"# DSE picked border={border} for mared<={max_mared}")
+    cfg = get_config("gemma-2b")
+    return dataclasses.replace(
+        cfg, numerics=AMRNumerics("amr_lowrank", border=border, rank=rank))
 
 
 def _mamba_chunk(q):
@@ -81,6 +102,9 @@ VARIANTS = {
                     lambda: _moonshot_dispatch("local"), {"microbatch": "4"}),
     "C.dbrx_batch": ("dbrx-132b", "train_4k", lambda: _dbrx_dispatch("batch"), {}),
     "C.dbrx_local": ("dbrx-132b", "train_4k", lambda: _dbrx_dispatch("local"), {}),
+    # --- D: numerics border chosen by the measured-Pareto DSE
+    "D.tight": ("gemma-2b", "train_4k", lambda: _gemma_amr_dse(2e-2), {}),
+    "D.loose": ("gemma-2b", "train_4k", lambda: _gemma_amr_dse(1e-1), {}),
     # gemma-2b exact baseline with fewer microbatches (FSDP re-gather tax)
     "G.mb4": ("gemma-2b", "train_4k", lambda: get_config("gemma-2b"),
               {"microbatch": "4"}),

@@ -16,7 +16,8 @@ def build_table() -> str:
 
     out = ["### Single-pod (16x16) — full roofline",
            "",
-           "| cell | t_comp s | t_mem s | t_coll s | bottleneck | useful | roofline_frac | peak GB | fits |",
+           "| cell | t_comp s | t_mem s | t_coll s | bottleneck | useful "
+           "| roofline_frac | peak GB | fits |",
            "|---|---|---|---|---|---|---|---|---|"]
     for r in sorted(singles, key=lambda r: r["cell"]):
         if "t_compute_s" in r:

@@ -10,7 +10,8 @@ repro.kernels.)
 """
 from .amrmul import AMRMulConfig, AMRMultiplier, exact_multiplier
 from .cells import CELLS, PAPER_AVG_ERR
-from .dse import assign_column
+from .dse import (MultiplierAssignment, assign_column, materialize,
+                  pareto_sweep, search_assignments, select_border)
 from .lut import (Int8LUT, build_int8_lut, build_int8_luts, error_stats,
                   exact_int8_table, lowrank_factor, lut_record)
 from .metrics import ErrorAccumulator, monte_carlo_metrics, relative_errors
@@ -18,6 +19,8 @@ from .metrics import ErrorAccumulator, monte_carlo_metrics, relative_errors
 __all__ = [
     "AMRMulConfig", "AMRMultiplier", "exact_multiplier",
     "CELLS", "PAPER_AVG_ERR", "assign_column",
+    "MultiplierAssignment", "search_assignments", "materialize",
+    "pareto_sweep", "select_border",
     "Int8LUT", "build_int8_lut", "build_int8_luts", "lut_record",
     "exact_int8_table", "lowrank_factor", "error_stats",
     "ErrorAccumulator", "monte_carlo_metrics", "relative_errors",

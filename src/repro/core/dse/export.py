@@ -1,0 +1,88 @@
+"""Materialize DSE assignments into artifacts the rest of the system consumes.
+
+``materialize`` turns a ``MultiplierAssignment`` (a decision record from the
+whole-multiplier search) into a real ``reduction.Schedule`` by replaying the
+recorded choices through ``reduction.build_schedule``'s pluggable assigner —
+so the exported schedule has genuine wiring, feeds ``core.engine`` compiled
+replay, metrics, and the energy model unchanged, and its bookkeeping is
+asserted bit-identical to the search's (``expected_error`` must round-trip
+exactly or the export raises).
+
+``lut_from_schedule`` closes the loop to the kernel path: for a 2-digit
+schedule it produces the 256x256 int32 product table in the exact layout of
+``lut.build_int8_lut`` (LUT[a+128, b+128] = AMR(a, b)), directly consumable
+by ``kernels.amr_matmul.amr_matmul_int8_lut`` and the low-rank factorization.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .. import reduction
+from .multiplier import MultiplierAssignment
+
+
+class _ReplayAssigner:
+    """Replays recorded choices in schedule-builder order, with validation."""
+
+    def __init__(self, assignment: MultiplierAssignment):
+        self._queue = list(assignment.choices)
+        self._idx = 0
+
+    def __call__(self, p, pos_cnt, neg_cnt, _err_scaled, _allow_exact_fa):
+        if (pos_cnt + neg_cnt) // 3 == 0:
+            return []  # no FA consumed: HA/pass remainder, never recorded
+        if self._idx >= len(self._queue):
+            raise AssertionError("assignment has fewer decisions than the schedule")
+        ch = self._queue[self._idx]
+        self._idx += 1
+        if (ch.p, ch.pos_cnt, ch.neg_cnt) != (p, pos_cnt, neg_cnt):
+            raise AssertionError(
+                f"assignment desync at decision {self._idx - 1}: recorded "
+                f"(p={ch.p}, {ch.pos_cnt}+{ch.neg_cnt}) vs builder "
+                f"(p={p}, {pos_cnt}+{neg_cnt})")
+        return list(ch.cells)
+
+    def finish(self) -> None:
+        if self._idx != len(self._queue):
+            raise AssertionError(
+                f"{len(self._queue) - self._idx} recorded decisions unconsumed")
+
+
+def materialize(assignment: MultiplierAssignment) -> reduction.Schedule:
+    """Recorded assignment -> fully wired ``reduction.Schedule``.
+
+    The returned schedule is NOT entered in the ``get_schedule`` cache (that
+    cache is reserved for the default greedy policy); compile it with
+    ``engine.compile_schedule`` / ``engine.compile_candidates`` for batched
+    evaluation.  Raises ``AssertionError`` if the builder's exact expected
+    error disagrees with the search's — the count-level simulation and the
+    wired schedule must agree bit for bit.
+    """
+    replayer = _ReplayAssigner(assignment)
+    sched = reduction.build_schedule(
+        assignment.n_digits, assignment.border, assigner=replayer)
+    replayer.finish()
+    if sched.expected_error != assignment.expected_error:
+        raise AssertionError(
+            f"expected-error mismatch after export: search "
+            f"{assignment.expected_error} vs schedule {sched.expected_error}")
+    return sched
+
+
+def lut_from_schedule(schedule: reduction.Schedule) -> np.ndarray:
+    """(256, 256) int32 product table of a custom 2-digit schedule.
+
+    Same layout/contract as ``lut.build_int8_lut`` (index = value + 128) so
+    the result drops into ``amr_matmul_int8_lut`` and ``lowrank_factor``'s
+    SVD unchanged.  Evaluated through the compiled engine in one batched
+    replay over the shared 2^16-pair operand grid.
+    """
+    if schedule.n_digits != 2:
+        raise ValueError("int8 LUT export requires a 2-digit schedule")
+    from .. import engine as engine_mod  # lazy: keep numpy-only paths jax-free
+    from ..lut import _int8_operand_bits
+
+    xb, yb = _int8_operand_bits()
+    lo, hi = engine_mod.compile_schedule(schedule).evaluate_split(xb, yb)
+    prod = reduction.split_to_float(lo, hi)  # exact: 2-digit products < 2**19
+    return prod.astype(np.int32).reshape(256, 256)

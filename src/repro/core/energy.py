@@ -55,8 +55,11 @@ class DesignFeatures:
     approx_cell_frac: float  # fraction of FA-class cells that are approximate
 
     @classmethod
-    def from_multiplier(cls, m: AMRMultiplier) -> "DesignFeatures":
-        counts = m.cell_counts
+    def from_schedule(cls, schedule) -> "DesignFeatures":
+        """Features straight from a ``reduction.Schedule`` — works for both
+        cached design points and ad-hoc DSE-exported candidate schedules
+        (which never pass through an ``AMRMultiplier``)."""
+        counts = schedule.cell_counts
         exact_lit = sum(CELL_LITERALS[k] * v for k, v in counts.items()
                         if not CELLS[k].approx)
         approx_lit = sum(CELL_LITERALS[k] * v for k, v in counts.items()
@@ -64,15 +67,19 @@ class DesignFeatures:
         fa_total = sum(v for k, v in counts.items() if k != "HA")
         fa_approx = sum(v for k, v in counts.items() if CELLS[k].approx)
         return cls(
-            n_digits=m.cfg.n_digits,
-            border=m.cfg.border,
-            n_pp_gates=m.schedule.layout.n_pp,
+            n_digits=schedule.n_digits,
+            border=schedule.border,
+            n_pp_gates=schedule.layout.n_pp,
             exact_cell_literals=exact_lit,
             approx_cell_literals=approx_lit,
-            n_result_digits=2 * m.cfg.n_digits + 1,
-            n_stages=m.n_stages,
+            n_result_digits=2 * schedule.n_digits + 1,
+            n_stages=schedule.n_stages,
             approx_cell_frac=(fa_approx / fa_total) if fa_total else 0.0,
         )
+
+    @classmethod
+    def from_multiplier(cls, m: AMRMultiplier) -> "DesignFeatures":
+        return cls.from_schedule(m.schedule)
 
     def basis(self) -> np.ndarray:
         """Feature vector for the linear area/energy model."""
@@ -137,6 +144,18 @@ def fit(features: list[DesignFeatures],
             best = (resid, float(coef[0]), float(coef[1]), float(alpha))
     _, d0, ds, alpha = best
     return CostModel(area_coef, energy_coef, d0, ds, alpha)
+
+
+def literal_energy_proxy(schedule) -> float:
+    """Model-free energy surrogate: unit-weight switched-literal count.
+
+    ``basis() @ 1`` — PP gates + cell SOP literals + result digits — tracks
+    switched capacitance without any calibration data, so the DSE Pareto
+    sweep has a deterministic default cost axis.  Pass a calibrated
+    ``CostModel.energy`` instead (``benchmarks.dse_bench`` does) for pJ
+    predictions comparable to the paper's Table II.
+    """
+    return float(DesignFeatures.from_schedule(schedule).basis().sum())
 
 
 def predict(model: CostModel, m: AMRMultiplier) -> dict[str, float]:

@@ -297,6 +297,77 @@ def evaluate_split_many(
     }
 
 
+@dataclasses.dataclass(frozen=True)
+class CandidateBatch:
+    """Several candidate schedules fused into ONE jitted batched evaluator.
+
+    The cached ``evaluate_split_many`` path is keyed on ``(n_digits,
+    border)`` design points; DSE exploration instead produces *ad-hoc*
+    schedules (alternative cell assignments for the same design point) that
+    have no cache key.  ``compile_candidates`` lowers each one and composes
+    the per-candidate replays into a single XLA program, so a Monte-Carlo
+    sweep over many frontier candidates pays the operand bit-slicing and
+    dispatch cost once per batch — the same fusion ``lut.build_int8_luts``
+    gets from ``evaluate_split_many``.  Reuse one ``CandidateBatch`` across
+    chunks of the same batch shape to avoid re-tracing.
+    """
+
+    engines: tuple[CompiledSchedule, ...]
+    _fused: object  # jit'd: (xw, yw) -> tuple of per-candidate limb tensors
+
+    def evaluate_split(
+        self, xbits: np.ndarray, ybits: np.ndarray
+    ) -> list[tuple[np.ndarray, np.ndarray]]:
+        """Shared operand batch -> per-candidate exact (lo, hi) splits."""
+        import jax
+        import jax.numpy as jnp
+
+        batch = xbits.shape[0]
+        # Host-facing (see CompiledSchedule.evaluate_split): run concretely.
+        with jax.ensure_compile_time_eval():
+            xw = jnp.asarray(_pack_lanes(xbits))
+            yw = jnp.asarray(_pack_lanes(ybits))
+            outs = [np.asarray(limbs) for limbs in self._fused(xw, yw)]
+        return [
+            _combine_limbs(limbs, eng.n_limbs, batch)
+            for eng, limbs in zip(self.engines, outs)
+        ]
+
+
+def compile_candidates(schedules) -> CandidateBatch:
+    """Fuse candidate schedules (or pre-compiled engines) into one dispatch.
+
+    Accepts any mix of ``reduction.Schedule`` and ``CompiledSchedule``; all
+    candidates must share the operand width (same ``n_digits``) so a single
+    bit-packed batch feeds every replay.
+    """
+    import jax
+
+    engines = tuple(
+        s if isinstance(s, CompiledSchedule) else compile_schedule(s)
+        for s in schedules
+    )
+    if len({e.schedule.n_digits for e in engines}) > 1:
+        raise ValueError("candidates must share n_digits (one operand batch)")
+    replays = tuple(e._replay for e in engines)
+    return CandidateBatch(
+        engines, jax.jit(lambda xw, yw: tuple(r(xw, yw) for r in replays)))
+
+
+def evaluate_candidates_split(
+    candidates, xbits: np.ndarray, ybits: np.ndarray
+) -> list[tuple[np.ndarray, np.ndarray]]:
+    """One fused engine call over candidate schedules on a shared batch.
+
+    ``candidates`` is a ``CandidateBatch`` or a sequence of schedules (which
+    is compiled on the spot — prefer building the batch once via
+    ``compile_candidates`` when evaluating several operand chunks).
+    """
+    if not isinstance(candidates, CandidateBatch):
+        candidates = compile_candidates(candidates)
+    return candidates.evaluate_split(xbits, ybits)
+
+
 def evaluate_digits_split(
     n_digits: int, border: int | None, x_digits: np.ndarray, y_digits: np.ndarray
 ) -> tuple[np.ndarray, np.ndarray]:

@@ -1,8 +1,6 @@
 """Pure-jnp oracle for the SSD kernel: the model's own chunked implementation."""
 from __future__ import annotations
 
-import jax.numpy as jnp
-
 from repro.models.ssm import ssd_chunked
 
 

@@ -29,7 +29,6 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import lut as lut_lib
 from .quant import quantize_int8, quantize_int8_ste

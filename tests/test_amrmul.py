@@ -1,8 +1,8 @@
 """End-to-end multiplier tests: exactness, approximation trends, Fig. 5 usage."""
 import numpy as np
 import pytest
-from _hyp import given, settings, st
 
+from _hyp import given, settings, st
 from repro.core import amrmul, mrsd
 
 

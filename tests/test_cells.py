@@ -1,9 +1,8 @@
 """Tests for exact/approximate reduction cells (paper §III.A, Fig. 2)."""
-import numpy as np
 import pytest
 
 from repro.core.cells import (
-    CELLS, PAPER_AVG_ERR, APPROX_BY_NEG, logic_complexity, output_polarity,
+    APPROX_BY_NEG, CELLS, PAPER_AVG_ERR, logic_complexity, output_polarity,
 )
 
 _IN3 = [(x, y, z) for x in (0, 1) for y in (0, 1) for z in (0, 1)]

@@ -1,0 +1,138 @@
+"""Bench-regression gate tests: drift in accuracy fields must fail the build."""
+import copy
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "check_bench", Path(__file__).resolve().parents[1] / "scripts" / "check_bench.py")
+check_bench = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(check_bench)
+
+KERNEL = {
+    "schema": "BENCH_kernel/v1", "backend": "cpu", "interpret": True,
+    "engine": "jax",
+    "results": [
+        {"variant": "lut", "border": 4, "rank": None, "m": 128, "n": 128,
+         "k": 128, "bm": 32, "bn": 32, "bk": 32, "us_per_call": 100.0,
+         "max_abs_err_vs_amr": 0.0, "bit_exact_vs_amr": True},
+        {"variant": "lowrank", "border": 4, "rank": 8, "m": 128, "n": 128,
+         "k": 128, "bm": 32, "bn": 32, "bk": 32, "us_per_call": 50.0,
+         "max_abs_err_vs_amr": 123.456, "bit_exact_vs_amr": False},
+    ],
+}
+DSE = {
+    "schema": "BENCH_dse/v1", "engine": "jax", "quick": True,
+    "samples": {"4": 1024},
+    "results": [
+        {"n_digits": 4, "border": 12, "candidate": 0, "expected_error": 113.0,
+         "mred": 1.2e-4, "mared": 3.4e-4, "nmed": -1e-6, "energy_pj": 3.9,
+         "nodes": 1000, "complete": False, "frontier": True,
+         "replay_match": True},
+    ],
+    "frontier_sizes": {"4": 1}, "nodes_visited": 1000, "wall_clock_s": 1.0,
+}
+
+
+def _errors(fresh, baseline):
+    errs, _ = check_bench.compare_artifacts(fresh, baseline, "t.json")
+    return errs
+
+
+class TestCompare:
+    def test_identical_passes(self):
+        assert _errors(copy.deepcopy(KERNEL), KERNEL) == []
+        assert _errors(copy.deepcopy(DSE), DSE) == []
+
+    def test_injected_error_delta_is_caught(self):
+        """The acceptance case: a perturbed error field fails the gate."""
+        bad = copy.deepcopy(DSE)
+        bad["results"][0]["mred"] += 1e-12
+        errs = _errors(bad, DSE)
+        assert len(errs) == 1 and "mred drifted" in errs[0]
+
+    def test_bit_exact_flip_is_caught(self):
+        bad = copy.deepcopy(KERNEL)
+        bad["results"][0]["bit_exact_vs_amr"] = False
+        assert any("bit_exact" in e for e in _errors(bad, KERNEL))
+
+    def test_integer_exact_row_error_must_match_exactly(self):
+        bad = copy.deepcopy(KERNEL)
+        bad["results"][0]["max_abs_err_vs_amr"] = 1e-9
+        assert any("max_abs_err" in e for e in _errors(bad, KERNEL))
+
+    def test_float_path_row_tolerates_last_ulp(self):
+        """Low-rank rows go through BLAS/SVD: tiny cross-platform drift is
+        tolerated, real drift is not."""
+        near = copy.deepcopy(KERNEL)
+        near["results"][1]["max_abs_err_vs_amr"] *= 1 + 1e-9
+        assert _errors(near, KERNEL) == []
+        far = copy.deepcopy(KERNEL)
+        far["results"][1]["max_abs_err_vs_amr"] *= 1.01
+        assert any("max_abs_err" in e for e in _errors(far, KERNEL))
+
+    def test_timing_drift_is_advisory_only(self):
+        slow = copy.deepcopy(KERNEL)
+        slow["results"][0]["us_per_call"] *= 10
+        errs, advisories = check_bench.compare_artifacts(slow, KERNEL, "t")
+        assert errs == [] and any("us_per_call" in a for a in advisories)
+
+    def test_missing_and_extra_rows_fail(self):
+        missing = copy.deepcopy(KERNEL)
+        del missing["results"][0]
+        assert any("missing" in e for e in _errors(missing, KERNEL))
+        extra = copy.deepcopy(DSE)
+        extra["results"].append(dict(DSE["results"][0], border=15))
+        assert any("new sweep point" in e for e in _errors(extra, DSE))
+
+    def test_run_config_mismatch_fails(self):
+        bad = copy.deepcopy(DSE)
+        bad["samples"] = {"4": 2048}
+        assert any("samples" in e for e in _errors(bad, DSE))
+
+    def test_frontier_flip_is_caught(self):
+        bad = copy.deepcopy(DSE)
+        bad["results"][0]["frontier"] = False
+        assert any("frontier" in e for e in _errors(bad, DSE))
+
+
+class TestMain:
+    @pytest.fixture()
+    def dirs(self, tmp_path):
+        fresh = tmp_path / "fresh"
+        base = tmp_path / "base"
+        fresh.mkdir()
+        base.mkdir()
+        for d in (fresh, base):
+            (d / "BENCH_kernel.json").write_text(json.dumps(KERNEL))
+            (d / "BENCH_dse.json").write_text(json.dumps(DSE))
+        return fresh, base
+
+    def test_main_clean(self, dirs):
+        fresh, base = dirs
+        assert check_bench.main(
+            ["--fresh-dir", str(fresh), "--baseline-dir", str(base)]) == 0
+
+    def test_main_fails_on_perturbation(self, dirs):
+        fresh, base = dirs
+        bad = copy.deepcopy(DSE)
+        bad["results"][0]["mared"] *= 2
+        (fresh / "BENCH_dse.json").write_text(json.dumps(bad))
+        assert check_bench.main(
+            ["--fresh-dir", str(fresh), "--baseline-dir", str(base)]) == 1
+
+    def test_main_fails_on_missing_baseline(self, dirs):
+        fresh, base = dirs
+        (base / "BENCH_dse.json").unlink()
+        assert check_bench.main(
+            ["--fresh-dir", str(fresh), "--baseline-dir", str(base)]) == 1
+
+    def test_committed_baselines_exist_and_parse(self):
+        root = Path(__file__).resolve().parents[1]
+        for name in check_bench.DEFAULT_ARTIFACTS:
+            p = root / "benchmarks" / "baselines" / name
+            art = json.loads(p.read_text())
+            assert art["schema"].startswith(("BENCH_kernel/", "BENCH_dse/"))
+            assert art["results"], f"{name} baseline has no rows"

@@ -1,10 +1,9 @@
 """Branch-and-bound DSE tests (paper Fig. 3): optimality + bound admissibility."""
 from fractions import Fraction
 
-import pytest
 from _hyp import given, settings, st
-
 from repro.core import dse
+from repro.core.cells import CELLS
 
 
 class TestOptimality:
@@ -64,3 +63,61 @@ class TestCompensation:
         res = dse.assign_column(24, 6, 0)
         # brute force would be ~6^10 ~ 6e7 nodes; bounded search must be tiny
         assert res.nodes < 50_000
+
+
+class TestColumnProfile:
+    """The exact DP oracle: brute-force parity, then scaling far beyond it."""
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        st.integers(min_value=0, max_value=9),
+        st.integers(min_value=0, max_value=6),
+        st.booleans(),
+    )
+    def test_profile_minimum_matches_brute_force(self, pos, neg, exact_fa):
+        prof = dse.column_profile(pos, neg, exact_fa)
+        assert min(abs(s) for s in prof) == dse.brute_force_column(
+            pos, neg, 0, allow_exact_fa=exact_fa)
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        st.integers(min_value=0, max_value=9),
+        st.integers(min_value=0, max_value=6),
+    )
+    def test_profile_representatives_are_consistent(self, pos, neg):
+        """Each representative's cell errors sum to its profile key and its
+        consumption fits the column."""
+        for s, cells in dse.column_profile(pos, neg, False).items():
+            total = sum(
+                (Fraction(CELLS[name].avg_err).limit_denominator(4)
+                 for name, _, _ in cells), Fraction(0))
+            assert total == s
+            assert sum(dp for _, dp, _ in cells) <= pos
+            assert sum(dn for _, _, dn in cells) <= neg
+            assert len(cells) == (pos + neg) // 3
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        st.integers(min_value=0, max_value=36),
+        st.integers(min_value=0, max_value=18),
+        st.integers(min_value=-16, max_value=16),
+        st.booleans(),
+    )
+    def test_assign_column_optimal_on_wide_grids(self, pos, neg, err4, exact_fa):
+        """Admissibility at paper scale: the Fig. 3 B&B still finds the exact
+        optimum on columns far too tall for ``brute_force_column`` (6^18
+        leaves) — the DP profile is the tractable exhaustive oracle."""
+        err_in = Fraction(err4, 4)
+        res = dse.assign_column(pos, neg, err_in, allow_exact_fa=exact_fa)
+        prof = dse.column_profile(pos, neg, exact_fa)
+        assert abs(res.err) == min(abs(err_in + s) for s in prof)
+
+    def test_topk_head_matches_optimum(self):
+        for pos, neg, err in [(7, 4, 0), (12, 3, Fraction(1, 2)), (5, 5, -1)]:
+            top = dse.assign_column_topk(pos, neg, err, k=3)
+            best = dse.assign_column(pos, neg, err)
+            assert abs(top[0].err) == abs(best.err)
+            # ranked: non-decreasing |final error|, pairwise distinct cells
+            errs = [abs(t.err) for t in top]
+            assert errs == sorted(errs)
+            assert len({t.err for t in top}) == len(top)

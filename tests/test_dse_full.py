@@ -1,0 +1,176 @@
+"""Whole-multiplier DSE tests: shape invariance, export round-trip, Pareto.
+
+The contract chain under test: the count-level search simulation must agree
+with the wired schedule builder bit for bit (greedy parity + materialize
+round-trip), the fused candidate dispatch must agree with a direct engine
+replay bit for bit (measured-error identity), and the exported 2-digit LUT
+must agree with the production LUT builder.
+"""
+from fractions import Fraction
+
+import numpy as np
+import pytest
+
+from repro.core import dse, mrsd, ppgen, reduction
+
+jax = pytest.importorskip("jax")
+
+from repro.core import engine as engine_mod  # noqa: E402
+from repro.core import lut as lut_lib  # noqa: E402
+
+DESIGNS = [(2, 6), (2, 8), (4, 12), (4, 18)]
+FAST_SEARCH = dict(beam_width=12, branch_cap=4, max_nodes=4000)
+
+
+class TestShapeAndGreedyParity:
+    @pytest.mark.parametrize("n_digits,border", DESIGNS)
+    def test_shape_matches_schedule_structure(self, n_digits, border):
+        """compile_shape's skeleton reproduces the real schedule's stage
+        count and FA/HA totals (heights are choice-independent)."""
+        events = dse.compile_shape(n_digits, border)
+        sched = reduction.get_schedule(n_digits, border)
+        assert max(ev.stage for ev in events) + 1 == sched.n_stages
+        n_fa = sum(ev.n_fa for ev in events)
+        n_ha = sum(1 for ev in events if ev.height - 3 * ev.n_fa == 2)
+        counts = sched.cell_counts
+        assert n_fa == sum(v for k, v in counts.items() if k != "HA")
+        assert n_ha == counts.get("HA", 0)
+
+    @pytest.mark.parametrize("n_digits,border", DESIGNS)
+    def test_greedy_parity_with_build_schedule(self, n_digits, border):
+        """The simulated greedy composition IS the builder's policy."""
+        g = dse.greedy_assignment(n_digits, border)
+        sched = reduction.get_schedule(n_digits, border)
+        assert g.expected_error == sched.expected_error
+
+    @pytest.mark.parametrize("n_digits,border", DESIGNS)
+    def test_greedy_materializes_to_the_cached_schedule(self, n_digits, border):
+        sched = dse.materialize(dse.greedy_assignment(n_digits, border))
+        ref = reduction.get_schedule(n_digits, border)
+        assert sched.cell_counts == ref.cell_counts
+        assert sched.expected_error == ref.expected_error
+        assert sched.n_stages == ref.n_stages
+
+
+class TestSearch:
+    @pytest.mark.parametrize("n_digits,border", DESIGNS)
+    def test_search_never_worse_than_greedy(self, n_digits, border):
+        res = dse.search_assignments(n_digits, border, k=2, **FAST_SEARCH)
+        g = dse.greedy_assignment(n_digits, border)
+        assert abs(res[0].expected_error) <= abs(g.expected_error)
+
+    def test_search_results_distinct_and_sorted(self):
+        res = dse.search_assignments(4, 15, k=3, **FAST_SEARCH)
+        errs = [abs(a.expected_error) for a in res]
+        assert errs == sorted(errs)
+        assert len({a.choices for a in res}) == len(res)
+
+    def test_exact_design_has_no_decisions(self):
+        res = dse.search_assignments(2, None)
+        assert res == [dse.MultiplierAssignment(2, None, (), Fraction(0), 0, True)]
+
+    def test_round_trip_expected_error(self):
+        """Export asserts the search's exact error against the builder's."""
+        for a in dse.search_assignments(4, 12, k=2, **FAST_SEARCH):
+            sched = dse.materialize(a)
+            assert sched.expected_error == a.expected_error
+            assert sched.border == a.border and sched.n_digits == a.n_digits
+
+    def test_materialize_rejects_desynced_assignment(self):
+        a = dse.greedy_assignment(2, 8)
+        bad_first = dse.ColumnChoice(
+            a.choices[0].stage, a.choices[0].p,
+            a.choices[0].pos_cnt + 1, a.choices[0].neg_cnt,
+            a.choices[0].cells)
+        bad = dse.MultiplierAssignment(
+            a.n_digits, a.border, (bad_first,) + a.choices[1:],
+            a.expected_error, a.nodes, a.complete)
+        with pytest.raises(AssertionError, match="desync"):
+            dse.materialize(bad)
+
+
+class TestMeasuredIdentity:
+    """Acceptance: fused-dispatch measured error == direct engine replay."""
+
+    def test_fused_candidates_match_direct_replay_bitwise(self):
+        cands = dse.search_assignments(2, 7, k=2, **FAST_SEARCH)
+        scheds = [dse.materialize(a) for a in cands]
+        batch = engine_mod.compile_candidates(scheds)
+        rng = np.random.default_rng(7)
+        xb = ppgen.flatten_operand_bits(mrsd.random_digits(rng, 2, 2048))
+        yb = ppgen.flatten_operand_bits(mrsd.random_digits(rng, 2, 2048))
+        fused = batch.evaluate_split(xb, yb)
+        for sched, (flo, fhi) in zip(scheds, fused):
+            dlo, dhi = engine_mod.compile_schedule(sched).evaluate_split(xb, yb)
+            np.testing.assert_array_equal(flo, dlo)
+            np.testing.assert_array_equal(fhi, dhi)
+
+    def test_candidate_batch_rejects_mixed_widths(self):
+        with pytest.raises(ValueError, match="n_digits"):
+            engine_mod.compile_candidates(
+                [reduction.get_schedule(2, None), reduction.get_schedule(4, None)])
+
+    def test_measured_metrics_match_direct_protocol(self):
+        """measure_candidates (fused) equals a hand-rolled direct-replay
+        accumulation over the same seeded operand stream, float-for-float."""
+        from repro.core.metrics import ErrorAccumulator
+
+        sched = dse.materialize(dse.greedy_assignment(2, 8))
+        got = dse.measure_candidates(
+            [sched], n_samples=4096, seed=3, chunk=2048)[0]
+        eng = engine_mod.compile_schedule(sched)
+        exact = engine_mod.get_engine(2, None)
+        acc = ErrorAccumulator(max_abs=(16.0 ** 2 * (16.0 / 15.0)) ** 2)
+        rng = np.random.default_rng(3)
+        for _ in range(2):
+            xb = ppgen.flatten_operand_bits(mrsd.random_digits(rng, 2, 2048))
+            yb = ppgen.flatten_operand_bits(mrsd.random_digits(rng, 2, 2048))
+            acc.update_split(*eng.evaluate_split(xb, yb),
+                             *exact.evaluate_split(xb, yb))
+        assert got == acc.result()
+
+
+class TestLUTExport:
+    def test_greedy_export_matches_production_lut(self):
+        sched = dse.materialize(dse.greedy_assignment(2, 8))
+        np.testing.assert_array_equal(
+            dse.lut_from_schedule(sched), lut_lib.build_int8_lut(8, engine="jax"))
+
+    def test_exact_schedule_export_is_exact_table(self):
+        sched = dse.materialize(dse.greedy_assignment(2, None))
+        np.testing.assert_array_equal(
+            dse.lut_from_schedule(sched), lut_lib.exact_int8_table())
+
+    def test_rejects_non_int8_widths(self):
+        with pytest.raises(ValueError, match="2-digit"):
+            dse.lut_from_schedule(reduction.get_schedule(4, 12))
+
+
+class TestPareto:
+    def test_pareto_front_flags(self):
+        errs = [1.0, 2.0, 3.0, 0.5, 3.0]
+        costs = [3.0, 2.0, 1.0, 9.0, 1.5]
+        #       ok   ok   ok   ok   dominated by (3.0, 1.0)
+        assert dse.pareto_front(errs, costs) == [True, True, True, True, False]
+
+    def test_pareto_front_keeps_duplicates(self):
+        assert dse.pareto_front([1.0, 1.0], [2.0, 2.0]) == [True, True]
+
+    def test_sweep_points_carry_frontier_and_measured(self):
+        pts = dse.pareto_sweep(
+            2, [6, 8], k=1, n_samples=2048, chunk=2048, **FAST_SEARCH)
+        assert len(pts) == 2
+        assert all("mred" in pt.measured for pt in pts)
+        # monotone design family: wider approximate region, cheaper + worse
+        assert pts[0].energy > pts[1].energy
+        assert sum(pt.frontier for pt in pts) >= 1
+
+    def test_select_border_respects_budget(self):
+        b = dse.select_border(
+            2, (6, 8), max_err=1.0, err_key="mared",
+            n_samples=2048, chunk=2048, **FAST_SEARCH)
+        assert b == 8  # loose budget -> cheapest explored design
+        with pytest.raises(ValueError, match="meets"):
+            dse.select_border(
+                2, (6, 8), max_err=1e-9, err_key="mared",
+                n_samples=2048, chunk=2048, **FAST_SEARCH)

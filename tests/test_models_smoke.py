@@ -8,10 +8,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _markers import requires_modern_jax
 from repro.configs import ARCH_NAMES, get_reduced_config
 from repro.models import decode_step, forward, init_cache, init_params
-
-from _markers import requires_modern_jax
 
 pytestmark = requires_modern_jax
 

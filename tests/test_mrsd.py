@@ -1,8 +1,8 @@
 """Property + unit tests for the MRSD number system."""
 import numpy as np
 import pytest
-from _hyp import given, settings, st
 
+from _hyp import given, st
 from repro.core import mrsd
 
 

@@ -5,11 +5,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _markers import requires_modern_jax
 from repro.configs import get_reduced_config
 from repro.models import decode_step, forward, init_params
 from repro.models.model import _encoder_forward, prefill_with_cache
-
-from _markers import requires_modern_jax
 
 pytestmark = requires_modern_jax
 

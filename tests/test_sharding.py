@@ -5,11 +5,10 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from _markers import requires_modern_jax
 from repro.configs import get_config
 from repro.launch import specs as specs_lib
 from repro.parallel import sharding as shard_lib
-
-from _markers import requires_modern_jax
 
 
 def _mesh_1x1(names=("data", "model")):

@@ -1,18 +1,14 @@
 """Substrate tests: checkpointing, data pipeline, fault tolerance, optimizers."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
+from _markers import requires_modern_jax
 from repro.ckpt import CheckpointManager, restore_tree, save_tree
 from repro.ckpt.checkpoint import latest_step
 from repro.data import SyntheticLM
-from repro.optim import adamw_init, adamw_update, adafactor_init, adafactor_update
+from repro.optim import adafactor_init, adafactor_update, adamw_init, adamw_update
 from repro.runtime import FaultTolerantLoop, StragglerMonitor
-
-from _markers import requires_modern_jax
 
 
 class TestCheckpoint:

@@ -8,15 +8,13 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
+from _markers import requires_modern_jax
 from repro.configs.base import ModelConfig
 from repro.data import SyntheticLM
 from repro.numerics import AMRNumerics
 from repro.runtime import FaultTolerantLoop
 from repro.train.steps import make_train_state, make_train_step
-
-from _markers import requires_modern_jax
 
 TINY = ModelConfig(
     name="tiny", family="dense", n_layers=2, d_model=64, n_heads=4,
