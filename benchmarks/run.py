@@ -18,7 +18,7 @@ import traceback
 
 from . import (dryrun_summary, dse_bench, fig4_comparison, fig5_fa_usage,
                fig6_error_dist, kernel_bench, lowrank_fidelity,
-               table1_accuracy, table2_energy)
+               table1_accuracy, table2_energy, train_numerics_bench)
 
 MODULES = {
     "table1": table1_accuracy,
@@ -29,6 +29,7 @@ MODULES = {
     "lowrank": lowrank_fidelity,
     "kernels": kernel_bench,
     "dse": dse_bench,
+    "train": train_numerics_bench,
     "dryrun": dryrun_summary,
 }
 

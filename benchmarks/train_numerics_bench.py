@@ -1,0 +1,209 @@
+"""Training under the numerics policy: loss trajectories per AMR mode.
+
+The bridge benchmark from circuit to workload (ROADMAP "open a new
+workload" axis): one tiny LM is trained under ``exact`` / ``amr_noise`` /
+``amr_inject`` / ``amr_lut`` numerics — plus ``amr_inject`` driving a raw
+DSE candidate schedule straight from the whole-multiplier search (no
+materialized LUT) — and the loss trajectories are recorded side by side.
+Before training, the injected path is asserted BIT-CONSISTENT with the
+``amr_lut`` gather oracle at oracle-feasible shapes (max_abs_diff must be
+exactly 0.0), for both the default schedule and the DSE candidate; the run
+fails (exit 1) on any mismatch or non-finite loss/grad.
+
+  PYTHONPATH=src python -m benchmarks.train_numerics_bench --quick \
+      --out BENCH_train.json
+
+JSON schema (``BENCH_train.json``)::
+
+  {"schema": "BENCH_train/v1", "engine": "jax", "quick": bool,
+   "steps": int, "border": int,
+   "config": {"d_model": int, "d_ff": int, "vocab": int, "n_layers": int,
+              "seq": int, "batch": int},
+   "results": [{"mode": str, "schedule": "default"|"dse_c0",
+                "border": int|null, "first_loss": float, "final_loss": float,
+                "loss_finite": bool, "grad_finite": bool,
+                "params_finite": bool, "s_per_step": float},
+               {"mode": "consistency", "case": str, "bit_exact": bool,
+                "max_abs_diff": float}],
+   "wall_clock_s": float}
+
+``scripts/check_bench.py`` gates the bit-consistency / finiteness fields
+exactly against ``benchmarks/baselines/BENCH_train.json``; losses and
+timings are advisory (they ride on float matmuls whose last ulp is
+platform/BLAS dependent, unlike the integer-exact consistency fields).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+MODES = ("exact", "amr_noise", "amr_inject", "amr_lut")
+BORDER = 8
+STEPS = {False: 12, True: 6}
+CFG = dict(d_model=32, d_ff=64, vocab=64, n_layers=2, seq=16, batch=4)
+
+
+def _tiny_config(numerics):
+    from repro.configs.base import ModelConfig
+
+    return ModelConfig(
+        name="train-bench-tiny", family="dense", n_layers=CFG["n_layers"],
+        d_model=CFG["d_model"], n_heads=2, n_kv_heads=2, head_dim=16,
+        d_ff=CFG["d_ff"], vocab=CFG["vocab"], mlp_act="swiglu",
+        tie_embeddings=True, remat="none", numerics=numerics)
+
+
+def _dse_candidate_ref():
+    """Register a whole-multiplier search candidate for injection."""
+    from repro.core.dse import materialize, search_assignments
+    from repro.numerics import injection
+
+    cands = search_assignments(2, BORDER, k=1, beam_width=8, branch_cap=4,
+                               max_nodes=2000)
+    sched = materialize(cands[0])
+    return injection.register_schedule(sched, name="bench:dse_c0"), sched
+
+
+def _consistency_case(name, numerics, reference_table):
+    """Injected matmul vs the LUT-gather oracle on an oracle-feasible shape."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.numerics import approx_matmul
+    from repro.numerics.quant import quantize_int8
+
+    a = jax.random.normal(jax.random.PRNGKey(11), (8, 24), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(12), (24, 12), jnp.float32)
+    got = np.asarray(jax.jit(lambda a, b: approx_matmul(a, b, numerics))(a, b))
+    qa, sa = quantize_int8(a, axis=-1)
+    qb, sb = quantize_int8(b, axis=0)
+    ia = np.asarray(qa, np.int64) + 128
+    ib = np.asarray(qb, np.int64) + 128
+    acc = reference_table[ia[:, :, None], ib[None, :, :]].sum(-2).astype(np.float32)
+    want = acc * np.asarray(sa) * np.asarray(sb)
+    diff = float(np.abs(got - want).max())
+    return {"mode": "consistency", "case": name,
+            "bit_exact": bool(np.array_equal(got, want)),
+            "max_abs_diff": diff}
+
+
+def _train_arm(mode, schedule_tag, numerics, steps):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data import SyntheticLM
+    from repro.train.steps import make_grads_step, make_train_state, make_train_step
+
+    cfg = _tiny_config(numerics)
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=CFG["seq"], batch=CFG["batch"],
+                       seed=0, noise=0.02)
+    state = make_train_state(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, peak_lr=5e-3, warmup=2, total_steps=steps),
+                   donate_argnums=(0,))
+    losses = []
+    t0 = time.time()
+    last_b = None
+    for i in range(steps):
+        last_b = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+        state, m = step(state, last_b)
+        losses.append(float(m["loss"]))
+        if i == 0:
+            t0 = time.time()  # exclude the compile step from the timing
+    s_per_step = (time.time() - t0) / max(steps - 1, 1)
+
+    def _finite(tree):
+        return all(bool(np.isfinite(np.asarray(g, np.float32)).all())
+                   for g in jax.tree_util.tree_leaves(tree))
+
+    # actual gradients of the TRAINED params (not just the updated params):
+    # the STE backward of every approximate mode must stay finite
+    grads = jax.jit(make_grads_step(cfg))(state.params, last_b)
+    return {
+        "mode": mode, "schedule": schedule_tag,
+        "border": None if mode == "exact" else BORDER,
+        "first_loss": round(losses[0], 6), "final_loss": round(losses[-1], 6),
+        "loss_finite": bool(np.isfinite(losses).all()),
+        "grad_finite": _finite(grads),
+        "params_finite": _finite(state.params),
+        "s_per_step": round(s_per_step, 4),
+    }, losses
+
+
+def run(quick: bool = False, out: str | None = None) -> list[str]:
+    from repro.core import lut
+    from repro.core.dse import lut_from_schedule
+    from repro.numerics import AMRNumerics
+
+    t0 = time.time()
+    steps = STEPS[quick]
+    rows: list[str] = []
+    results: list[dict] = []
+
+    dse_ref, dse_sched = _dse_candidate_ref()
+
+    # -- bit-consistency: injected path vs the LUT-gather oracle -----------
+    results.append(_consistency_case(
+        f"inject_vs_lut_b{BORDER}", AMRNumerics("amr_inject", border=BORDER),
+        lut.build_int8_lut(BORDER)))
+    results.append(_consistency_case(
+        "inject_dse_vs_lut_export",
+        AMRNumerics("amr_inject", border=BORDER, schedule_ref=dse_ref),
+        lut_from_schedule(dse_sched)))
+
+    # -- loss trajectories --------------------------------------------------
+    arms = [(m, "default", AMRNumerics(m, border=BORDER)) for m in MODES]
+    arms.append(("amr_inject", "dse_c0",
+                 AMRNumerics("amr_inject", border=BORDER, schedule_ref=dse_ref)))
+    for mode, tag, nm in arms:
+        t_arm = time.time()
+        row, losses = _train_arm(mode, tag, nm, steps)
+        results.append(row)
+        rows.append(
+            f"train_{mode}_{tag},{row['s_per_step'] * 1e6:.0f},"
+            f"loss={losses[0]:.4f}->{losses[-1]:.4f};finite={row['loss_finite']}"
+            f";wall={time.time() - t_arm:.1f}s")
+
+    artifact = {
+        "schema": "BENCH_train/v1",
+        "engine": "jax",
+        "quick": quick,
+        "steps": steps,
+        "border": BORDER,
+        "config": CFG,
+        "results": results,
+        "wall_clock_s": round(time.time() - t0, 2),
+    }
+    out = out or os.environ.get("REPRO_BENCH_TRAIN_OUT", "BENCH_train.json")
+    with open(out, "w") as f:
+        json.dump(artifact, f, indent=1)
+    rows.append(f"train_bench_artifact,0,{out}:{len(results)}_results")
+
+    # Hard gates: consistency must be bit-exact, every arm finite.
+    bad = [r["case"] for r in results
+           if r.get("mode") == "consistency"
+           and (not r["bit_exact"] or r["max_abs_diff"] != 0.0)]
+    if bad:
+        raise RuntimeError(f"amr_inject disagrees with the amr_lut oracle: {bad}")
+    sick = [(r["mode"], r["schedule"]) for r in results
+            if r.get("mode") != "consistency"
+            and not (r["loss_finite"] and r["grad_finite"] and r["params_finite"])]
+    if sick:
+        raise RuntimeError(f"non-finite loss/grad under numerics mode(s): {sick}")
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None, help="artifact path (BENCH_train.json)")
+    args = ap.parse_args(argv)
+    for row in run(quick=args.quick, out=args.out):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,6 +8,18 @@ LM training still converges under approximate matmuls.
 
   PYTHONPATH=src python examples/train_lm_approx.py --steps 60
   PYTHONPATH=src python examples/train_lm_approx.py --steps 300 --preset 100m
+
+``--modes`` picks the numerics arms; ``amr_inject`` trains under the EXACT
+per-product error of the design (on-device replay, docs/numerics.md), and
+``--dse-candidate`` additionally trains a whole-multiplier-search candidate
+schedule through the same injection path (no LUT export needed):
+
+  PYTHONPATH=src python examples/train_lm_approx.py --steps 20 --preset tiny \
+      --modes exact,amr_inject --dse-candidate
+
+(the injected replay is exact-but-heavy on CPU — use ``--preset tiny`` for
+interactive amr_inject runs; benchmarks/train_numerics_bench.py is the
+CI-sized version of this comparison).
 """
 from __future__ import annotations
 
@@ -25,6 +37,10 @@ from repro.numerics import AMRNumerics
 from repro.train.steps import make_train_state, make_train_step
 
 PRESETS = {
+    # amr_inject-friendly CPU demo: the on-device replay pays ~hundreds of
+    # bitwise ops per product, so keep M*K*N small for interactive runs
+    "tiny": dict(n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+                 d_ff=64, vocab=64, batch=4, seq=16),
     # CPU-friendly smoke (runs in minutes)
     "small": dict(n_layers=4, d_model=128, n_heads=4, n_kv_heads=4, head_dim=32,
                   d_ff=512, vocab=512, batch=8, seq=128),
@@ -65,16 +81,44 @@ def main() -> None:
     ap.add_argument("--preset", default="small", choices=list(PRESETS))
     ap.add_argument("--border", type=int, default=8)
     ap.add_argument("--rank", type=int, default=16)
+    ap.add_argument("--modes", default="exact,amr_lowrank",
+                    help="comma list from: exact, amr_lowrank, amr_noise, amr_inject")
+    ap.add_argument("--dse-candidate", action="store_true",
+                    help="also train a DSE-searched candidate schedule via amr_inject")
     ap.add_argument("--out", default="experiments/train_approx.json")
     args = ap.parse_args()
     p = PRESETS[args.preset]
 
+    from repro.numerics import MODES
+
+    modes = [m.strip() for m in args.modes.split(",") if m.strip()]
+    unknown = [m for m in modes if m not in MODES]
+    if unknown:
+        ap.error(f"unknown numerics mode(s) {unknown}; choose from {list(MODES)}")
+
+    arms: list[tuple[str, AMRNumerics]] = []
+    for mode in modes:
+        if mode == "exact":
+            arms.append(("exact", AMRNumerics("exact")))
+        elif mode == "amr_lowrank":
+            arms.append((f"amr_lowrank(b={args.border},r={args.rank})",
+                         AMRNumerics("amr_lowrank", border=args.border, rank=args.rank)))
+        else:  # amr_noise / amr_inject (default schedule for the border)
+            arms.append((f"{mode}(b={args.border})",
+                         AMRNumerics(mode, border=args.border)))
+    if args.dse_candidate:
+        # a raw searched assignment, trained with NO materialized LUT
+        from repro.core.dse import materialize, search_assignments
+        from repro.numerics import injection
+
+        cand = search_assignments(2, args.border, k=1, beam_width=16,
+                                  branch_cap=4, max_nodes=4000)[0]
+        ref = injection.register_schedule(materialize(cand))
+        arms.append((f"amr_inject(dse,b={args.border})",
+                     AMRNumerics("amr_inject", border=args.border, schedule_ref=ref)))
+
     results = {}
-    for label, numerics in [
-        ("exact", AMRNumerics("exact")),
-        (f"amr_lowrank(b={args.border},r={args.rank})",
-         AMRNumerics("amr_lowrank", border=args.border, rank=args.rank)),
-    ]:
+    for label, numerics in arms:
         print(f"== training with {label} numerics ==")
         losses, dt = run(make_cfg(p, numerics), args.steps, p["batch"], p["seq"])
         results[label] = {"losses": losses, "seconds": dt}
@@ -82,11 +126,12 @@ def main() -> None:
 
     Path(args.out).parent.mkdir(parents=True, exist_ok=True)
     Path(args.out).write_text(json.dumps(results, indent=1))
-    exact_final = results["exact"]["losses"][-1]
+    exact = results.get("exact")
     for label, r in results.items():
         drop = r["losses"][0] - r["losses"][-1]
-        print(f"{label}: final {r['losses'][-1]:.3f} (drop {drop:.3f}; "
-              f"gap to exact {r['losses'][-1] - exact_final:+.3f})")
+        gap = (f"; gap to exact {r['losses'][-1] - exact['losses'][-1]:+.3f}"
+               if exact else "")
+        print(f"{label}: final {r['losses'][-1]:.3f} (drop {drop:.3f}{gap})")
 
 
 if __name__ == "__main__":

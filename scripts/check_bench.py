@@ -3,8 +3,9 @@
 Accuracy fields of the benchmark artifacts are *deterministic* — they come
 from bit-exact integer replays over seeded operand streams — so any drift
 is a real numerics regression, not noise.  This script compares a freshly
-produced ``BENCH_kernel.json`` / ``BENCH_dse.json`` against the committed
-baselines under ``benchmarks/baselines/`` and fails the build on:
+produced ``BENCH_kernel.json`` / ``BENCH_dse.json`` / ``BENCH_train.json``
+against the committed baselines under ``benchmarks/baselines/`` and fails
+the build on:
 
   * schema or row-set mismatches (missing/extra sweep points),
   * any change in an error field (``max_abs_err_vs_amr``, ``mred``/``mared``/
@@ -12,13 +13,19 @@ baselines under ``benchmarks/baselines/`` and fails the build on:
     ``replay_match``, ``frontier``, ``complete``) — float-path kernel rows
     (low-rank, not bit-exact) compare within ``FLOAT_RTOL`` to tolerate
     BLAS/SVD last-ulp variation across platforms; integer-exact rows must
-    match exactly.
+    match exactly,
+  * for the train artifact: any flip of the bit-consistency fields
+    (``bit_exact``, ``max_abs_diff`` — the amr_inject-vs-amr_lut oracle
+    agreement is integer-derived, so it must be EXACTLY 0.0) or of the
+    ``loss_finite`` / ``grad_finite`` flags.
 
-Timings (``us_per_call``, ``wall_clock_s``), energy-model outputs
-(``energy_pj``) and search-effort counters (``nodes``) are ADVISORY: drift
-is reported but never fails the gate.
+Timings (``us_per_call``, ``s_per_step``, ``wall_clock_s``), energy-model
+outputs (``energy_pj``), search-effort counters (``nodes``) and train LOSS
+trajectories (``first_loss``/``final_loss`` ride on float matmuls whose
+last ulp is platform/BLAS dependent) are ADVISORY: drift is reported but
+never fails the gate.
 
-  PYTHONPATH=src python scripts/check_bench.py                 # both artifacts
+  PYTHONPATH=src python scripts/check_bench.py                 # all artifacts
   python scripts/check_bench.py BENCH_dse.json                 # just one
   python scripts/check_bench.py --fresh-dir . --baseline-dir benchmarks/baselines
 
@@ -32,7 +39,7 @@ import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
-DEFAULT_ARTIFACTS = ("BENCH_kernel.json", "BENCH_dse.json")
+DEFAULT_ARTIFACTS = ("BENCH_kernel.json", "BENCH_dse.json", "BENCH_train.json")
 FLOAT_RTOL = 1e-6  # float-path (non-bit-exact) kernel error rows only
 
 
@@ -42,6 +49,9 @@ def _row_key(schema: str, row: dict) -> tuple:
                 row["m"], row["n"], row["k"])
     if schema.startswith("BENCH_dse/"):
         return (row["n_digits"], row["border"], row["candidate"])
+    if schema.startswith("BENCH_train/"):
+        return (row["mode"], row.get("case"), row.get("schedule"),
+                row.get("border"))
     raise ValueError(f"unknown artifact schema {schema!r}")
 
 
@@ -51,6 +61,12 @@ def _gated_fields(schema: str, row: dict) -> list[tuple[str, bool]]:
         integer_exact = row["variant"] in ("exact", "lut") or row["bit_exact_vs_amr"]
         return [("bit_exact_vs_amr", True),
                 ("max_abs_err_vs_amr", integer_exact)]
+    if schema.startswith("BENCH_train/"):
+        if row.get("mode") == "consistency":
+            # integer-derived oracle agreement: exactly equal or regressed
+            return [("bit_exact", True), ("max_abs_diff", True)]
+        return [("loss_finite", True), ("grad_finite", True),
+                ("params_finite", True)]
     return [("expected_error", True), ("mred", True), ("mared", True),
             ("nmed", True), ("replay_match", True), ("frontier", True),
             ("complete", True)]
@@ -59,6 +75,8 @@ def _gated_fields(schema: str, row: dict) -> list[tuple[str, bool]]:
 def _advisory_fields(schema: str) -> list[str]:
     if schema.startswith("BENCH_kernel/"):
         return ["us_per_call"]
+    if schema.startswith("BENCH_train/"):
+        return ["first_loss", "final_loss", "s_per_step"]
     return ["energy_pj", "nodes"]
 
 
@@ -78,7 +96,7 @@ def compare_artifacts(fresh: dict, baseline: dict, name: str) -> tuple[list[str]
     schema = baseline.get("schema", "")
     if fresh.get("schema") != schema:
         return [f"{name}: schema {fresh.get('schema')!r} != baseline {schema!r}"], []
-    for meta in ("samples", "quick", "engine"):
+    for meta in ("samples", "quick", "engine", "steps", "border", "config"):
         if meta in baseline and fresh.get(meta) != baseline[meta]:
             errors.append(f"{name}: run config {meta}={fresh.get(meta)!r} "
                           f"!= baseline {baseline[meta]!r}")

@@ -27,6 +27,13 @@ samples, so
 per design point per process, shared across benchmarks, the LUT builder
 and the DSE scripts.  Parity with the numpy path is asserted bit-for-bit
 in tests/test_engine.py.
+
+``compile_injector`` re-targets the same replay at *traced* operands: a
+``CompiledInjector`` evaluates exact AMR products for int8 operand indices
+inside an ambient jit trace (value->bits constant gather, in-trace lane
+packing, int32 limb combine) — the substrate of the ``amr_inject`` numerics
+mode (on-device error injection in training steps, any schedule including
+DSE candidates; see docs/numerics.md).
 """
 from __future__ import annotations
 
@@ -168,8 +175,16 @@ class CompiledSchedule:
         return reduction.split_to_float(*self.evaluate_split(xbits, ybits))
 
 
-def compile_schedule(schedule: reduction.Schedule) -> CompiledSchedule:
-    """Lower a schedule to dense tensors and build its jitted evaluator."""
+def _build_replay(schedule: reduction.Schedule):
+    """Lower a schedule to dense tensors; returns ``(replay_fn, n_limbs)``.
+
+    ``replay_fn`` is a *traceable* (un-jitted) function ``(xw, yw) ->
+    (n_limbs, batch) int32 limbs`` over bit-sliced uint32 operand words.  It
+    closes over concrete jnp constants, so it can either be ``jax.jit``-ed
+    directly (``compile_schedule``) or inlined into a larger traced
+    computation (``compile_injector`` — the on-device error-injection path
+    calls it on operand words packed *inside* a jit trace).
+    """
     import jax
     import jax.numpy as jnp
 
@@ -233,6 +248,14 @@ def compile_schedule(schedule: reduction.Schedule) -> CompiledSchedule:
         limbs = jnp.einsum("fl,fsw->lws", weights, bits)  # (n_limbs, words, 32)
         return limbs.reshape(n_limbs, -1) - offsets[:, None]
 
+    return replay, n_limbs
+
+
+def compile_schedule(schedule: reduction.Schedule) -> CompiledSchedule:
+    """Lower a schedule to dense tensors and build its jitted evaluator."""
+    import jax
+
+    replay, n_limbs = _build_replay(schedule)
     return CompiledSchedule(
         schedule=schedule,
         n_limbs=n_limbs,
@@ -375,3 +398,134 @@ def evaluate_digits_split(
     xb = ppgen.flatten_operand_bits(x_digits)
     yb = ppgen.flatten_operand_bits(y_digits)
     return get_engine(n_digits, border).evaluate_split(xb, yb)
+
+
+# --------------------------------------------------------------------------
+# On-device error injection: the replay as a traceable product evaluator
+# --------------------------------------------------------------------------
+
+def _int8_value_bit_table(n_digits: int) -> np.ndarray:
+    """(256, 5N) stored operand bits of every int8 value (index = v + 128).
+
+    MRSD encoding is data-independent, so the 256 possible int8 operand
+    values enumerate the whole bit-pattern domain of the injection path —
+    a gather from this table turns *traced* quantized operands into replay
+    inputs without ever leaving the device.
+    """
+    from . import mrsd
+
+    vals = np.arange(-128, 128, dtype=np.int64)
+    return ppgen.flatten_operand_bits(mrsd.encode(vals, n_digits)).astype(np.uint32)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledInjector:
+    """A schedule lowered to a *traceable* per-sample product evaluator.
+
+    Unlike ``CompiledSchedule`` (host-facing: numpy operands in, exact int64
+    split out), the injector is built to run INSIDE an ambient jit trace —
+    ``train_step``/``serve_step`` call it on traced int8 operands, so a
+    matmul under ``amr_inject`` numerics sees the exact per-product error of
+    the actual quantized activations/weights on-device, for ANY
+    ``reduction.Schedule`` (including DSE candidate assignments that have no
+    materialized 256x256 LUT).  Operand bits are gathered from a constant
+    value->bits table, lane-packed with jnp ops, replayed bit-sliced, and
+    limb-combined entirely in int32; ``compile_injector`` rejects schedules
+    whose dynamic range does not fit int32 (n_digits <= 3 in practice).
+    """
+
+    schedule: reduction.Schedule
+    n_limbs: int
+    _replay: object       # traceable: (n_opbits, words) uint32 x2 -> int32 limbs
+    _value_bits: object   # (256, n_opbits) uint32 jnp constant
+
+    def products(self, ia, ib):
+        """Exact AMR products of int8 operand *indices* (value + 128).
+
+        ``ia``/``ib``: equal-shape traced int arrays in [0, 256).  Returns
+        int32 products of the same shape — bit-identical to gathering from
+        the schedule's 256x256 LUT, but computed by replaying the reduction
+        circuit on-device for exactly the requested operand pairs.
+        """
+        import jax.numpy as jnp
+
+        ia = jnp.asarray(ia)
+        ib = jnp.asarray(ib)
+        if ia.shape != ib.shape:
+            raise ValueError(f"operand index shapes differ: {ia.shape} vs {ib.shape}")
+        shape = ia.shape
+        xb = self._value_bits[ia.reshape(-1)]
+        yb = self._value_bits[ib.reshape(-1)]
+        flat = self.products_from_bits(xb, yb)
+        return flat.reshape(shape)
+
+    def products_from_bits(self, xbits, ybits):
+        """(batch, 5N) traced stored-bit arrays -> (batch,) int32 products."""
+        import jax.numpy as jnp
+
+        batch = xbits.shape[0]
+        limbs = self._replay(_pack_lanes_traced(xbits), _pack_lanes_traced(ybits))
+        out = limbs[0]
+        if self.n_limbs > 1:
+            out = out + limbs[1] * (1 << _LIMB_BITS)
+        return out[:batch].astype(jnp.int32)
+
+
+def _pack_lanes_traced(bits):
+    """Traceable ``_pack_lanes``: (batch, n_bits) {0,1} -> (n_bits, words).
+
+    Same lane layout as the host packer (sample ``w * 32 + k`` in bit ``k``
+    of word ``w``), built from shifts + a disjoint-bit sum so it lowers to a
+    handful of vector ops inside the surrounding trace.
+    """
+    import jax.numpy as jnp
+
+    batch, n_bits = bits.shape
+    pad = (-batch) % _LANE_BITS
+    if pad:
+        bits = jnp.pad(bits, ((0, pad), (0, 0)))
+    lanes = bits.T.reshape(n_bits, -1, _LANE_BITS).astype(jnp.uint32)
+    shifts = jnp.arange(_LANE_BITS, dtype=jnp.uint32)
+    return jnp.sum(lanes << shifts[None, None, :], axis=-1, dtype=jnp.uint32)
+
+
+def compile_injector(schedule: reduction.Schedule) -> CompiledInjector:
+    """Lower a schedule to the on-device injection evaluator.
+
+    Raises ``ValueError`` when the schedule's output dynamic range exceeds
+    int32 (the injector combines limbs in int32 so it can run under jit
+    without ``jax_enable_x64``); every 2-digit (int8-operand) schedule —
+    cached design points and DSE exports alike — is comfortably inside.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    pos = schedule.final_positions.astype(np.int64)
+    bound = int(np.sum(np.int64(1) << pos))  # >= max |value| + |offset|
+    if 2 * bound >= 2**31:
+        raise ValueError(
+            f"schedule dynamic range (sum 2**pos = {bound}) exceeds int32; "
+            f"on-device injection supports n_digits <= 3 "
+            f"(got n_digits={schedule.n_digits})")
+    replay, n_limbs = _build_replay(schedule)
+    with jax.ensure_compile_time_eval():  # concrete even under an ambient trace
+        value_bits = jnp.asarray(_int8_value_bit_table(schedule.n_digits))
+    return CompiledInjector(
+        schedule=schedule, n_limbs=n_limbs, _replay=replay, _value_bits=value_bits)
+
+
+@lru_cache(maxsize=64)
+def get_injector(n_digits: int, border: int | None) -> CompiledInjector:
+    """Process-level injector cache for the default design points."""
+    return compile_injector(reduction.get_schedule(n_digits, border))
+
+
+def inject_products(schedule, ia, ib):
+    """Exact AMR products for traced int8 operand indices (value + 128).
+
+    ``schedule`` is a ``CompiledInjector`` or a raw ``reduction.Schedule``
+    (compiled on the spot — hold a ``CompiledInjector`` when calling from a
+    hot loop; ``numerics.injection`` keeps the policy-level cache).
+    """
+    inj = schedule if isinstance(schedule, CompiledInjector) else compile_injector(schedule)
+    return inj.products(ia, ib)

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config, get_reduced_config
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, mesh_context
 from repro.models import init_params
 from repro.numerics import AMRNumerics
 from repro.train.steps import make_serve_step
@@ -45,7 +45,8 @@ def main(argv=None) -> None:
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--numerics", default=None,
-                    choices=["exact", "amr_lut", "amr_lowrank", "amr_noise", "amr_kernel"],
+                    choices=["exact", "amr_lut", "amr_inject", "amr_lowrank",
+                             "amr_noise", "amr_kernel"],
                     help="override the config's matmul numerics policy")
     ap.add_argument("--border", type=int, default=8,
                     help="approximate border column for the AMR modes")
@@ -72,7 +73,7 @@ def main(argv=None) -> None:
     prompts = jnp.asarray(rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)),
                           jnp.int32)
 
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         params = init_params(cfg, jax.random.PRNGKey(args.seed))
         print(f"[serve] prefilling {args.batch}x{args.prompt_len}")
         cache = prefill_into_cache(cfg, params, prompts,

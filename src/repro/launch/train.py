@@ -21,7 +21,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.registry import get_config, get_reduced_config
 from repro.data import SyntheticLM
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, mesh_context
 from repro.parallel import sharding as shard_lib
 from repro.runtime import FaultTolerantLoop, Heartbeat
 from repro.train.steps import make_train_state, make_train_step
@@ -41,7 +41,8 @@ def main(argv=None) -> None:
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--microbatch", type=int, default=0)
     ap.add_argument("--numerics", default=None,
-                    choices=[None, "exact", "amr_lut", "amr_lowrank", "amr_noise"])
+                    choices=[None, "exact", "amr_lut", "amr_inject",
+                             "amr_lowrank", "amr_noise", "amr_kernel"])
     ap.add_argument("--border", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -60,7 +61,7 @@ def main(argv=None) -> None:
                                microbatch=args.microbatch or None)
 
     def make_state():
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             state = make_train_state(cfg, jax.random.PRNGKey(args.seed))
             specs = shard_lib.param_specs(mesh, state, cfg)
             sh = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
@@ -79,7 +80,7 @@ def main(argv=None) -> None:
 
     def step_fn(state, batch):
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             return jitted(state, batch)
 
     hb = Heartbeat(Path(args.ckpt_dir) / "heartbeat.json")

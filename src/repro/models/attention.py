@@ -43,9 +43,9 @@ def init_attention(key, d_model, n_heads, n_kv, head_dim, qk_norm, dtype) -> dic
 def _project_qkv(params, x, n_heads, n_kv, head_dim, positions, theta, qk_norm,
                  numerics: AMRNumerics | None, eps: float):
     B, S, _ = x.shape
-    q = dense(x, params["wq"], numerics).reshape(B, S, n_heads, head_dim)
-    k = dense(x, params["wk"], numerics).reshape(B, S, n_kv, head_dim)
-    v = dense(x, params["wv"], numerics).reshape(B, S, n_kv, head_dim)
+    q = dense(x, params["wq"], numerics, site="attn.wq").reshape(B, S, n_heads, head_dim)
+    k = dense(x, params["wk"], numerics, site="attn.wk").reshape(B, S, n_kv, head_dim)
+    v = dense(x, params["wv"], numerics, site="attn.wv").reshape(B, S, n_kv, head_dim)
     if qk_norm:
         q = rms_norm(q, params["q_norm"], eps)
         k = rms_norm(k, params["k_norm"], eps)
@@ -112,7 +112,7 @@ def attend_full(
         probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
         out = _gqa_combine(probs, v)
     out = pin(out.reshape(B, S, n_heads * head_dim), "batch", None, "tp")
-    return pin(dense(out, params["wo"], numerics), "batch", None, None)
+    return pin(dense(out, params["wo"], numerics, site="attn.wo"), "batch", None, None)
 
 
 _Q_CHUNK = 2048            # query-block size for chunked attention
@@ -212,7 +212,7 @@ def attend_decode(
         scores = pin(scores, "batch", None, None, "tp")
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     out = _gqa_combine(probs, new_v).reshape(B, 1, n_heads * head_dim)
-    out = pin(dense(out, params["wo"], numerics), "batch", None, None)
+    out = pin(dense(out, params["wo"], numerics, site="attn.wo"), "batch", None, None)
     return out, KVCache(new_k, new_v, pos + 1)
 
 
@@ -234,19 +234,19 @@ def attend_cross(params, x, enc_kv: tuple[jnp.ndarray, jnp.ndarray], *,
                  numerics: AMRNumerics | None = None) -> jnp.ndarray:
     """Decoder cross-attention; enc_kv = precomputed (K, V) over encoder frames."""
     B, S, _ = x.shape
-    q = dense(x, params["wq"], numerics).reshape(B, S, n_heads, head_dim)
+    q = dense(x, params["wq"], numerics, site="xattn.wq").reshape(B, S, n_heads, head_dim)
     k, v = enc_kv
     scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) / (head_dim ** 0.5)
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     out = jnp.einsum("bhst,bthd->bshd", probs, v).reshape(B, S, n_heads * head_dim)
-    return dense(out, params["wo"], numerics)
+    return dense(out, params["wo"], numerics, site="xattn.wo")
 
 
 def encode_cross_kv(params, enc_out: jnp.ndarray, *, n_heads: int, head_dim: int,
                     numerics: AMRNumerics | None = None):
     B, T, _ = enc_out.shape
-    k = dense(enc_out, params["wk"], numerics).reshape(B, T, n_heads, head_dim)
-    v = dense(enc_out, params["wv"], numerics).reshape(B, T, n_heads, head_dim)
+    k = dense(enc_out, params["wk"], numerics, site="xattn.wk").reshape(B, T, n_heads, head_dim)
+    v = dense(enc_out, params["wv"], numerics, site="xattn.wv").reshape(B, T, n_heads, head_dim)
     return k, v
 
 
@@ -285,7 +285,7 @@ def attend_prefill(
         probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
         out = _gqa_combine(probs, v)
     out = pin(out.reshape(B, S, n_heads * head_dim), "batch", None, "tp")
-    out = pin(dense(out, params["wo"], numerics), "batch", None, None)
+    out = pin(dense(out, params["wo"], numerics, site="attn.wo"), "batch", None, None)
 
     C = capacity
     if window > 0 and C <= S:

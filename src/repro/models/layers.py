@@ -14,12 +14,19 @@ from repro.numerics.approx_matmul import approx_matmul
 from repro.parallel.constraints import pin
 
 
-def dense(x: jnp.ndarray, w: jnp.ndarray, numerics: AMRNumerics | None = None) -> jnp.ndarray:
-    """x: (..., K) @ w: (K, N) under the numerics policy."""
+def dense(x: jnp.ndarray, w: jnp.ndarray, numerics: AMRNumerics | None = None,
+          site: str | None = None) -> jnp.ndarray:
+    """x: (..., K) @ w: (K, N) under the numerics policy.
+
+    ``site`` is the static call-site label (e.g. ``"mlp.w_gate"``) that,
+    with the ambient step/layer scope (repro.numerics.context), decorrelates
+    the amr_noise PRNG stream — without it every projection in every layer
+    would draw the identical noise tensor.
+    """
     if numerics is None or numerics.is_exact():
         return jnp.matmul(x, w)
     shape = x.shape
-    out = approx_matmul(x.reshape(-1, shape[-1]), w, numerics)
+    out = approx_matmul(x.reshape(-1, shape[-1]), w, numerics, site=site)
     return out.reshape(*shape[:-1], w.shape[-1]).astype(x.dtype)
 
 
@@ -64,8 +71,8 @@ def init_mlp(key: jax.Array, d_model: int, d_ff: int, act: str, dtype) -> dict:
 
 
 def mlp(params: dict, x: jnp.ndarray, act: str, numerics: AMRNumerics | None) -> jnp.ndarray:
-    g = pin(dense(x, params["w_gate"], numerics), "batch", None, "tp")
-    u = pin(dense(x, params["w_up"], numerics), "batch", None, "tp")
+    g = pin(dense(x, params["w_gate"], numerics, site="mlp.w_gate"), "batch", None, "tp")
+    u = pin(dense(x, params["w_up"], numerics, site="mlp.w_up"), "batch", None, "tp")
     if act == "geglu":
         h = jax.nn.gelu(g) * u
     elif act == "swiglu":
@@ -74,7 +81,7 @@ def mlp(params: dict, x: jnp.ndarray, act: str, numerics: AMRNumerics | None) ->
         h = jax.nn.gelu(g + u)  # degenerate non-gated form keeps param tree uniform
     else:
         raise ValueError(act)
-    return pin(dense(h, params["w_down"], numerics), "batch", None, None)
+    return pin(dense(h, params["w_down"], numerics, site="mlp.w_down"), "batch", None, None)
 
 
 # -------------------------------------------------------------- embeddings

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.numerics import numerics_scope
 from repro.parallel.constraints import pin
 
 from . import attention as attn
@@ -215,18 +216,24 @@ def _stack_to_tree(trees: list):
 
 def _encoder_forward(cfg: ModelConfig, params, frames, numerics):
     """Whisper-style encoder over precomputed frame embeddings (stub frontend)."""
-    def enc_body(x, lp):
-        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
-        x = x + attn.attend_full(lp["attn"], h, n_heads=cfg.n_heads,
-                                 n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
-                                 theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
-                                 window=0, causal=False, numerics=numerics,
-                                 eps=cfg.norm_eps)
-        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
-        return x + mlp(lp["mlp"], h, cfg.mlp_act, numerics), None
+    def enc_body(carry, lp):
+        x, g = carry
+        # encoder layers get their own numerics-PRNG coordinate space so
+        # amr_noise draws decorrelate from the decoder stack (layer < 0)
+        with numerics_scope(layer=-1 - g):
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            x = x + attn.attend_full(lp["attn"], h, n_heads=cfg.n_heads,
+                                     n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+                                     theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+                                     window=0, causal=False, numerics=numerics,
+                                     eps=cfg.norm_eps)
+            h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            x = x + mlp(lp["mlp"], h, cfg.mlp_act, numerics)
+        return (x, g + 1), None
 
-    x, _ = jax.lax.scan(enc_body, frames, params["encoder"],
-                        unroll=cfg.encoder_layers if cfg.unroll_layers else 1)
+    (x, _), _ = jax.lax.scan(enc_body, (frames, jnp.zeros((), jnp.int32)),
+                             params["encoder"],
+                             unroll=cfg.encoder_layers if cfg.unroll_layers else 1)
     return rms_norm(x, params["enc_norm"], cfg.norm_eps)
 
 
@@ -255,23 +262,28 @@ def forward(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
     shared = params.get("shared")
 
     def group_body(carry, group_params):
-        x, aux = carry
+        # g rides in the carry so scanned group copies see distinct layer
+        # indices for the numerics PRNG scope (re-established inside the
+        # body: a remat re-trace rebuilds identical noise keys)
+        x, aux, g = carry
         for i, kind in enumerate(kinds):
             lp = group_params[i]
-            ekv = None
-            if enc_kv is not None and "xattn" in lp:
-                ekv = attn.encode_cross_kv(lp["xattn"], enc_out, n_heads=cfg.n_heads,
-                                           head_dim=cfg.head_dim, numerics=numerics)
-            x, a = _apply_layer_full(cfg, lp, x, kind, shared, ekv, numerics)
+            with numerics_scope(layer=g * len(kinds) + i):
+                ekv = None
+                if enc_kv is not None and "xattn" in lp:
+                    ekv = attn.encode_cross_kv(lp["xattn"], enc_out, n_heads=cfg.n_heads,
+                                               head_dim=cfg.head_dim, numerics=numerics)
+                x, a = _apply_layer_full(cfg, lp, x, kind, shared, ekv, numerics)
             aux = aux + a
-        return (x, aux), None
+        return (x, aux, g + 1), None
 
     body = group_body
     if cfg.remat == "block":
         body = jax.checkpoint(group_body, prevent_cse=False)
 
-    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params["layers"],
-                               unroll=n_repeat if cfg.unroll_layers else 1)
+    (x, aux, _), _ = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        params["layers"], unroll=n_repeat if cfg.unroll_layers else 1)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     if last_only:
         x = x[:, -1:, :]
@@ -302,11 +314,31 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> Any:
     return jax.tree.map(lambda l: jnp.broadcast_to(l[None], (n_repeat,) + l.shape), group)
 
 
+def _cache_position(cache: Any):
+    """Logical decode position from the first KVCache in the tree (None for
+    pure-SSM caches, which carry no position) — folds into the numerics
+    PRNG scope so amr_noise draws decorrelate across generated tokens."""
+    found: list = []
+
+    def is_kv(node):
+        if isinstance(node, attn.KVCache):
+            found.append(node.length)
+            return True
+        return False
+
+    jax.tree_util.tree_flatten(cache, is_leaf=is_kv)
+    if not found:
+        return None
+    length = found[0]  # stacked over n_repeat: every copy holds the same pos
+    return length.reshape(-1)[0] if getattr(length, "ndim", 0) else length
+
+
 def decode_step(cfg: ModelConfig, params: dict, token: jnp.ndarray, cache: Any,
                 enc_out: jnp.ndarray | None = None) -> tuple[jnp.ndarray, Any]:
     """One serving step: token (B, 1) int32 -> (logits (B, 1, V), new cache)."""
     kinds, _ = group_structure(cfg)
     numerics = cfg.numerics
+    pos = _cache_position(cache)
     x = embed(params["embed"], token)
     shared = params.get("shared")
 
@@ -321,11 +353,13 @@ def decode_step(cfg: ModelConfig, params: dict, token: jnp.ndarray, cache: Any,
         new_caches = []
         for i, kind in enumerate(kinds):
             lp = group_params[i]
-            ekv = None
-            if enc_out is not None and "xattn" in lp:
-                ekv = attn.encode_cross_kv(lp["xattn"], enc_out, n_heads=cfg.n_heads,
-                                           head_dim=cfg.head_dim, numerics=numerics)
-            x, c = _apply_layer_decode(cfg, lp, x, kind, group_cache[i], shared, ekv, numerics)
+            with numerics_scope(step=pos, layer=g * len(kinds) + i):
+                ekv = None
+                if enc_out is not None and "xattn" in lp:
+                    ekv = attn.encode_cross_kv(lp["xattn"], enc_out, n_heads=cfg.n_heads,
+                                               head_dim=cfg.head_dim, numerics=numerics)
+                x, c = _apply_layer_decode(cfg, lp, x, kind, group_cache[i], shared,
+                                           ekv, numerics)
             new_caches.append(c)
         cache_all = jax.tree.map(
             lambda full, new: jax.lax.dynamic_update_index_in_dim(full, new, g, 0),
@@ -405,21 +439,24 @@ def prefill_with_cache(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
 
     shared = params.get("shared")
 
-    def group_body(x, group_params):
+    def group_body(carry, group_params):
+        x, g = carry
         caches = []
         for i, kind in enumerate(kinds):
             lp = group_params[i]
-            ekv = None
-            if enc_out is not None and "xattn" in lp:
-                ekv = attn.encode_cross_kv(lp["xattn"], enc_out, n_heads=cfg.n_heads,
-                                           head_dim=cfg.head_dim, numerics=numerics)
-            x, c = _apply_layer_prefill(cfg, lp, x, kind, capacity, shared, ekv,
-                                        numerics)
+            with numerics_scope(layer=g * len(kinds) + i):
+                ekv = None
+                if enc_out is not None and "xattn" in lp:
+                    ekv = attn.encode_cross_kv(lp["xattn"], enc_out, n_heads=cfg.n_heads,
+                                               head_dim=cfg.head_dim, numerics=numerics)
+                x, c = _apply_layer_prefill(cfg, lp, x, kind, capacity, shared, ekv,
+                                            numerics)
             caches.append(c)
-        return x, tuple(caches)
+        return (x, g + 1), tuple(caches)
 
-    x, cache = jax.lax.scan(group_body, x, params["layers"],
-                            unroll=n_repeat if cfg.unroll_layers else 1)
+    (x, _), cache = jax.lax.scan(group_body, (x, jnp.zeros((), jnp.int32)),
+                                 params["layers"],
+                                 unroll=n_repeat if cfg.unroll_layers else 1)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
     logits = unembed(x[:, -1:, :], head)

@@ -113,11 +113,14 @@ def _moe_forward_global(
         ybuf = out_pin(jnp.einsum("ecf,efd->ecd", h, params["w_down"]))  # (E, C, D)
     else:
         from repro.numerics.approx_matmul import approx_matmul
-        per_e = jax.vmap(lambda xe, we: approx_matmul(xe, we, numerics))
-        g = per_e(xbuf, params["w_gate"])
-        u = per_e(xbuf, params["w_up"])
+
+        def per_e(site):
+            return jax.vmap(lambda xe, we: approx_matmul(xe, we, numerics, site=site))
+
+        g = per_e("moe.w_gate")(xbuf, params["w_gate"])
+        u = per_e("moe.w_up")(xbuf, params["w_up"])
         h = (jax.nn.silu(g) * u).astype(x.dtype)
-        ybuf = per_e(h, params["w_down"]).astype(x.dtype)              # (E, C, D)
+        ybuf = per_e("moe.w_down")(h, params["w_down"]).astype(x.dtype)  # (E, C, D)
 
     ypad = jnp.pad(ybuf, ((0, 0), (0, 1), (0, 0)))                     # slot C reads 0
     gathered = ypad[fid_s, slot] * (fw_s * keep)[:, None].astype(x.dtype)

@@ -147,11 +147,11 @@ def ssm_forward(params: dict, xin: jnp.ndarray, d_model: int, cfg: SSMConfig,
     """Full-sequence Mamba2 mixer (train / prefill)."""
     dims = ssm_dims(d_model, cfg)
     d_inner, H = dims["d_inner"], dims["n_heads"]
-    z = pin(dense(xin, params["wz"], numerics), "batch", None, "tp")
-    x = pin(dense(xin, params["wx"], numerics), "batch", None, "tp")
-    b = pin(dense(xin, params["wb"], numerics), "batch", None, None)
-    c = pin(dense(xin, params["wc"], numerics), "batch", None, None)
-    dt = dense(xin, params["wdt"], numerics)
+    z = pin(dense(xin, params["wz"], numerics, site="ssm.wz"), "batch", None, "tp")
+    x = pin(dense(xin, params["wx"], numerics, site="ssm.wx"), "batch", None, "tp")
+    b = pin(dense(xin, params["wb"], numerics, site="ssm.wb"), "batch", None, None)
+    c = pin(dense(xin, params["wc"], numerics, site="ssm.wc"), "batch", None, None)
+    dt = dense(xin, params["wdt"], numerics, site="ssm.wdt")
 
     x = _causal_conv(x, params["conv_x"], params["conv_bias_x"])
     b = _causal_conv(b, params["conv_b"], params["conv_bias_b"])
@@ -167,7 +167,7 @@ def ssm_forward(params: dict, xin: jnp.ndarray, d_model: int, cfg: SSMConfig,
     y = pin(y.reshape(B_, S, d_inner), "batch", None, "tp").astype(xin.dtype)
     y = y * jax.nn.silu(z)
     y = rms_norm(y, params["norm"], eps)
-    return pin(dense(y, params["out_proj"], numerics), "batch", None, None)
+    return pin(dense(y, params["out_proj"], numerics, site="ssm.out_proj"), "batch", None, None)
 
 
 # ------------------------------------------------------------------ decode
@@ -205,11 +205,11 @@ def ssm_decode(params: dict, xin: jnp.ndarray, state: SSMState, d_model: int,
     dims = ssm_dims(d_model, cfg)
     d_inner, H = dims["d_inner"], dims["n_heads"]
     x1 = xin[:, 0]
-    z = dense(x1, params["wz"], numerics)
-    x = dense(x1, params["wx"], numerics)
-    b = dense(x1, params["wb"], numerics)
-    c = dense(x1, params["wc"], numerics)
-    dt = dense(x1, params["wdt"], numerics)
+    z = dense(x1, params["wz"], numerics, site="ssm.wz")
+    x = dense(x1, params["wx"], numerics, site="ssm.wx")
+    b = dense(x1, params["wb"], numerics, site="ssm.wb")
+    c = dense(x1, params["wc"], numerics, site="ssm.wc")
+    dt = dense(x1, params["wdt"], numerics, site="ssm.wdt")
 
     x, ring_x = _conv_step(state.conv_x, x, params["conv_x"], params["conv_bias_x"])
     b, ring_b = _conv_step(state.conv_b, b, params["conv_b"], params["conv_bias_b"])
@@ -232,7 +232,7 @@ def ssm_decode(params: dict, xin: jnp.ndarray, state: SSMState, d_model: int,
     y = y.reshape(Bt, d_inner).astype(xin.dtype)
     y = y * jax.nn.silu(z)
     y = rms_norm(y, params["norm"], eps)
-    out = dense(y, params["out_proj"], numerics)[:, None, :]
+    out = dense(y, params["out_proj"], numerics, site="ssm.out_proj")[:, None, :]
     return out, SSMState(ring_x, ring_b, ring_c, h_new)
 
 
@@ -243,11 +243,11 @@ def ssm_prefill(params: dict, xin: jnp.ndarray, d_model: int, cfg: SSMConfig,
     (prefill -> decode handoff): final SSM state + conv ring tails."""
     dims = ssm_dims(d_model, cfg)
     d_inner, H = dims["d_inner"], dims["n_heads"]
-    z = pin(dense(xin, params["wz"], numerics), "batch", None, "tp")
-    x_raw = pin(dense(xin, params["wx"], numerics), "batch", None, "tp")
-    b_raw = pin(dense(xin, params["wb"], numerics), "batch", None, None)
-    c_raw = pin(dense(xin, params["wc"], numerics), "batch", None, None)
-    dt = dense(xin, params["wdt"], numerics)
+    z = pin(dense(xin, params["wz"], numerics, site="ssm.wz"), "batch", None, "tp")
+    x_raw = pin(dense(xin, params["wx"], numerics, site="ssm.wx"), "batch", None, "tp")
+    b_raw = pin(dense(xin, params["wb"], numerics, site="ssm.wb"), "batch", None, None)
+    c_raw = pin(dense(xin, params["wc"], numerics, site="ssm.wc"), "batch", None, None)
+    dt = dense(xin, params["wdt"], numerics, site="ssm.wdt")
 
     W = cfg.conv_width
     def tail(t):  # last W-1 raw inputs, zero-padded for short sequences
@@ -269,6 +269,6 @@ def ssm_prefill(params: dict, xin: jnp.ndarray, d_model: int, cfg: SSMConfig,
     y = pin(y.reshape(B_, S, d_inner), "batch", None, "tp").astype(xin.dtype)
     y = y * jax.nn.silu(z)
     y = rms_norm(y, params["norm"], eps)
-    out = pin(dense(y, params["out_proj"], numerics), "batch", None, None)
+    out = pin(dense(y, params["out_proj"], numerics, site="ssm.out_proj"), "batch", None, None)
     state = SSMState(tail(x_raw), tail(b_raw), tail(c_raw), h_final)
     return out, state

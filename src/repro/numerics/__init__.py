@@ -1,5 +1,7 @@
 """Numerics policy: how the paper's approximate multiplier enters NN matmuls."""
-from .approx_matmul import AMRNumerics, approx_matmul
+from .approx_matmul import MODES, AMRNumerics, approx_matmul
+from .context import current_scope, noise_key, numerics_scope
 from .quant import dequantize, quantize_int8
 
-__all__ = ["AMRNumerics", "approx_matmul", "quantize_int8", "dequantize"]
+__all__ = ["AMRNumerics", "MODES", "approx_matmul", "quantize_int8",
+           "dequantize", "numerics_scope", "current_scope", "noise_key"]

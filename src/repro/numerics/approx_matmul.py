@@ -1,16 +1,27 @@
 """Approximate matmul modes — the AMR-MUL as a NN numerics policy.
 
-Modes (DESIGN.md §2/§3):
+Modes (DESIGN.md §2/§3; docs/numerics.md has the full dispatch table):
   exact        — jnp.einsum in the requested dtype (baseline).
   amr_lut      — bit-exact AMR-MUL semantics per scalar product: int8
                  quantize, per-element gather from the 256x256 LUT,
                  accumulate in int32. Paper-faithful; VPU-bound on TPU.
+                 The ORACLE the other integer paths are asserted against
+                 (small shapes only: it materializes (.., M, K, N)).
+  amr_inject   — on-device error injection: the SAME bit-exact products as
+                 amr_lut, computed by replaying the reduction circuit
+                 (engine.CompiledInjector) on the actual quantized operands
+                 inside the jit trace — works for ANY reduction.Schedule,
+                 including DSE candidate assignments with no materialized
+                 LUT (numerics.schedule_ref), and trains through an STE
+                 backward. K-chunked accumulation keeps memory flat.
   amr_lowrank  — beyond-paper MXU form: C = (A@B + U(A)@V(B)) * scales,
                  rank-r SVD factors of the LUT error table. rank=256 is
                  bit-equivalent to amr_lut up to fp32 accumulation.
   amr_noise    — training-scale surrogate: exact matmul + Gaussian error
                  with moments matched to the measured AMR-MUL error table
                  (paper Fig. 6 shows the relative error is ~Gaussian, mu~0).
+                 Noise decorrelates across call sites / layers / steps via
+                 numerics.context (site labels + the ambient scope).
   amr_kernel   — the production Pallas kernel path (kernels/amr_matmul):
                  low-rank MXU kernel at numerics.rank, or the bit-exact
                  full-table LUT-gather kernel when rank == 0. Compiled on
@@ -31,9 +42,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import lut as lut_lib
+from .context import noise_key
 from .quant import quantize_int8, quantize_int8_ste
 
-Mode = str  # 'exact' | 'amr_lut' | 'amr_lowrank' | 'amr_noise' | 'amr_kernel'
+# 'exact' | 'amr_lut' | 'amr_inject' | 'amr_lowrank' | 'amr_noise' | 'amr_kernel'
+Mode = str
+
+MODES: tuple[str, ...] = ("exact", "amr_lut", "amr_inject", "amr_lowrank",
+                          "amr_noise", "amr_kernel")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +61,11 @@ class AMRNumerics:
     rank: int = 8            # low-rank error rank (amr_lowrank/amr_kernel; 0 in
                              # amr_kernel mode selects the full-LUT variant)
     noise_seed: int = 0
+    # amr_inject: handle of a registered custom schedule (DSE candidate);
+    # None = the paper's default schedule for (n_digits=2, border).  Handles
+    # come from numerics.injection.register_schedule (process-level registry
+    # — the policy itself must stay hashable for jit).
+    schedule_ref: str | None = None
 
     def is_exact(self) -> bool:
         return self.mode == "exact"
@@ -149,6 +170,44 @@ def _kernel_fwd(a, b, border, rank):
 matmul_amr_kernel.defvjp(_kernel_fwd, _lowrank_bwd)
 
 
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def matmul_amr_inject(a: jnp.ndarray, b: jnp.ndarray, numerics: "AMRNumerics") -> jnp.ndarray:
+    """On-device error injection: exact per-sample AMR products of the
+    actual quantized operands, for ANY schedule (docs/numerics.md).
+
+    Forward: quantize (STE), replay the reduction circuit on-device for the
+    operand pairs of this matmul (``injection.injected_matmul_int``,
+    K-chunked), rescale — bit-identical to the ``matmul_amr_lut`` oracle
+    when the schedule matches, but never materializes a 256x256 LUT or the
+    (.., M, K, N) product tensor, and accepts DSE candidate schedules via
+    ``numerics.schedule_ref``.
+
+    Backward: the straight-through full-precision surrogate shared with
+    amr_lowrank/amr_kernel, so a searched design point can be dropped
+    straight into ``train_step`` and its real loss impact measured.
+    """
+    return _inject_fwd(a, b, numerics)[0]
+
+
+def _inject_fwd(a, b, numerics):
+    from . import injection  # lazy: keeps module import light
+
+    inj = injection.get_injector(numerics)
+    qa, sa = quantize_int8_ste(a, axis=-1)
+    qb, sb = quantize_int8_ste(b, axis=0)
+    ia = jax.lax.stop_gradient(qa).astype(jnp.int32) + 128  # (..., M, K)
+    ib = jax.lax.stop_gradient(qb).astype(jnp.int32) + 128  # (K, N)
+    acc = injection.injected_matmul_int(inj, ia, ib)        # int32, exact
+    return acc.astype(jnp.float32) * sa * sb, (a, b)
+
+
+def _inject_bwd(numerics, res, g):
+    return _lowrank_bwd(None, None, res, g)  # same STE surrogate
+
+
+matmul_amr_inject.defvjp(_inject_fwd, _inject_bwd)
+
+
 def matmul_amr_noise(a: jnp.ndarray, b: jnp.ndarray, border: int, key: jax.Array) -> jnp.ndarray:
     """Surrogate: exact matmul + error noise with AMR-MUL-matched moments.
 
@@ -171,18 +230,27 @@ def approx_matmul(
     numerics: AMRNumerics | None = None,
     *,
     key: jax.Array | None = None,
+    site: str | None = None,
 ) -> jnp.ndarray:
-    """Dispatch a matmul under the given numerics policy (None = exact)."""
+    """Dispatch a matmul under the given numerics policy (None = exact).
+
+    ``site`` is a static call-site label (e.g. ``"mlp.w_gate"``); together
+    with the ambient ``numerics_scope`` (step / layer) it decorrelates the
+    amr_noise PRNG stream per call site, layer and training step — an
+    explicit ``key`` overrides the derivation entirely.
+    """
     if numerics is None or numerics.is_exact():
         return matmul_exact(a, b)
     if numerics.mode == "amr_lut":
         return matmul_amr_lut(a, b, numerics.border)
+    if numerics.mode == "amr_inject":
+        return matmul_amr_inject(a, b, numerics)
     if numerics.mode == "amr_lowrank":
         return matmul_amr_lowrank(a, b, numerics.border, numerics.rank)
     if numerics.mode == "amr_kernel":
         return matmul_amr_kernel(a, b, numerics.border, numerics.rank)
     if numerics.mode == "amr_noise":
         if key is None:
-            key = jax.random.PRNGKey(numerics.noise_seed)
+            key = noise_key(numerics.noise_seed, site)
         return matmul_amr_noise(a, b, numerics.border, key)
-    raise ValueError(f"unknown numerics mode {numerics.mode!r}")
+    raise ValueError(f"unknown numerics mode {numerics.mode!r} (one of {MODES})")

@@ -1,0 +1,100 @@
+"""Ambient numerics scope: per-step / per-layer PRNG decorrelation.
+
+``AMRNumerics`` is a *static* (hashable) policy object baked into jit
+traces, so it cannot carry traced values like the training step counter or
+a scan-carried layer index.  This module provides the thin trace-local
+channel that does: ``numerics_scope(step=..., layer=...)`` is entered by
+``train.steps`` (with ``state.step``) and by the model's layer scans (with
+the group counter), and ``noise_key`` folds whatever is in scope — plus a
+static per-call-site label — into the ``amr_noise`` PRNG key.
+
+Without this, every ``amr_noise`` matmul in every layer at every step drew
+the IDENTICAL noise tensor from ``PRNGKey(noise_seed)`` (the layers all
+share one policy object), making accumulated error wildly unrepresentative
+of a real approximate multiplier.  With it the key is
+
+    fold_in(fold_in(fold_in(PRNGKey(seed), crc32(site)), step), layer)
+
+where absent components are skipped — so a bare ``approx_matmul`` call
+outside any scope stays reproducible, two call sites differ via ``site``,
+two scanned layers differ via the traced ``layer`` index, and two training
+steps differ via the traced ``step``.
+
+Scopes nest (inner values override, absent inner values inherit) and are
+(re-)entered INSIDE scan/checkpoint bodies, so a remat re-trace rebuilds
+the identical keys — noise is deterministic given (seed, site, step, layer).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+import zlib
+from typing import Any
+
+__all__ = ["numerics_scope", "current_scope", "noise_key", "NumericsScope"]
+
+
+@dataclasses.dataclass(frozen=True)
+class NumericsScope:
+    """Traced decorrelation coordinates visible to approx_matmul."""
+
+    step: Any = None   # traced int scalar (training step), or None
+    layer: Any = None  # traced int scalar (flat layer index), or None
+
+
+# Thread-local scope stack: scopes are entered/exited during Python tracing
+# and may hold tracers, so concurrent traces (e.g. a train and an eval step
+# jitted from different user threads) must never see each other's entries.
+_TLS = threading.local()
+
+
+def _stack() -> list:
+    stack = getattr(_TLS, "stack", None)
+    if stack is None:
+        stack = _TLS.stack = []
+    return stack
+
+
+@contextlib.contextmanager
+def numerics_scope(*, step=None, layer=None):
+    """Provide step/layer decorrelation values to nested approx matmuls."""
+    cur = current_scope()
+    stack = _stack()
+    stack.append(NumericsScope(
+        step=step if step is not None else cur.step,
+        layer=layer if layer is not None else cur.layer))
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def current_scope() -> NumericsScope:
+    stack = _stack()
+    return stack[-1] if stack else NumericsScope()
+
+
+def _site_id(site: str) -> int:
+    """Static 31-bit id of a call-site label (stable across processes)."""
+    return zlib.crc32(site.encode()) & 0x7FFFFFFF
+
+
+def noise_key(seed: int, site: str | None = None):
+    """Derive the amr_noise PRNG key for one matmul call site.
+
+    Folds the static ``site`` label and the ambient (possibly traced)
+    ``step``/``layer`` scope into ``PRNGKey(seed)``; components that are
+    absent are skipped, so the key is always well-defined.
+    """
+    import jax
+
+    key = jax.random.PRNGKey(seed)
+    if site:
+        key = jax.random.fold_in(key, _site_id(site))
+    scope = current_scope()
+    if scope.step is not None:
+        key = jax.random.fold_in(key, scope.step)
+    if scope.layer is not None:
+        key = jax.random.fold_in(key, scope.layer)
+    return key

@@ -1,0 +1,122 @@
+"""On-device AMR error injection: any ``reduction.Schedule`` as a matmul.
+
+The bridge from the DSE frontier to end-to-end workload accuracy: a
+searched candidate cell assignment — materialized by ``dse.materialize``
+but with NO pre-built 256x256 LUT — is registered here, referenced from an
+``AMRNumerics("amr_inject", schedule_ref=...)`` policy, and every matmul
+under that policy then computes the *exact* per-sample AMR products of its
+actual quantized operands by replaying the reduction circuit on-device
+(``engine.CompiledInjector``), inside the jitted train/serve step.
+
+Two pieces:
+
+  * the schedule registry — ``AMRNumerics`` must stay hashable/static for
+    jit, so custom schedules are registered once per process under a string
+    handle (``register_schedule``) and the policy carries only the handle;
+    ``schedule_ref=None`` resolves to the paper's default schedule for
+    ``(n_digits=2, numerics.border)``.
+  * ``injected_matmul_int`` — the K-chunked product accumulation: the
+    (rows, k_chunk, N) operand-pair block is replayed per scan step and
+    accumulated in int32, so peak memory is bounded by ``max_pairs``
+    instead of the full (rows, K, N) product tensor the ``amr_lut`` oracle
+    materializes.  The int32 sum is bit-identical to the LUT-gather oracle
+    at any chunking (integer addition is associative).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import engine, reduction
+
+__all__ = ["register_schedule", "resolve_schedule", "get_injector",
+           "injected_matmul_int"]
+
+# Registered custom schedules (DSE candidates etc.), keyed by handle.
+# Default design points (schedule_ref=None) are NOT cached here — they go
+# through engine.get_injector's lru_cache, one compile per border process-wide.
+_SCHEDULES: dict[str, reduction.Schedule] = {}
+_INJECTORS: dict[str, engine.CompiledInjector] = {}
+
+# Upper bound on operand pairs replayed per scan step (memory knob: the
+# replay holds ~n_wires uint32 words per 32 pairs).
+MAX_PAIRS_PER_CHUNK = 1 << 18
+
+
+def register_schedule(schedule: reduction.Schedule, name: str | None = None) -> str:
+    """Register a custom schedule; returns the handle for ``schedule_ref``.
+
+    The numerics matmul path quantizes to int8, so only 2-digit schedules
+    (whose MRSD range strictly contains int8) are accepted.  Re-registering
+    an existing name replaces the schedule and drops its compiled injector.
+    """
+    if schedule.n_digits != 2:
+        raise ValueError(
+            f"amr_inject matmuls run on int8 operands: need a 2-digit "
+            f"schedule, got n_digits={schedule.n_digits}")
+    handle = name if name is not None else f"custom:{len(_SCHEDULES)}"
+    _SCHEDULES[handle] = schedule
+    _INJECTORS.pop(handle, None)
+    return handle
+
+
+def resolve_schedule(numerics) -> reduction.Schedule:
+    """The schedule an ``amr_inject`` policy refers to."""
+    if numerics.schedule_ref is None:
+        return reduction.get_schedule(2, numerics.border)
+    try:
+        return _SCHEDULES[numerics.schedule_ref]
+    except KeyError:
+        raise KeyError(
+            f"numerics.schedule_ref={numerics.schedule_ref!r} is not "
+            f"registered in this process — call "
+            f"numerics.injection.register_schedule(schedule) first") from None
+
+
+def get_injector(numerics) -> engine.CompiledInjector:
+    """Compiled injector for a policy (cached per handle / default border)."""
+    if numerics.schedule_ref is None:
+        return engine.get_injector(2, numerics.border)  # shared lru_cache
+    inj = _INJECTORS.get(numerics.schedule_ref)
+    if inj is None:
+        inj = engine.compile_injector(resolve_schedule(numerics))
+        _INJECTORS[numerics.schedule_ref] = inj
+    return inj
+
+
+def injected_matmul_int(inj: engine.CompiledInjector, ia, ib,
+                        max_pairs: int = MAX_PAIRS_PER_CHUNK):
+    """Exact integer AMR matmul: ``out[.., m, n] = sum_k AMR(ia[.., m, k], ib[k, n])``.
+
+    ``ia``: (..., M, K) and ``ib``: (K, N) traced int32 operand indices
+    (value + 128).  Returns (..., M, N) int32 — bit-identical to summing
+    LUT-gathered products, computed via the on-device bit-sliced replay in
+    K-chunks of at most ``max_pairs`` operand pairs (``lax.scan``
+    accumulation keeps peak memory flat; exact for K up to ~2**14 before
+    the int32 accumulator could saturate, far beyond oracle shapes).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    *lead, M, K = ia.shape
+    N = ib.shape[-1]
+    rows = int(np.prod(lead, dtype=np.int64)) * M if lead else M
+    ia2 = ia.reshape(rows, K)
+    kc = max(1, min(K, max_pairs // max(rows * N, 1)))
+    while K % kc:  # largest divisor <= kc: chunks stay uniform, no padding
+        kc -= 1
+    steps = K // kc
+    ia_s = ia2.reshape(rows, steps, kc).transpose(1, 0, 2)  # (steps, rows, kc)
+    ib_s = ib.reshape(steps, kc, N)
+
+    def body(acc, xs):
+        ia_c, ib_c = xs
+        pa = jnp.broadcast_to(ia_c[:, :, None], (rows, kc, N)).reshape(-1)
+        pb = jnp.broadcast_to(ib_c[None, :, :], (rows, kc, N)).reshape(-1)
+        prods = inj.products(pa, pb).reshape(rows, kc, N)
+        return acc + jnp.sum(prods, axis=1, dtype=jnp.int32), None
+
+    if steps == 1:  # no scan wrapper for the single-chunk (oracle-size) case
+        acc, _ = body(jnp.zeros((rows, N), jnp.int32), (ia_s[0], ib_s[0]))
+    else:
+        acc, _ = jax.lax.scan(body, jnp.zeros((rows, N), jnp.int32), (ia_s, ib_s))
+    return acc.reshape(*lead, M, N)

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import decode_step, forward
+from repro.numerics import numerics_scope
 from repro.optim import adamw_init, adamw_update, cosine_warmup
 
 
@@ -37,8 +38,11 @@ def make_train_state(cfg: ModelConfig, key) -> TrainState:
 
 
 def loss_fn(cfg: ModelConfig, params, tokens, targets, extra=None,
-            aux_weight: float = 0.01):
-    logits, aux = forward(cfg, params, tokens, extra)
+            aux_weight: float = 0.01, step=None):
+    """``step`` (traced int scalar) feeds the numerics PRNG scope so
+    amr_noise draws decorrelate across training steps (repro.numerics.context)."""
+    with numerics_scope(step=step):
+        logits, aux = forward(cfg, params, tokens, extra)
     ll = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
     nll = -jnp.take_along_axis(ll, targets[..., None], axis=-1)[..., 0]
     return nll.mean() + aux_weight * aux, aux
@@ -53,9 +57,10 @@ def make_train_step(cfg: ModelConfig, *, peak_lr: float = 3e-4, warmup: int = 10
     trade-off — a §Perf lever).
     """
 
-    def grads_of(params, tokens, targets, extra):
+    def grads_of(params, tokens, targets, extra, step):
         (loss, aux), grads = jax.value_and_grad(
-            lambda p: loss_fn(cfg, p, tokens, targets, extra), has_aux=True)(params)
+            lambda p: loss_fn(cfg, p, tokens, targets, extra, step=step),
+            has_aux=True)(params)
         return loss, aux, grads
 
     def train_step(state: TrainState, batch: dict):
@@ -67,11 +72,16 @@ def make_train_step(cfg: ModelConfig, *, peak_lr: float = 3e-4, warmup: int = 10
                 loss_a, aux_a, acc = carry
                 t, y = xs[0], xs[1]
                 e = xs[2] if len(xs) > 2 else None
-                loss, aux, g = grads_of(state.params, t, y, e)
+                loss, aux, g = grads_of(state.params, t, y, e, state.step)
                 acc = jax.tree.map(jnp.add, acc, g)
                 return (loss_a + loss, aux_a + aux, acc), None
 
             B = tokens.shape[0]
+            if B % microbatch:
+                raise ValueError(
+                    f"global batch size {B} is not divisible by "
+                    f"microbatch={microbatch}; pick a microbatch count that "
+                    f"divides the batch (e.g. {B} % {microbatch} == 0)")
             mbs = B // microbatch
             resh = lambda x: x.reshape(microbatch, mbs, *x.shape[1:])
             xs = (resh(tokens), resh(targets)) + ((resh(extra),) if extra is not None else ())
@@ -80,7 +90,8 @@ def make_train_step(cfg: ModelConfig, *, peak_lr: float = 3e-4, warmup: int = 10
             loss, aux = loss / microbatch, aux / microbatch
             grads = jax.tree.map(lambda g: g / microbatch, grads)
         else:
-            loss, aux, grads = grads_of(state.params, tokens, targets, extra)
+            loss, aux, grads = grads_of(state.params, tokens, targets, extra,
+                                        state.step)
 
         lr = cosine_warmup(state.step, peak_lr=peak_lr, warmup=warmup, total=total_steps)
         params, opt = adamw_update(grads, state.opt, state.params, lr)

@@ -4,6 +4,11 @@ import pytest
 
 # Mesh/sharding machinery targets modern jax (jax.sharding.AxisType et al.);
 # on older jax it fails inside jax itself before testing anything of ours.
+#
+# Apply this ONLY to tests that actually build meshes / shardings /
+# shard_maps (or subprocesses that do).  Plain single-device forward /
+# train / decode paths run fine on legacy jax — ``parallel.constraints.pin``
+# degrades to a no-op there — and must NOT hide behind this guard.
 requires_modern_jax = pytest.mark.skipif(
     not hasattr(jax.sharding, "AxisType"),
     reason="requires modern jax.sharding (AxisType-era) APIs")

@@ -34,6 +34,23 @@ DSE = {
     ],
     "frontier_sizes": {"4": 1}, "nodes_visited": 1000, "wall_clock_s": 1.0,
 }
+TRAIN = {
+    "schema": "BENCH_train/v1", "engine": "jax", "quick": True, "steps": 6,
+    "border": 8,
+    "config": {"d_model": 32, "d_ff": 64, "vocab": 64, "n_layers": 2,
+               "seq": 16, "batch": 4},
+    "results": [
+        {"mode": "consistency", "case": "inject_vs_lut_b8",
+         "bit_exact": True, "max_abs_diff": 0.0},
+        {"mode": "exact", "schedule": "default", "border": None,
+         "first_loss": 4.5, "final_loss": 3.8, "loss_finite": True,
+         "grad_finite": True, "params_finite": True, "s_per_step": 0.005},
+        {"mode": "amr_inject", "schedule": "dse_c0", "border": 8,
+         "first_loss": 4.6, "final_loss": 4.0, "loss_finite": True,
+         "grad_finite": True, "params_finite": True, "s_per_step": 0.4},
+    ],
+    "wall_clock_s": 60.0,
+}
 
 
 def _errors(fresh, baseline):
@@ -79,6 +96,39 @@ class TestCompare:
         errs, advisories = check_bench.compare_artifacts(slow, KERNEL, "t")
         assert errs == [] and any("us_per_call" in a for a in advisories)
 
+
+class TestTrainArtifact:
+    def test_identical_passes(self):
+        assert _errors(copy.deepcopy(TRAIN), TRAIN) == []
+
+    def test_inject_oracle_mismatch_is_caught(self):
+        """amr_inject drifting off the amr_lut oracle must fail the gate,
+        even by one ulp — the agreement is integer-derived."""
+        bad = copy.deepcopy(TRAIN)
+        bad["results"][0]["bit_exact"] = False
+        bad["results"][0]["max_abs_diff"] = 1e-7
+        errs = _errors(bad, TRAIN)
+        assert any("bit_exact" in e for e in errs)
+        assert any("max_abs_diff" in e for e in errs)
+
+    def test_nonfinite_loss_is_caught(self):
+        bad = copy.deepcopy(TRAIN)
+        bad["results"][1]["loss_finite"] = False
+        assert any("loss_finite" in e for e in _errors(bad, TRAIN))
+
+    def test_loss_value_drift_is_advisory(self):
+        """Loss trajectories ride on float matmuls: platform drift must
+        not fail the build, only surface as a note."""
+        drift = copy.deepcopy(TRAIN)
+        drift["results"][1]["final_loss"] *= 1.5
+        errs, advisories = check_bench.compare_artifacts(drift, TRAIN, "t")
+        assert errs == [] and any("final_loss" in a for a in advisories)
+
+    def test_missing_mode_row_is_caught(self):
+        bad = copy.deepcopy(TRAIN)
+        bad["results"].pop()  # drop the DSE-candidate arm
+        assert any("missing" in e for e in _errors(bad, TRAIN))
+
     def test_missing_and_extra_rows_fail(self):
         missing = copy.deepcopy(KERNEL)
         del missing["results"][0]
@@ -108,6 +158,7 @@ class TestMain:
         for d in (fresh, base):
             (d / "BENCH_kernel.json").write_text(json.dumps(KERNEL))
             (d / "BENCH_dse.json").write_text(json.dumps(DSE))
+            (d / "BENCH_train.json").write_text(json.dumps(TRAIN))
         return fresh, base
 
     def test_main_clean(self, dirs):
@@ -134,5 +185,5 @@ class TestMain:
         for name in check_bench.DEFAULT_ARTIFACTS:
             p = root / "benchmarks" / "baselines" / name
             art = json.loads(p.read_text())
-            assert art["schema"].startswith(("BENCH_kernel/", "BENCH_dse/"))
+            assert art["schema"].startswith(("BENCH_kernel/", "BENCH_dse/", "BENCH_train/"))
             assert art["results"], f"{name} baseline has no rows"

@@ -1,0 +1,204 @@
+"""amr_inject: on-device error injection (engine.CompiledInjector + numerics).
+
+The contract chain under test (docs/numerics.md):
+  engine replay == 256x256 LUT == injected products == amr_lut matmul oracle
+with the injected path additionally accepting RAW DSE candidate schedules
+(no materialized LUT) end-to-end inside a jitted train_step.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import engine, lut, reduction  # noqa: E402
+from repro.core.dse import lut_from_schedule, materialize, search_assignments  # noqa: E402
+from repro.numerics import AMRNumerics, approx_matmul  # noqa: E402
+from repro.numerics import injection  # noqa: E402
+from repro.numerics.approx_matmul import matmul_amr_inject, matmul_amr_lut  # noqa: E402
+
+
+class TestInjectorProducts:
+    def test_products_match_lut_random_pairs(self):
+        inj = engine.get_injector(2, 8)
+        table = lut.build_int8_lut(8)
+        rng = np.random.default_rng(0)
+        ia = rng.integers(0, 256, 4096)
+        ib = rng.integers(0, 256, 4096)
+        got = np.asarray(jax.jit(inj.products)(jnp.asarray(ia), jnp.asarray(ib)))
+        np.testing.assert_array_equal(got, table[ia, ib])
+
+    def test_products_full_grid_equals_table(self):
+        """Every int8 pair: the on-device replay IS the LUT, bit for bit."""
+        inj = engine.get_injector(2, 6)
+        table = lut.build_int8_lut(6)
+        ia, ib = np.meshgrid(np.arange(256), np.arange(256), indexing="ij")
+        got = np.asarray(jax.jit(inj.products)(
+            jnp.asarray(ia.ravel()), jnp.asarray(ib.ravel())))
+        np.testing.assert_array_equal(got.reshape(256, 256), table)
+
+    def test_products_preserve_shape(self):
+        inj = engine.get_injector(2, 8)
+        ia = jnp.zeros((3, 5, 7), jnp.int32) + 130
+        ib = jnp.zeros((3, 5, 7), jnp.int32) + 100
+        assert inj.products(ia, ib).shape == (3, 5, 7)
+
+    def test_products_shape_mismatch_raises(self):
+        inj = engine.get_injector(2, 8)
+        with pytest.raises(ValueError, match="shapes differ"):
+            inj.products(jnp.zeros((4,), jnp.int32), jnp.zeros((5,), jnp.int32))
+
+    def test_exact_schedule_products_are_exact(self):
+        inj = engine.get_injector(2, None)  # border=None: exact multiplier
+        rng = np.random.default_rng(1)
+        a = rng.integers(-128, 128, 512)
+        b = rng.integers(-128, 128, 512)
+        got = np.asarray(inj.products(jnp.asarray(a + 128), jnp.asarray(b + 128)))
+        np.testing.assert_array_equal(got, a * b)
+
+    def test_wide_schedule_rejected(self):
+        """int32 dynamic-range guard: 4-digit schedules cannot inject."""
+        with pytest.raises(ValueError, match="int32"):
+            engine.compile_injector(reduction.get_schedule(4, 18))
+
+    def test_inject_products_entry_point(self):
+        sched = reduction.get_schedule(2, 8)
+        table = lut.build_int8_lut(8)
+        got = np.asarray(engine.inject_products(
+            sched, jnp.asarray([0, 255, 128]), jnp.asarray([255, 0, 128])))
+        np.testing.assert_array_equal(got, table[[0, 255, 128], [255, 0, 128]])
+
+
+class TestInjectedMatmulInt:
+    def test_chunking_invariance(self):
+        """Any max_pairs budget gives the identical int32 accumulation."""
+        inj = engine.get_injector(2, 8)
+        rng = np.random.default_rng(2)
+        ia = jnp.asarray(rng.integers(0, 256, (6, 24)))
+        ib = jnp.asarray(rng.integers(0, 256, (24, 10)))
+        ref = injection.injected_matmul_int(inj, ia, ib)
+        for max_pairs in (1, 60, 6 * 10 * 5, 1 << 18):
+            got = injection.injected_matmul_int(inj, ia, ib, max_pairs=max_pairs)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+    def test_matches_lut_gather(self):
+        inj = engine.get_injector(2, 8)
+        table = lut.build_int8_lut(8)
+        rng = np.random.default_rng(3)
+        ia = rng.integers(0, 256, (2, 4, 13))  # K=13: prime, exercises kc search
+        ib = rng.integers(0, 256, (13, 6))
+        got = np.asarray(injection.injected_matmul_int(
+            inj, jnp.asarray(ia), jnp.asarray(ib)))
+        want = table[ia[..., :, :, None], ib[None, None, :, :]].sum(axis=-2)
+        np.testing.assert_array_equal(got, want)
+
+
+class TestMatmulAmrInject:
+    def setup_method(self):
+        self.a = jax.random.normal(jax.random.PRNGKey(0), (4, 16), jnp.float32)
+        self.b = jax.random.normal(jax.random.PRNGKey(1), (16, 8), jnp.float32)
+
+    def test_bit_identical_to_lut_oracle(self):
+        for border in (4, 8):
+            want = np.asarray(matmul_amr_lut(self.a, self.b, border=border))
+            got = np.asarray(approx_matmul(
+                self.a, self.b, AMRNumerics("amr_inject", border=border)))
+            np.testing.assert_array_equal(got, want)  # same ints, same floats
+
+    def test_bit_identical_under_jit_and_batch(self):
+        nm = AMRNumerics("amr_inject", border=8)
+        a3 = jnp.stack([self.a, self.a * 0.5])
+        got = np.asarray(jax.jit(
+            lambda a, b: approx_matmul(a, b, nm))(a3, self.b))
+        want = np.stack([np.asarray(matmul_amr_lut(self.a, self.b, 8)),
+                         np.asarray(matmul_amr_lut(self.a * 0.5, self.b, 8))])
+        np.testing.assert_array_equal(got, want)
+
+    def test_grad_matches_full_precision_surrogate(self):
+        """STE backward == plain matmul vjp (finite, correct shapes)."""
+        nm = AMRNumerics("amr_inject", border=8)
+        ga, gb = jax.grad(
+            lambda a, b: matmul_amr_inject(a, b, nm).sum(), argnums=(0, 1)
+        )(self.a, self.b)
+        ones = np.ones((4, 8), np.float32)
+        np.testing.assert_allclose(np.asarray(ga), ones @ np.asarray(self.b).T,
+                                   rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(gb), np.asarray(self.a).T @ ones,
+                                   rtol=1e-5)
+        assert np.isfinite(np.asarray(ga)).all() and np.isfinite(np.asarray(gb)).all()
+
+
+class TestDSECandidateInjection:
+    def _candidate_schedule(self):
+        # Whole-multiplier search: candidate 0 is the joint optimum, which
+        # generally differs from the greedy default schedule's assignment.
+        cands = search_assignments(2, 8, k=2, beam_width=8, branch_cap=4,
+                                   max_nodes=2000)
+        return materialize(cands[0]), cands[0]
+
+    def test_candidate_injection_matches_its_lut_export(self):
+        sched, _ = self._candidate_schedule()
+        handle = injection.register_schedule(sched, name="test:dse-cand")
+        nm = AMRNumerics("amr_inject", border=8, schedule_ref=handle)
+        a = jax.random.normal(jax.random.PRNGKey(2), (4, 16), jnp.float32)
+        b = jax.random.normal(jax.random.PRNGKey(3), (16, 8), jnp.float32)
+        got = np.asarray(approx_matmul(a, b, nm))
+
+        # reference: quantize the same way, gather from the candidate's
+        # exported 256x256 table (dse.export round-trip), accumulate int32
+        table = lut_from_schedule(sched)
+        from repro.numerics.quant import quantize_int8
+        qa, sa = quantize_int8(a, axis=-1)
+        qb, sb = quantize_int8(b, axis=0)
+        ia = np.asarray(qa, np.int64) + 128
+        ib = np.asarray(qb, np.int64) + 128
+        acc = table[ia[:, :, None], ib[None, :, :]].sum(axis=-2).astype(np.float32)
+        want = acc * np.asarray(sa) * np.asarray(sb)
+        np.testing.assert_array_equal(got, want)
+
+    def test_candidate_trains_end_to_end_in_jitted_step(self):
+        """A raw DSE candidate Schedule (no pre-built LUT) drops straight
+        into train_step — the acceptance criterion of the inject tentpole."""
+        from repro.configs.base import ModelConfig
+        from repro.data import SyntheticLM
+        from repro.train.steps import make_train_state, make_train_step
+
+        sched, assignment = self._candidate_schedule()
+        handle = injection.register_schedule(sched, name="test:dse-train")
+        cfg = ModelConfig(
+            name="tiny-inject", family="dense", n_layers=1, d_model=32,
+            n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64, vocab=64,
+            mlp_act="swiglu", tie_embeddings=True, remat="none",
+            numerics=AMRNumerics("amr_inject", border=8, schedule_ref=handle))
+        data = SyntheticLM(vocab=cfg.vocab, seq_len=16, batch=2, seed=0)
+        state = make_train_state(cfg, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(cfg, peak_lr=1e-3, warmup=2, total_steps=4))
+        for i in range(2):
+            b = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+            state, m = step(state, b)
+            assert np.isfinite(float(m["loss"])), m
+        assert int(state.step) == 2
+
+    def test_register_rejects_non_int8_schedules(self):
+        with pytest.raises(ValueError, match="2-digit"):
+            injection.register_schedule(reduction.get_schedule(3, 12))
+
+    def test_unregistered_handle_raises(self):
+        nm = AMRNumerics("amr_inject", border=8, schedule_ref="test:missing")
+        with pytest.raises(KeyError, match="register_schedule"):
+            injection.resolve_schedule(nm)
+
+    def test_default_policy_needs_no_registration(self):
+        nm = AMRNumerics("amr_inject", border=6)
+        sched = injection.resolve_schedule(nm)
+        assert sched is reduction.get_schedule(2, 6)
+
+
+class TestPolicyHashability:
+    def test_numerics_with_schedule_ref_is_hashable(self):
+        """The policy stays a valid static jit argument with a schedule ref."""
+        nm = AMRNumerics("amr_inject", border=8, schedule_ref="x")
+        assert hash(nm) == hash(dataclasses.replace(nm))
+        assert nm != AMRNumerics("amr_inject", border=8)

@@ -8,11 +8,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from _markers import requires_modern_jax
 from repro.configs import ARCH_NAMES, get_reduced_config
 from repro.models import decode_step, forward, init_cache, init_params
 
-pytestmark = requires_modern_jax
+# Single-device smoke only — no meshes/shardings anywhere in these tests, so
+# they run on legacy jax too (pin() is a no-op without an ambient mesh).
 
 ALL = ARCH_NAMES + ["amr-paper-100m"]
 

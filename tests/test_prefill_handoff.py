@@ -5,12 +5,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from _markers import requires_modern_jax
 from repro.configs import get_reduced_config
 from repro.models import decode_step, forward, init_params
 from repro.models.model import _encoder_forward, prefill_with_cache
 
-pytestmark = requires_modern_jax
+# Single-device consistency checks — run on legacy jax too (no meshes).
 
 FAMILIES = ["gemma-2b", "mamba2-370m", "zamba2-1.2b", "gemma3-1b",
             "whisper-small", "dbrx-132b"]

@@ -9,7 +9,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from _markers import requires_modern_jax
 from repro.configs.base import ModelConfig
 from repro.data import SyntheticLM
 from repro.numerics import AMRNumerics
@@ -36,7 +35,6 @@ def _train(cfg, steps, batch=8, seq=32, seed=0):
     return losses
 
 
-@requires_modern_jax
 class TestTraining:
     def test_loss_decreases(self):
         losses = _train(TINY, steps=30)
@@ -48,6 +46,18 @@ class TestTraining:
         losses = _train(cfg, steps=30)
         assert np.isfinite(losses).all()
         assert losses[-1] < losses[0] - 0.3, losses[::6]
+
+    def test_microbatch_must_divide_batch(self):
+        """B=8 with microbatch=3 used to die inside reshape with a cryptic
+        error (or silently mis-shape); now it names both numbers up front."""
+        import pytest
+
+        data = SyntheticLM(vocab=TINY.vocab, seq_len=32, batch=8, seed=0)
+        b = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+        state = make_train_state(TINY, jax.random.PRNGKey(0))
+        step = make_train_step(TINY, microbatch=3)
+        with pytest.raises(ValueError, match=r"8 is not divisible by microbatch=3"):
+            step(state, b)
 
     def test_microbatched_matches_unbatched_shape(self):
         data = SyntheticLM(vocab=TINY.vocab, seq_len=32, batch=8, seed=0)
@@ -66,7 +76,6 @@ class TestTraining:
         np.testing.assert_allclose(a1, a2, atol=5e-3)
 
 
-@requires_modern_jax
 class TestResume:
     def test_checkpoint_resume_continues(self, tmp_path):
         data = SyntheticLM(vocab=TINY.vocab, seq_len=32, batch=4, seed=1)
