@@ -17,7 +17,7 @@ import time
 import traceback
 
 from . import (dryrun_summary, dse_bench, fig4_comparison, fig5_fa_usage,
-               fig6_error_dist, kernel_bench, lowrank_fidelity,
+               fig6_error_dist, inject_bench, kernel_bench, lowrank_fidelity,
                table1_accuracy, table2_energy, train_numerics_bench)
 
 MODULES = {
@@ -30,6 +30,7 @@ MODULES = {
     "kernels": kernel_bench,
     "dse": dse_bench,
     "train": train_numerics_bench,
+    "inject": inject_bench,
     "dryrun": dryrun_summary,
 }
 

@@ -4,8 +4,8 @@ Accuracy fields of the benchmark artifacts are *deterministic* — they come
 from bit-exact integer replays over seeded operand streams — so any drift
 is a real numerics regression, not noise.  This script compares a freshly
 produced ``BENCH_kernel.json`` / ``BENCH_dse.json`` / ``BENCH_train.json``
-against the committed baselines under ``benchmarks/baselines/`` and fails
-the build on:
+/ ``BENCH_inject.json`` against the committed baselines under
+``benchmarks/baselines/`` and fails the build on:
 
   * schema or row-set mismatches (missing/extra sweep points),
   * any change in an error field (``max_abs_err_vs_amr``, ``mred``/``mared``/
@@ -17,7 +17,11 @@ the build on:
   * for the train artifact: any flip of the bit-consistency fields
     (``bit_exact``, ``max_abs_diff`` — the amr_inject-vs-amr_lut oracle
     agreement is integer-derived, so it must be EXACTLY 0.0) or of the
-    ``loss_finite`` / ``grad_finite`` flags.
+    ``loss_finite`` / ``grad_finite`` flags,
+  * for the inject artifact: any flip of ``bit_exact_vs_lut`` /
+    ``max_abs_diff`` on any replay implementation row — every impl
+    (pairs / xla / xla_cached / pallas) must agree with the LUT-gather
+    oracle bit for bit.
 
 Timings (``us_per_call``, ``s_per_step``, ``wall_clock_s``), energy-model
 outputs (``energy_pj``), search-effort counters (``nodes``) and train LOSS
@@ -39,7 +43,8 @@ import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
-DEFAULT_ARTIFACTS = ("BENCH_kernel.json", "BENCH_dse.json", "BENCH_train.json")
+DEFAULT_ARTIFACTS = ("BENCH_kernel.json", "BENCH_dse.json", "BENCH_train.json",
+                     "BENCH_inject.json")
 FLOAT_RTOL = 1e-6  # float-path (non-bit-exact) kernel error rows only
 
 
@@ -52,6 +57,8 @@ def _row_key(schema: str, row: dict) -> tuple:
     if schema.startswith("BENCH_train/"):
         return (row["mode"], row.get("case"), row.get("schedule"),
                 row.get("border"))
+    if schema.startswith("BENCH_inject/"):
+        return (row["impl"], row["schedule"], row["m"], row["n"], row["k"])
     raise ValueError(f"unknown artifact schema {schema!r}")
 
 
@@ -67,6 +74,9 @@ def _gated_fields(schema: str, row: dict) -> list[tuple[str, bool]]:
             return [("bit_exact", True), ("max_abs_diff", True)]
         return [("loss_finite", True), ("grad_finite", True),
                 ("params_finite", True)]
+    if schema.startswith("BENCH_inject/"):
+        # integer-derived oracle agreement: exactly equal or regressed
+        return [("bit_exact_vs_lut", True), ("max_abs_diff", True)]
     return [("expected_error", True), ("mred", True), ("mared", True),
             ("nmed", True), ("replay_match", True), ("frontier", True),
             ("complete", True)]
@@ -77,6 +87,8 @@ def _advisory_fields(schema: str) -> list[str]:
         return ["us_per_call"]
     if schema.startswith("BENCH_train/"):
         return ["first_loss", "final_loss", "s_per_step"]
+    if schema.startswith("BENCH_inject/"):
+        return ["us_per_call"]
     return ["energy_pj", "nodes"]
 
 

@@ -124,6 +124,110 @@ def _compile_stage(stage, stage_start: int) -> StageTensors:
     )
 
 
+@dataclasses.dataclass(frozen=True, eq=False)  # identity hash/eq: ndarray
+# fields aren't hashable, and a lowering is process-cached per design point —
+# identity is exactly the right jit static-argument key (kernels/inject_replay).
+class LoweredReplay:
+    """A schedule's dense replay constants — ONE stage loop, many callers.
+
+    Every replay form in this module (the jitted host evaluator, the
+    traceable injector, the outer-product matmul path and the Pallas
+    injection-replay kernel in ``kernels/inject_replay``) shares this
+    lowering: numpy constants only, so the stage loop can be traced inside
+    any ambient context (jit, scan, vmap, a Pallas kernel body) without
+    ever caching tracers — numpy constants promote to on-device constants
+    at trace time, per trace, which is exactly the safe direction.
+
+    ``replay_stored`` is written for ARBITRARY trailing batch dims: the
+    wire axis is first, everything after broadcasts.  The classic host
+    path uses ``(n_wires, words)``; the outer-product injection path uses
+    ``(n_wires, rows, kc, words)`` with x/y broadcasting against each
+    other along disjoint dims.
+    """
+
+    schedule: reduction.Schedule
+    gate_masks: np.ndarray      # (n_pp, 4) uint32 full-word gate minterm masks
+    x_idx: np.ndarray           # (n_pp,) int32 into flattened X operand bits
+    y_idx: np.ndarray           # (n_pp,) int32 into flattened Y operand bits
+    stages: tuple[StageTensors, ...]
+    final_ids: np.ndarray       # (n_final,) int32 surviving wire ids
+    weights: np.ndarray         # (n_final, n_limbs) int32 per-limb bit weights
+    offsets: np.ndarray         # (n_limbs,) int32 polarity offsets per limb
+    n_limbs: int
+    bit_weights: np.ndarray     # (n_final,) int64: 2**pos, limb-combined
+    offset_total: int           # limb-combined polarity offset
+
+    def replay_stored(self, xw, yw):
+        """Bit-sliced stage replay over broadcastable uint32 wire arrays.
+
+        ``xw``: (n_xbits, \\*dx) and ``yw``: (n_ybits, \\*dy) uint32 words with
+        broadcast-compatible trailing dims; returns the stored final wire
+        words ``(n_final, \\*broadcast(dx, dy))``.
+        """
+        import jax.numpy as jnp
+
+        extra = max(xw.ndim, yw.ndim) - 1
+
+        def bc(m):  # lift a (n_rows,) constant over the trailing batch dims
+            return m.reshape(m.shape[0], *(1,) * extra)
+
+        x = xw[self.x_idx]
+        y = yw[self.y_idx]
+        nx, ny = ~x, ~y
+        gm = self.gate_masks
+        vals = ((bc(gm[:, 0]) & (nx & ny)) | (bc(gm[:, 1]) & (nx & y))
+                | (bc(gm[:, 2]) & (x & ny)) | (bc(gm[:, 3]) & (x & y)))
+        for st in self.stages:
+            ins = vals[st.in3]  # (n_cells, 3, *batch)
+            a, b, c = ins[:, 0], ins[:, 1], ins[:, 2]
+            na, nb, nc = ~a, ~b, ~c
+            minterms = (na & nb & nc, na & nb & c, na & b & nc, na & b & c,
+                        a & nb & nc, a & nb & c, a & b & nc, a & b & c)
+            s_out = bc(st.sum_masks[:, 0]) & minterms[0]
+            c_out = bc(st.carry_masks[:, 0]) & minterms[0]
+            for k in range(1, 8):
+                s_out |= bc(st.sum_masks[:, k]) & minterms[k]
+                c_out |= bc(st.carry_masks[:, k]) & minterms[k]
+            vals = jnp.concatenate(
+                [vals, jnp.concatenate([s_out, c_out], 0)[st.perm]], 0)
+        return vals[self.final_ids]
+
+
+def lower_schedule(schedule: reduction.Schedule) -> LoweredReplay:
+    """Lower a schedule to the dense numpy replay constants."""
+    layout = schedule.layout
+    stages = []
+    n_wires = layout.n_pp
+    for stage in schedule.stages:
+        st = _compile_stage(stage, n_wires)
+        stages.append(st)
+        n_wires += st.perm.shape[0]
+    if n_wires != schedule.n_bits:
+        raise AssertionError("compiled wire count disagrees with schedule")
+
+    pos = schedule.final_positions.astype(np.int64)
+    pol = schedule.bit_polarity[schedule.final_ids].astype(np.int64)
+    n_limbs = int(pos.max()) // _LIMB_BITS + 1
+    # weights[i, l] = 2**(pos_i mod 16) when bit i lands in limb l, else 0
+    weights_np = np.zeros((pos.shape[0], n_limbs), dtype=np.int32)
+    weights_np[np.arange(pos.shape[0]), pos // _LIMB_BITS] = 1 << (pos % _LIMB_BITS)
+    offsets_np = (pol[:, None] * weights_np).sum(0).astype(np.int32)
+    bit_weights = np.int64(1) << pos
+    return LoweredReplay(
+        schedule=schedule,
+        gate_masks=(_GATE_TABLES[layout.gate] * _FULL).astype(np.uint32),
+        x_idx=layout.x_idx.astype(np.int32),
+        y_idx=layout.y_idx.astype(np.int32),
+        stages=tuple(stages),
+        final_ids=schedule.final_ids.astype(np.int32),
+        weights=weights_np,
+        offsets=offsets_np,
+        n_limbs=n_limbs,
+        bit_weights=bit_weights,
+        offset_total=int((pol * bit_weights).sum()),
+    )
+
+
 def _pack_lanes(bits: np.ndarray) -> np.ndarray:
     """(batch, n_bits) {0,1} -> bit-sliced (n_bits, words) uint32.
 
@@ -175,80 +279,37 @@ class CompiledSchedule:
         return reduction.split_to_float(*self.evaluate_split(xbits, ybits))
 
 
-def _build_replay(schedule: reduction.Schedule):
-    """Lower a schedule to dense tensors; returns ``(replay_fn, n_limbs)``.
+def _limb_replay(lowered: LoweredReplay):
+    """Word-batched limb evaluator over a lowered schedule.
 
-    ``replay_fn`` is a *traceable* (un-jitted) function ``(xw, yw) ->
-    (n_limbs, batch) int32 limbs`` over bit-sliced uint32 operand words.  It
-    closes over concrete jnp constants, so it can either be ``jax.jit``-ed
-    directly (``compile_schedule``) or inlined into a larger traced
-    computation (``compile_injector`` — the on-device error-injection path
-    calls it on operand words packed *inside* a jit trace).
+    A *traceable* (un-jitted) function ``(xw, yw) -> (n_limbs, batch) int32
+    limbs`` over bit-sliced uint32 operand words.  Constants are numpy (see
+    ``LoweredReplay``), so it can be ``jax.jit``-ed directly
+    (``compile_schedule``) or inlined into a larger traced computation
+    (``compile_injector`` — the on-device error-injection path calls it on
+    operand words packed *inside* a jit trace).
     """
-    import jax
     import jax.numpy as jnp
 
-    layout = schedule.layout
-    stages = []
-    n_wires = layout.n_pp
-    for stage in schedule.stages:
-        st = _compile_stage(stage, n_wires)
-        stages.append(st)
-        n_wires += st.perm.shape[0]
-    if n_wires != schedule.n_bits:
-        raise AssertionError("compiled wire count disagrees with schedule")
-
-    pos = schedule.final_positions
-    pol = schedule.bit_polarity[schedule.final_ids].astype(np.int64)
-    n_limbs = int(pos.max()) // _LIMB_BITS + 1
-    # weights[i, l] = 2**(pos_i mod 16) when bit i lands in limb l, else 0
-    weights_np = np.zeros((pos.shape[0], n_limbs), dtype=np.int32)
-    weights_np[np.arange(pos.shape[0]), pos // _LIMB_BITS] = 1 << (pos % _LIMB_BITS)
-    offsets_np = (pol[:, None] * weights_np).sum(0).astype(np.int32)
-
-    # Concrete closure constants even when the engine is built lazily inside
-    # an ambient jit trace (e.g. a kernel tracing while its LUT first builds).
-    with jax.ensure_compile_time_eval():
-        gate_masks = jnp.asarray((_GATE_TABLES[layout.gate] * _FULL).astype(np.uint32))
-        x_idx = jnp.asarray(layout.x_idx.astype(np.int32))
-        y_idx = jnp.asarray(layout.y_idx.astype(np.int32))
-        stage_consts = [
-            (jnp.asarray(st.in3), jnp.asarray(st.sum_masks),
-             jnp.asarray(st.carry_masks), jnp.asarray(st.perm))
-            for st in stages
-        ]
-        final_ids = jnp.asarray(schedule.final_ids.astype(np.int32))
-        weights = jnp.asarray(weights_np)
-        offsets = jnp.asarray(offsets_np)
-        lane_shifts = jnp.arange(_LANE_BITS, dtype=jnp.uint32)
+    n_limbs = lowered.n_limbs
+    weights = lowered.weights
+    offsets = lowered.offsets
+    lane_shifts = np.arange(_LANE_BITS, dtype=np.uint32)
 
     def replay(xw, yw):
         """Bit-sliced replay: rows are wires, uint32 words hold 32 samples."""
-        x = xw[x_idx]
-        y = yw[y_idx]
-        nx, ny = ~x, ~y
-        vals = ((gate_masks[:, 0, None] & (nx & ny))
-                | (gate_masks[:, 1, None] & (nx & y))
-                | (gate_masks[:, 2, None] & (x & ny))
-                | (gate_masks[:, 3, None] & (x & y)))
-        for in3, sum_masks, carry_masks, perm in stage_consts:
-            ins = vals[in3]  # (n_cells, 3, words)
-            a, b, c = ins[:, 0], ins[:, 1], ins[:, 2]
-            na, nb, nc = ~a, ~b, ~c
-            minterms = (na & nb & nc, na & nb & c, na & b & nc, na & b & c,
-                        a & nb & nc, a & nb & c, a & b & nc, a & b & c)
-            s_out = sum_masks[:, 0, None] & minterms[0]
-            c_out = carry_masks[:, 0, None] & minterms[0]
-            for k in range(1, 8):
-                s_out |= sum_masks[:, k, None] & minterms[k]
-                c_out |= carry_masks[:, k, None] & minterms[k]
-            vals = jnp.concatenate([vals, jnp.concatenate([s_out, c_out], 0)[perm]], 0)
-        stored = vals[final_ids]  # (n_final, words)
+        stored = lowered.replay_stored(xw, yw)  # (n_final, words)
         bits = ((stored[:, None, :] >> lane_shifts[None, :, None]) & 1).astype(jnp.int32)
         limbs = jnp.einsum("fl,fsw->lws", weights, bits)  # (n_limbs, words, 32)
         return limbs.reshape(n_limbs, -1) - offsets[:, None]
 
-    return replay, n_limbs
+    return replay
+
+
+def _build_replay(schedule: reduction.Schedule):
+    """Lower a schedule and build its limb evaluator: ``(replay_fn, n_limbs)``."""
+    lowered = lower_schedule(schedule)
+    return _limb_replay(lowered), lowered.n_limbs
 
 
 def compile_schedule(schedule: reduction.Schedule) -> CompiledSchedule:
@@ -438,6 +499,9 @@ class CompiledInjector:
     n_limbs: int
     _replay: object       # traceable: (n_opbits, words) uint32 x2 -> int32 limbs
     _value_bits: object   # (256, n_opbits) uint32 jnp constant
+    lowered: LoweredReplay = None
+    _value_masks: object = None  # (256, n_opbits) uint32 jnp constant (0 / ~0)
+    max_abs_product: int = 0     # bound on |product| (int32 saturation checks)
 
     def products(self, ia, ib):
         """Exact AMR products of int8 operand *indices* (value + 128).
@@ -470,6 +534,69 @@ class CompiledInjector:
             out = out + limbs[1] * (1 << _LIMB_BITS)
         return out[:batch].astype(jnp.int32)
 
+    def operand_masks(self, ia):
+        """Value->full-word-mask gather: operand indices (...) in [0, 256)
+        -> (..., n_opbits) uint32 where each stored bit becomes 0 or ~0."""
+        import jax.numpy as jnp
+
+        ia = jnp.asarray(ia)
+        return self._value_masks[ia.reshape(-1)].reshape(*ia.shape, -1)
+
+    def pack_weights(self, ib):
+        """(K, N) operand indices -> (K, n_opbits, n_words) packed lane words.
+
+        The weight-side bit-pack of the outer-product replay: column ``n``
+        lives in bit ``n % 32`` of word ``n // 32`` (the ``_pack_lanes``
+        layout), shared across every activation row of a matmul — and, for
+        concrete weights, cacheable across calls (``numerics.injection``
+        keeps that cache).  Traceable; ``N`` is zero-padded up to whole
+        words, so callers slice the first N output columns.
+        """
+        import jax.numpy as jnp
+
+        ib = jnp.asarray(ib)
+        pad = (-ib.shape[1]) % _LANE_BITS
+        if pad:  # pad with index 128 (value 0): padded products stay bounded
+            # by max_abs_product, so K-accumulation never wraps before the
+            # caller slices the real columns out.
+            ib = jnp.pad(ib, ((0, 0), (0, pad)), constant_values=128)
+        k, n = ib.shape
+        bits = self._value_bits[ib.reshape(-1)].reshape(k, n, -1)  # {0,1}
+        nb = bits.shape[-1]
+        lanes = bits.reshape(k, -1, _LANE_BITS, nb)
+        shifts = np.arange(_LANE_BITS, dtype=np.uint32)
+        words = jnp.sum(lanes << shifts[None, None, :, None], axis=2,
+                        dtype=jnp.uint32)
+        return words.transpose(0, 2, 1)  # (K, n_opbits, n_words)
+
+    def products_outer(self, xm, yw):
+        """Outer-product replay: exact products of every (row, column) pair.
+
+        ``xm``: (R, C, n_opbits) uint32 x-operand masks (``operand_masks``),
+        ``yw``: (C, n_opbits, W) packed y words (``pack_weights`` rows) —
+        returns (R, C, W*32) int32 where entry (r, c, w*32+l) is the exact
+        AMR product of x operand (r, c) and the y operand in lane ``l`` of
+        word ``w``.  The x side broadcasts as full-word masks against the
+        lane-packed y side, so the replay cost is one word per 32 columns
+        and the x-side gather/pack cost is shared by ALL columns — the
+        structural win over pairwise packing (see docs/numerics.md).
+        """
+        import jax.numpy as jnp
+
+        r, c, _ = xm.shape
+        w = yw.shape[-1]
+        x = xm.transpose(2, 0, 1)[:, :, :, None]      # (n_opbits, R, C, 1)
+        y = yw.transpose(1, 0, 2)[:, None, :, :]      # (n_opbits, 1, C, W)
+        stored = self.lowered.replay_stored(x, y)     # (n_final, R, C, W)
+        shifts = np.arange(_LANE_BITS, dtype=np.uint32)
+        bw = self.lowered.bit_weights.astype(np.int32)
+        acc = jnp.zeros((r, c, w, _LANE_BITS), jnp.int32)
+        for f in range(stored.shape[0]):  # accumulate per final bit: keeps the
+            # unpacked (R, C, W, 32) intermediates at 2 live tensors, not n_final
+            bits = ((stored[f][..., None] >> shifts) & np.uint32(1)).astype(jnp.int32)
+            acc = acc + np.int32(bw[f]) * bits
+        return (acc - np.int32(self.lowered.offset_total)).reshape(r, c, w * _LANE_BITS)
+
 
 def _pack_lanes_traced(bits):
     """Traceable ``_pack_lanes``: (batch, n_bits) {0,1} -> (n_bits, words).
@@ -500,18 +627,32 @@ def compile_injector(schedule: reduction.Schedule) -> CompiledInjector:
     import jax
     import jax.numpy as jnp
 
-    pos = schedule.final_positions.astype(np.int64)
-    bound = int(np.sum(np.int64(1) << pos))  # >= max |value| + |offset|
+    lowered = lower_schedule(schedule)
+    bound = int(lowered.bit_weights.sum())  # >= max |value| + |offset|
     if 2 * bound >= 2**31:
         raise ValueError(
             f"schedule dynamic range (sum 2**pos = {bound}) exceeds int32; "
             f"on-device injection supports n_digits <= 3 "
             f"(got n_digits={schedule.n_digits})")
-    replay, n_limbs = _build_replay(schedule)
+    replay = _limb_replay(lowered)
+    vb_np = _int8_value_bit_table(schedule.n_digits)
     with jax.ensure_compile_time_eval():  # concrete even under an ambient trace
-        value_bits = jnp.asarray(_int8_value_bit_table(schedule.n_digits))
+        value_bits = jnp.asarray(vb_np)
+        value_masks = value_bits * jnp.uint32(_FULL)
+        # Exact max |product| over the whole int8 x int8 domain (ONE 64K-pair
+        # replay, once per design point): the analytic range bound above is
+        # orders of magnitude looser, which would make the K-accumulation
+        # saturation guard reject legitimately safe matmul shapes.
+        ia, ib = np.divmod(np.arange(256 * 256), 256)
+        limbs = np.asarray(replay(jnp.asarray(_pack_lanes(vb_np[ia])),
+                                  jnp.asarray(_pack_lanes(vb_np[ib]))))
+    prods = limbs[0].astype(np.int64)
+    if lowered.n_limbs > 1:
+        prods = prods + limbs[1].astype(np.int64) * (1 << _LIMB_BITS)
     return CompiledInjector(
-        schedule=schedule, n_limbs=n_limbs, _replay=replay, _value_bits=value_bits)
+        schedule=schedule, n_limbs=lowered.n_limbs, _replay=replay,
+        _value_bits=value_bits, lowered=lowered, _value_masks=value_masks,
+        max_abs_product=int(np.abs(prods).max()))
 
 
 @lru_cache(maxsize=64)

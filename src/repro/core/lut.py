@@ -176,6 +176,12 @@ def _table_array(border: int | None, engine: str):
         return jnp.asarray(build_int8_lut(border, engine=engine), dtype=jnp.int32)
 
 
+@lru_cache(maxsize=64)
+def table_max_abs(border: int | None, engine: str = "jax") -> int:
+    """Exact max |product| of the design point (int32-saturation guards)."""
+    return int(np.abs(build_int8_lut(border, engine=engine)).max())
+
+
 def factor_arrays(border: int | None, rank: int, engine: str = "jax"):
     """Cached jnp (u, v) factors — ALL kernel/numerics call sites route here
     instead of re-converting ``lowrank_factor`` output per call."""

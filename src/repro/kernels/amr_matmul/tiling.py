@@ -11,7 +11,17 @@ Entries encode where each variant is bound:
     (bm, bk*(1+r)) x (bk*(1+r), bn) dot on the systolic array;
   * ``lut`` is VPU/gather-bound and walks K sequentially inside the block,
     so K tiles shrink on real accelerators to bound the per-step gather
-    footprint while M/N stay MXU-tile aligned for the output block.
+    footprint while M/N stay MXU-tile aligned for the output block;
+  * ``inject_replay`` (kernels/inject_replay) holds the whole bit-sliced
+    wire state of a block in VMEM — ~n_wires uint32 words per (m, k) pair
+    per 32 output columns — so its M/K tiles are much smaller than the
+    LUT variants'; its n dimension is blocked in 32-column lane words, so
+    preferred ``bn`` entries are multiples of 32 (the op wrapper clamps
+    autotuned tiles to word-aligned divisors).
+
+Explicit ``bm/bn/bk`` overrides win over the table but must divide the
+problem shape exactly — a non-divisor would leave a partial tile the
+grids of these kernels never visit, so ``pick_tiles`` rejects it.
 """
 from __future__ import annotations
 
@@ -34,13 +44,16 @@ class TileConfig:
 AUTOTUNE: dict[tuple[str, str], TileConfig] = {
     ("tpu", "lowrank"): TileConfig(128, 128, 128),
     ("tpu", "lut"): TileConfig(128, 128, 32),
+    ("tpu", "inject_replay"): TileConfig(32, 128, 8),
     ("gpu", "lowrank"): TileConfig(64, 128, 64),
     ("gpu", "lut"): TileConfig(64, 128, 32),
+    ("gpu", "inject_replay"): TileConfig(32, 128, 8),
     ("cpu", "lowrank"): TileConfig(128, 128, 128),
     ("cpu", "lut"): TileConfig(128, 128, 128),
+    ("cpu", "inject_replay"): TileConfig(64, 256, 16),
 }
 
-VARIANTS = ("lowrank", "lut")
+VARIANTS = ("lowrank", "lut", "inject_replay")
 
 
 def _largest_divisor_leq(n: int, cap: int) -> int:
@@ -50,18 +63,31 @@ def _largest_divisor_leq(n: int, cap: int) -> int:
     return 1
 
 
+def _resolve_dim(name: str, dim_name: str, size: int, override: int | None,
+                 pref: int) -> int:
+    if override is None:
+        return _largest_divisor_leq(size, pref)
+    if override < 1 or size % override:
+        raise ValueError(
+            f"{name}={override} does not tile the problem: {dim_name}={size} "
+            f"is not a multiple (the grid would miss a partial tile); pass "
+            f"None to take the autotune entry clamped to a divisor")
+    return override
+
+
 def pick_tiles(
     m: int, n: int, k: int, *, variant: str = "lowrank", backend: str | None = None,
     bm: int | None = None, bn: int | None = None, bk: int | None = None,
 ) -> TileConfig:
-    """Resolve block sizes: explicit overrides win, else the autotune entry
-    for the (detected) backend, each clamped to the largest divisor of its
-    dimension so the grid covers the problem exactly."""
+    """Resolve block sizes: explicit overrides win (validated to divide the
+    problem shape exactly), else the autotune entry for the (detected)
+    backend, clamped to the largest divisor of its dimension so the grid
+    covers the problem exactly."""
     if variant not in VARIANTS:
         raise ValueError(f"variant must be one of {VARIANTS}, got {variant!r}")
     pref = AUTOTUNE[(backend or backend_kind(), variant)]
     return TileConfig(
-        bm=bm if bm is not None else _largest_divisor_leq(m, pref.bm),
-        bn=bn if bn is not None else _largest_divisor_leq(n, pref.bn),
-        bk=bk if bk is not None else _largest_divisor_leq(k, pref.bk),
+        bm=_resolve_dim("bm", "m", m, bm, pref.bm),
+        bn=_resolve_dim("bn", "n", n, bn, pref.bn),
+        bk=_resolve_dim("bk", "k", k, bk, pref.bk),
     )

@@ -1,0 +1,13 @@
+"""Pallas injection-replay kernel: the bit-sliced AMR replay as a matmul.
+
+Third ``amr_matmul`` kernel variant (beside ``lowrank``/``lut``): instead
+of gathering pre-built LUT entries, each grid block replays the reduction
+circuit itself on lane-packed operand words held in VMEM, with the
+schedule's per-stage minterm masks and wire routing baked into the kernel
+as constants.  Bit-identical to the ``amr_lut`` oracle and to the XLA
+injection path (tests/test_inject_replay.py); selected per numerics policy
+via ``AMRNumerics(inject_impl="pallas")`` — see docs/kernels.md.
+"""
+from .ops import inject_replay_matmul
+
+__all__ = ["inject_replay_matmul"]

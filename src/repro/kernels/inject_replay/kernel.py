@@ -1,0 +1,180 @@
+"""Pallas TPU kernel: bit-sliced AMR injection replay, matmul-shaped.
+
+The engine's on-device injection path (``engine.CompiledInjector``) proves
+that ANY ``reduction.Schedule`` — including raw DSE candidates with no
+materialized 256x256 LUT — can run inside a jitted training step.  This
+kernel is its production form: one grid block evaluates the exact AMR
+products of a ``(bm, bn)`` output tile by replaying the reduction circuit
+directly on lane-packed operand words in VMEM.
+
+Data layout (the outer-product form of the bit-sliced replay):
+
+  * the **weight** side arrives pre-packed (``CompiledInjector.
+    pack_weights``): 32 output columns per uint32 word, one word row per
+    stored operand bit — ``(bk, n_opbits, bnw)`` words per block live in
+    VMEM and are re-used by every activation row of the tile;
+  * the **activation** side is gathered per block from a 256-entry
+    value->mask table (stored bit -> 0 or 0xFFFFFFFF): a full-word mask
+    broadcasts one activation operand against all 32 columns of a word, so
+    no per-pair lane packing ever happens;
+  * the schedule's lowering (``engine.LoweredReplay``) — PP gate minterm
+    masks, per-stage cell truth-table masks, wire routing, final-bit
+    weights — rides along as whole-block VMEM constant inputs (a few KB;
+    Pallas does not allow captured array constants), sliced per stage at
+    static offsets baked into the kernel closure.  A kernel is therefore
+    specialized to one schedule, exactly like the LUT kernel is
+    specialized to one table;
+  * per-pair products combine 16-bit limbs in int32 and accumulate across
+    the K grid sweep in an int32 VMEM scratch — bit-identical to the
+    ``amr_lut`` gather oracle (zero error, asserted in
+    tests/test_inject_replay.py).
+
+Grid: ``(M/bm, n_words/bnw, K/bk)`` with K innermost so the accumulator
+scratch carries across the K sweep; the n dimension is blocked in WORD
+units (32 columns).  Tiles come from the shared autotune table
+(``amr_matmul/tiling.py``, variant ``inject_replay``); ``interpret=None``
+resolves per backend exactly like the other variants (compiled Mosaic on
+real TPU, interpreter on CPU/GPU — ``kernels/pallas_config.py``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.engine import _LANE_BITS, LoweredReplay
+
+
+@functools.lru_cache(maxsize=32)  # keyed on lowering identity (see engine)
+def _replay_inputs(lowered: LoweredReplay):
+    """The lowering as flat const arrays (Pallas inputs) + static metadata.
+
+    Returns ``(consts, stage_bounds)``: per-stage cell tensors concatenate
+    along the cell axis and are sliced back at the static ``stage_bounds``
+    offsets inside the kernel; wire ids in ``in3`` are global (allocation
+    order), so they index the growing ``vals`` array unchanged.
+    """
+    bounds = []
+    c0 = 0
+    for st in lowered.stages:
+        bounds.append((c0, c0 + st.in3.shape[0]))
+        c0 = bounds[-1][1]
+    with jax.ensure_compile_time_eval():  # concrete under ambient traces
+        consts = (
+            jnp.asarray(lowered.gate_masks),                        # (n_pp, 4)
+            jnp.asarray(lowered.x_idx),                             # (n_pp,)
+            jnp.asarray(lowered.y_idx),                             # (n_pp,)
+            jnp.asarray(np.concatenate([st.in3 for st in lowered.stages])),
+            jnp.asarray(np.concatenate([st.sum_masks for st in lowered.stages])),
+            jnp.asarray(np.concatenate([st.carry_masks for st in lowered.stages])),
+            jnp.asarray(np.concatenate([st.perm for st in lowered.stages])),
+            jnp.asarray(lowered.final_ids),                         # (n_final,)
+            jnp.asarray(lowered.bit_weights.astype(np.int32)),      # (n_final,)
+        )
+    return consts, tuple(bounds)
+
+
+def _make_replay_kernel(stage_bounds, *, n_final: int, offset: int, n_k: int):
+    """Kernel body; every array constant arrives as a ref, only Python
+    scalars (stage offsets, the polarity offset, grid depth) are baked."""
+
+    def kernel(ia_ref, yw_ref, masks_ref, gate_ref, xi_ref, yi_ref, in3_ref,
+               sm_ref, cm_ref, perm_ref, fin_ref, bw_ref, out_ref, acc_ref):
+        k_idx = pl.program_id(2)
+
+        @pl.when(k_idx == 0)
+        def _init():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        ia = ia_ref[...]                   # (bm, bk) int32 operand indices
+        yw = yw_ref[...]                   # (bk, n_opbits, bnw) packed words
+        masks = masks_ref[...]             # (256, n_opbits) value->mask table
+        bm, bk = ia.shape
+        bnw = yw.shape[-1]
+        nb = masks.shape[-1]
+        xm = jnp.take(masks, ia.reshape(-1), axis=0).reshape(bm, bk, nb)
+        xw = xm.transpose(2, 0, 1)[:, :, :, None]   # (n_opbits, bm, bk, 1)
+        ywt = yw.transpose(1, 0, 2)[:, None, :, :]  # (n_opbits, 1, bk, bnw)
+
+        def bc(m):  # (rows,) -> (rows, 1, 1, 1): lift over the batch dims
+            return m.reshape(m.shape[0], 1, 1, 1)
+
+        # PP gates: x masks broadcast against packed y words
+        x = jnp.take(xw, xi_ref[...], axis=0)
+        y = jnp.take(ywt, yi_ref[...], axis=0)
+        nx, ny = ~x, ~y
+        gm = gate_ref[...]
+        vals = ((bc(gm[:, 0]) & (nx & ny)) | (bc(gm[:, 1]) & (nx & y))
+                | (bc(gm[:, 2]) & (x & ny)) | (bc(gm[:, 3]) & (x & y)))
+        # stage loop: cell tensors sliced at static per-stage offsets
+        in3_all, sm_all, cm_all, perm_all = (
+            in3_ref[...], sm_ref[...], cm_ref[...], perm_ref[...])
+        for c0, c1 in stage_bounds:
+            ins = jnp.take(vals, in3_all[c0:c1].reshape(-1), axis=0)
+            ins = ins.reshape(c1 - c0, 3, *vals.shape[1:])
+            a, b, c = ins[:, 0], ins[:, 1], ins[:, 2]
+            na, nb_, nc = ~a, ~b, ~c
+            minterms = (na & nb_ & nc, na & nb_ & c, na & b & nc, na & b & c,
+                        a & nb_ & nc, a & nb_ & c, a & b & nc, a & b & c)
+            sm, cm = sm_all[c0:c1], cm_all[c0:c1]
+            s_out = bc(sm[:, 0]) & minterms[0]
+            c_out = bc(cm[:, 0]) & minterms[0]
+            for t in range(1, 8):
+                s_out |= bc(sm[:, t]) & minterms[t]
+                c_out |= bc(cm[:, t]) & minterms[t]
+            new = jnp.concatenate([s_out, c_out], 0)
+            vals = jnp.concatenate(
+                [vals, jnp.take(new, perm_all[2 * c0:2 * c1], axis=0)], 0)
+        stored = jnp.take(vals, fin_ref[...], axis=0)  # (n_final, bm, bk, bnw)
+        # limb-combined products: sum_f 2**pos_f * bit_f - offset, in int32
+        shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, _LANE_BITS), 1)
+        bw = bw_ref[...]
+        prods = jnp.zeros((bm, bk, bnw, _LANE_BITS), jnp.int32)
+        for f in range(n_final):  # per-final-bit accumulation keeps the
+            # unpacked (bm, bk, bnw, 32) intermediates at 2 live tensors
+            bits = ((stored[f][..., None] >> shifts) & 1).astype(jnp.int32)
+            prods = prods + bw[f] * bits
+        prods = prods - offset                     # exact per-pair products
+        acc_ref[...] += prods.sum(axis=1).reshape(bm, bnw * _LANE_BITS)
+
+        @pl.when(k_idx == n_k - 1)
+        def _store():
+            out_ref[...] = acc_ref[...]
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("lowered", "bm", "bnw", "bk",
+                                             "interpret"))
+def _inject_replay_jit(ia, yw, masks, *, lowered, bm, bnw, bk, interpret):
+    """ia (rows, K) int32, yw (K, n_opbits, n_words) uint32 packed weights,
+    masks (256, n_opbits) uint32 -> (rows, n_words*32) int32 products sum."""
+    rows, k = ia.shape
+    n_words = yw.shape[-1]
+    nb = yw.shape[1]
+    assert rows % bm == 0 and n_words % bnw == 0 and k % bk == 0, \
+        (rows, n_words, k, bm, bnw, bk)
+    n_k = k // bk
+    grid = (rows // bm, n_words // bnw, n_k)
+    bn = bnw * _LANE_BITS
+    consts, stage_bounds = _replay_inputs(lowered)
+    whole = [pl.BlockSpec(c.shape, lambda i, j, k, nd=c.ndim: (0,) * nd)
+             for c in (masks, *consts)]
+    return pl.pallas_call(
+        _make_replay_kernel(stage_bounds, n_final=len(lowered.final_ids),
+                            offset=int(lowered.offset_total), n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, nb, bnw), lambda i, j, k: (k, 0, j)),
+            *whole,  # value->mask table + lowering consts, whole in VMEM
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, n_words * _LANE_BITS), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(ia, yw, masks, *consts)

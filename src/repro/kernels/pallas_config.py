@@ -16,12 +16,24 @@ Kernels default to ``interpret=None`` and resolve it here at trace time:
 kernels/amr_matmul/ops.py) so the env var is re-read on every call and a
 changed override never collides with a stale jit cache entry keyed on
 ``interpret=None``.
+
+The ``amr_inject`` numerics mode carries its own variant policy on top:
+``AMRNumerics.inject_impl=None`` autodetects between the XLA outer-product
+replay (``numerics/injection.py``) and the Pallas injection-replay kernel
+(``kernels/inject_replay``) — Pallas only where it compiles (real TPU;
+everywhere else the interpreter would be strictly slower than XLA), with
+the ``REPRO_INJECT_IMPL`` env var (``xla``/``pallas``/``auto``) overriding
+detection.  ``resolve_inject_impl`` runs at trace time (the inject matmul
+only exists inside jitted steps), so a changed env var takes effect on the
+next trace, not mid-executable.
 """
 from __future__ import annotations
 
 import os
 
 ENV_VAR = "REPRO_PALLAS_INTERPRET"
+INJECT_IMPL_ENV = "REPRO_INJECT_IMPL"
+INJECT_IMPLS = ("xla", "pallas")
 _TRUE = ("1", "true", "yes", "on")
 _FALSE = ("0", "false", "no", "off")
 
@@ -53,3 +65,32 @@ def default_interpret() -> bool:
 def resolve_interpret(interpret: bool | None) -> bool:
     """None -> autodetected/env-overridden mode; explicit bool wins."""
     return default_interpret() if interpret is None else interpret
+
+
+def default_inject_impl() -> str:
+    """Env override if set, else the Pallas replay kernel only where it
+    compiles (TPU); XLA elsewhere — interpreter-mode Pallas would be
+    strictly slower than the XLA outer-product replay it mirrors.
+
+    The TPU default rides on the same caveat as the other kernel variants
+    (ROADMAP: compiled lowerings still need a real-TPU validation run);
+    ``REPRO_INJECT_IMPL=xla`` pins the known-good XLA replay meanwhile —
+    both implementations are bit-identical wherever they run."""
+    raw = os.environ.get(INJECT_IMPL_ENV, "").strip().lower()
+    if raw in INJECT_IMPLS:
+        return raw
+    if raw and raw != "auto":
+        raise ValueError(
+            f"{INJECT_IMPL_ENV}={raw!r}: expected one of {INJECT_IMPLS} or 'auto'")
+    return "pallas" if backend_kind() == "tpu" else "xla"
+
+
+def resolve_inject_impl(impl: str | None) -> str:
+    """None -> autodetected/env-overridden impl; an explicit impl wins."""
+    if impl is None:
+        return default_inject_impl()
+    if impl not in INJECT_IMPLS:
+        raise ValueError(
+            f"inject_impl must be one of {INJECT_IMPLS} (or None = auto), "
+            f"got {impl!r}")
+    return impl

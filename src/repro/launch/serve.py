@@ -52,6 +52,9 @@ def main(argv=None) -> None:
                     help="approximate border column for the AMR modes")
     ap.add_argument("--rank", type=int, default=8,
                     help="low-rank error rank; 0 with amr_kernel = full-LUT kernel")
+    ap.add_argument("--inject-impl", default="auto", choices=["auto", "xla", "pallas"],
+                    help="amr_inject replay implementation: XLA outer-product "
+                         "replay or the Pallas kernel (auto = backend detect)")
     ap.add_argument("--pallas-interpret", default=None, choices=["auto", "0", "1"],
                     help="set REPRO_PALLAS_INTERPRET before any kernel traces")
     args = ap.parse_args(argv)
@@ -65,8 +68,10 @@ def main(argv=None) -> None:
 
     cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
     if args.numerics is not None:
+        impl = None if args.inject_impl == "auto" else args.inject_impl
         cfg = dataclasses.replace(cfg, numerics=AMRNumerics(
-            args.numerics, border=args.border, rank=args.rank))
+            args.numerics, border=args.border, rank=args.rank,
+            inject_impl=impl))
         print(f"[serve] numerics policy: {cfg.numerics}")
     mesh = make_host_mesh()
     rng = np.random.default_rng(args.seed)

@@ -44,14 +44,19 @@ def main(argv=None) -> None:
                     choices=[None, "exact", "amr_lut", "amr_inject",
                              "amr_lowrank", "amr_noise", "amr_kernel"])
     ap.add_argument("--border", type=int, default=8)
+    ap.add_argument("--inject-impl", default="auto", choices=["auto", "xla", "pallas"],
+                    help="amr_inject replay implementation: XLA outer-product "
+                         "replay or the Pallas kernel (auto = backend detect)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
     if args.numerics:
         from repro.numerics import AMRNumerics
+        impl = None if args.inject_impl == "auto" else args.inject_impl
         cfg = dataclasses.replace(
-            cfg, numerics=AMRNumerics(args.numerics, border=args.border))
+            cfg, numerics=AMRNumerics(args.numerics, border=args.border,
+                                      inject_impl=impl))
 
     mesh = make_host_mesh(model_parallel=args.tp)
     data = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq, batch=args.batch,

@@ -66,6 +66,10 @@ class AMRNumerics:
     # come from numerics.injection.register_schedule (process-level registry
     # — the policy itself must stay hashable for jit).
     schedule_ref: str | None = None
+    # amr_inject implementation: "xla" (outer-product replay in the trace),
+    # "pallas" (kernels/inject_replay), or None = backend autodetect with
+    # the REPRO_INJECT_IMPL env override (kernels/pallas_config).
+    inject_impl: str | None = None
 
     def is_exact(self) -> bool:
         return self.mode == "exact"
@@ -89,8 +93,22 @@ def matmul_exact(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
 
 
 def matmul_amr_lut(a: jnp.ndarray, b: jnp.ndarray, border: int) -> jnp.ndarray:
-    """Bit-exact AMR-MUL matmul via LUT gather (oracle; small shapes only)."""
+    """Bit-exact AMR-MUL matmul via LUT gather (oracle; small shapes only).
+
+    Raises ``ValueError`` at trace time when the contraction length could
+    saturate the int32 accumulator (K * max|product| >= 2**31) — the same
+    guard ``injection.injected_matmul_int`` applies, so oracle and injected
+    path reject exactly the same shapes instead of silently wrapping.
+    """
     table = _lut_constants(border)
+    k = a.shape[-1]
+    max_abs = lut_lib.table_max_abs(border)
+    if k * max_abs >= 2**31:
+        raise ValueError(
+            f"amr_lut int32 accumulator can saturate: K={k} with "
+            f"max|product|={max_abs} gives K*max|product| = {k * max_abs} "
+            f">= 2**31 = {2**31}; keep K <= {(2**31 - 1) // max_abs} for "
+            f"border={border} (or split the contraction before the matmul)")
     qa, sa = quantize_int8(a, axis=-1)           # per-row scale (..., M, 1)
     qb, sb = quantize_int8(b, axis=0)            # per-col scale (1, N)
     ia = qa.astype(jnp.int32) + 128              # (..., M, K)
@@ -176,11 +194,15 @@ def matmul_amr_inject(a: jnp.ndarray, b: jnp.ndarray, numerics: "AMRNumerics") -
     actual quantized operands, for ANY schedule (docs/numerics.md).
 
     Forward: quantize (STE), replay the reduction circuit on-device for the
-    operand pairs of this matmul (``injection.injected_matmul_int``,
-    K-chunked), rescale — bit-identical to the ``matmul_amr_lut`` oracle
-    when the schedule matches, but never materializes a 256x256 LUT or the
-    (.., M, K, N) product tensor, and accepts DSE candidate schedules via
-    ``numerics.schedule_ref``.
+    operand pairs of this matmul, rescale — bit-identical to the
+    ``matmul_amr_lut`` oracle when the schedule matches, but never
+    materializes a 256x256 LUT or the (.., M, K, N) product tensor, and
+    accepts DSE candidate schedules via ``numerics.schedule_ref``.  The
+    replay runs either as XLA ops in the surrounding trace
+    (``injection.injected_matmul_int``, row+K-chunked) or as the Pallas
+    injection-replay kernel (``kernels/inject_replay``), selected by
+    ``numerics.inject_impl`` (None = backend autodetect, docs/kernels.md);
+    both share the weight-side bit-pack and are bit-identical.
 
     Backward: the straight-through full-precision surrogate shared with
     amr_lowrank/amr_kernel, so a searched design point can be dropped
@@ -190,14 +212,20 @@ def matmul_amr_inject(a: jnp.ndarray, b: jnp.ndarray, numerics: "AMRNumerics") -
 
 
 def _inject_fwd(a, b, numerics):
-    from . import injection  # lazy: keeps module import light
+    from repro.kernels.pallas_config import resolve_inject_impl  # lazy:
+    from . import injection  # keeps module import light / breaks pkg cycle
 
     inj = injection.get_injector(numerics)
     qa, sa = quantize_int8_ste(a, axis=-1)
     qb, sb = quantize_int8_ste(b, axis=0)
     ia = jax.lax.stop_gradient(qa).astype(jnp.int32) + 128  # (..., M, K)
     ib = jax.lax.stop_gradient(qb).astype(jnp.int32) + 128  # (K, N)
-    acc = injection.injected_matmul_int(inj, ia, ib)        # int32, exact
+    if resolve_inject_impl(numerics.inject_impl) == "pallas":
+        from repro.kernels.inject_replay import inject_replay_matmul
+
+        acc = inject_replay_matmul(inj, ia, ib)             # int32, exact
+    else:
+        acc = injection.injected_matmul_int(inj, ia, ib)    # int32, exact
     return acc.astype(jnp.float32) * sa * sb, (a, b)
 
 

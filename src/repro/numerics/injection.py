@@ -8,34 +8,53 @@ under that policy then computes the *exact* per-sample AMR products of its
 actual quantized operands by replaying the reduction circuit on-device
 (``engine.CompiledInjector``), inside the jitted train/serve step.
 
-Two pieces:
+Three pieces:
 
   * the schedule registry — ``AMRNumerics`` must stay hashable/static for
     jit, so custom schedules are registered once per process under a string
     handle (``register_schedule``) and the policy carries only the handle;
     ``schedule_ref=None`` resolves to the paper's default schedule for
-    ``(n_digits=2, numerics.border)``.
-  * ``injected_matmul_int`` — the K-chunked product accumulation: the
-    (rows, k_chunk, N) operand-pair block is replayed per scan step and
-    accumulated in int32, so peak memory is bounded by ``max_pairs``
-    instead of the full (rows, K, N) product tensor the ``amr_lut`` oracle
-    materializes.  The int32 sum is bit-identical to the LUT-gather oracle
-    at any chunking (integer addition is associative).
+    ``(n_digits=2, numerics.border)``.  Anonymous handles come from a
+    monotonic counter that skips taken names — they are never recycled, so
+    an explicit ``name="custom:1"`` registration can't be clobbered.
+  * ``injected_matmul_int`` — the outer-product accumulation: the weight
+    side is bit-packed ONCE per matmul (32 columns per uint32 word,
+    ``CompiledInjector.pack_weights``) and each activation operand replays
+    as full-word bit masks against it, so the weight-side gather/pack cost
+    is shared by every activation row instead of being repeated per
+    ``(row, k, col)`` pair as the PR 4 pairwise path did.  Chunked over
+    rows AND K so ``max_pairs`` genuinely bounds the pairs replayed per
+    scan step.  Bit-identical to the LUT-gather oracle at any chunking
+    (integer addition is associative).
+  * the weight-pack cache — for CONCRETE (non-traced) weights, e.g. the
+    frozen weights of an eager serving loop or a benchmark, the packed
+    words are cached across calls keyed on array identity, with weakref
+    eviction so an updated weight array always repacks (never stale).
+
+The Pallas form of the same replay lives in ``kernels/inject_replay`` and
+is selected per policy via ``AMRNumerics.inject_impl`` (docs/numerics.md).
 """
 from __future__ import annotations
+
+import weakref
 
 import numpy as np
 
 from repro.core import engine, reduction
 
 __all__ = ["register_schedule", "resolve_schedule", "get_injector",
-           "injected_matmul_int"]
+           "injected_matmul_int", "plan_chunks", "check_accumulation_bound",
+           "packed_weights"]
 
 # Registered custom schedules (DSE candidates etc.), keyed by handle.
 # Default design points (schedule_ref=None) are NOT cached here — they go
 # through engine.get_injector's lru_cache, one compile per border process-wide.
 _SCHEDULES: dict[str, reduction.Schedule] = {}
 _INJECTORS: dict[str, engine.CompiledInjector] = {}
+
+# Anonymous-handle counter: monotonic across registrations AND replacements,
+# skipping explicitly-taken names, so handles are never silently reused.
+_ANON_COUNTER = 0
 
 # Upper bound on operand pairs replayed per scan step (memory knob: the
 # replay holds ~n_wires uint32 words per 32 pairs).
@@ -47,16 +66,25 @@ def register_schedule(schedule: reduction.Schedule, name: str | None = None) -> 
 
     The numerics matmul path quantizes to int8, so only 2-digit schedules
     (whose MRSD range strictly contains int8) are accepted.  Re-registering
-    an existing name replaces the schedule and drops its compiled injector.
+    an existing name replaces the schedule and drops its compiled injector;
+    anonymous handles (``name=None``) draw from a monotonic counter that
+    skips taken names, so they never collide with an explicit
+    ``custom:<n>`` registration and are never recycled.
     """
+    global _ANON_COUNTER
     if schedule.n_digits != 2:
         raise ValueError(
             f"amr_inject matmuls run on int8 operands: need a 2-digit "
             f"schedule, got n_digits={schedule.n_digits}")
-    handle = name if name is not None else f"custom:{len(_SCHEDULES)}"
-    _SCHEDULES[handle] = schedule
-    _INJECTORS.pop(handle, None)
-    return handle
+    if name is None:
+        while True:
+            name = f"custom:{_ANON_COUNTER}"
+            _ANON_COUNTER += 1
+            if name not in _SCHEDULES:
+                break
+    _SCHEDULES[name] = schedule
+    _INJECTORS.pop(name, None)
+    return name
 
 
 def resolve_schedule(numerics) -> reduction.Schedule:
@@ -83,22 +111,171 @@ def get_injector(numerics) -> engine.CompiledInjector:
     return inj
 
 
+def check_accumulation_bound(inj: engine.CompiledInjector, k: int) -> None:
+    """Trace-time guard: K products must fit the int32 accumulator.
+
+    The injected matmul accumulates K exact products per output element in
+    int32; ``inj.max_abs_product`` is the exact max |product| over the
+    int8 x int8 domain (computed once at injector compile time), so the
+    worst-case partial sum is ``K * max|product|``.
+    """
+    worst = k * inj.max_abs_product
+    if worst >= 2**31:
+        raise ValueError(
+            f"amr_inject int32 accumulator can saturate: K={k} with "
+            f"max|product|={inj.max_abs_product} gives K*max|product| = "
+            f"{worst} >= 2**31 = {2**31}; keep K <= "
+            f"{(2**31 - 1) // inj.max_abs_product} for this schedule "
+            f"(or split the contraction before the matmul)")
+
+
+def plan_chunks(rows: int, k: int, n_words: int, max_pairs: int) -> tuple[int, int]:
+    """(row_chunk, k_chunk) bounding the pairs replayed per scan step.
+
+    Picks the largest divisors of ``rows``/``k`` with
+    ``row_chunk * k_chunk * n_words * 32 <= max_pairs`` (K first: a wider K
+    chunk amortizes more of the scan overhead).  Chunks are divisors so
+    scan steps stay uniform with no padding.  The floor is one row x one k
+    per step — ``n_words * 32`` pairs, the width of a single packed replay,
+    which is not further divisible.
+    """
+    from repro.kernels.amr_matmul.tiling import _largest_divisor_leq
+
+    budget = max(1, max_pairs // engine._LANE_BITS)  # words per step
+    kc = _largest_divisor_leq(k, max(1, budget // n_words))
+    rc = _largest_divisor_leq(rows, max(1, budget // (kc * n_words)))
+    return rc, kc
+
+
+class _WeightPackCache:
+    """Packed-weight-word cache for concrete IMMUTABLE operand arrays.
+
+    Keyed on the (injector, array) object identities; each entry holds a
+    weakref to the source array whose collection evicts the entry, so a
+    recycled ``id`` can never alias a stale pack — and an updated weight
+    array (a NEW object: jax arrays are immutable) always repacks.  Only
+    ``jax.Array`` instances may be cached (``packed_weights`` enforces it):
+    a mutable numpy array updated IN PLACE would keep its identity and
+    silently serve the stale pack.  Inside a jit trace operands are
+    tracers and the cache is bypassed entirely.
+    """
+
+    def __init__(self, maxsize: int = 64):
+        self._packs: dict[tuple, tuple] = {}
+        self._maxsize = maxsize
+
+    def get(self, inj: engine.CompiledInjector, ib):
+        key = (id(inj), id(ib))
+        hit = self._packs.get(key)
+        if hit is not None:
+            return hit[2]
+        packed = inj.pack_weights(ib)
+        try:
+            ref = weakref.ref(ib, lambda _r, key=key: self._packs.pop(key, None))
+        except TypeError:
+            return packed  # not weakref-able: never cache (id could recycle)
+        while len(self._packs) >= self._maxsize:  # FIFO eviction
+            self._packs.pop(next(iter(self._packs)))
+        # the strong injector ref pins id(inj) for the entry's lifetime
+        self._packs[key] = (ref, inj, packed)
+        return packed
+
+    def clear(self) -> None:
+        self._packs.clear()
+
+    def __len__(self) -> int:
+        return len(self._packs)
+
+
+WEIGHT_PACKS = _WeightPackCache()
+
+
+def packed_weights(inj: engine.CompiledInjector, ib):
+    """Weight-side bit-pack of ``ib`` (K, N): cached when concrete.
+
+    Traced operands (inside jit) pack in-trace — still once per matmul,
+    shared across all activation rows; concrete ``jax.Array`` operands
+    (eager serving loops, benchmarks) hit the process-level
+    ``WEIGHT_PACKS`` cache.  Anything else (e.g. a numpy array, mutable
+    in place under an unchanged identity) packs fresh every call.
+    """
+    import jax
+
+    if isinstance(ib, jax.core.Tracer) or not isinstance(ib, jax.Array):
+        return inj.pack_weights(ib)
+    return WEIGHT_PACKS.get(inj, ib)
+
+
 def injected_matmul_int(inj: engine.CompiledInjector, ia, ib,
-                        max_pairs: int = MAX_PAIRS_PER_CHUNK):
+                        max_pairs: int = MAX_PAIRS_PER_CHUNK, *,
+                        packed_ib=None):
     """Exact integer AMR matmul: ``out[.., m, n] = sum_k AMR(ia[.., m, k], ib[k, n])``.
 
     ``ia``: (..., M, K) and ``ib``: (K, N) traced int32 operand indices
     (value + 128).  Returns (..., M, N) int32 — bit-identical to summing
-    LUT-gathered products, computed via the on-device bit-sliced replay in
-    K-chunks of at most ``max_pairs`` operand pairs (``lax.scan``
-    accumulation keeps peak memory flat; exact for K up to ~2**14 before
-    the int32 accumulator could saturate, far beyond oracle shapes).
+    LUT-gathered products, computed by the outer-product bit-sliced replay:
+    the weight side is lane-packed once (``packed_weights``), activations
+    replay as full-word masks against it, and accumulation runs under
+    ``lax.scan`` over row and K chunks sized by ``plan_chunks`` so at most
+    ``max_pairs`` operand pairs are in flight per step.  Raises
+    ``ValueError`` at trace time when K could saturate the int32
+    accumulator (``check_accumulation_bound``).  ``packed_ib`` short-cuts
+    the weight-side pack with a precomputed ``pack_weights(ib)`` result
+    (e.g. one pack fed to many jitted calls over frozen weights).
     """
     import jax
     import jax.numpy as jnp
 
     *lead, M, K = ia.shape
     N = ib.shape[-1]
+    check_accumulation_bound(inj, K)
+    rows = int(np.prod(lead, dtype=np.int64)) * M if lead else M
+    ia2 = ia.reshape(rows, K)
+    yw = packed_ib if packed_ib is not None else packed_weights(inj, ib)
+    n_words = yw.shape[-1]
+    npad = n_words * engine._LANE_BITS
+    rc, kc = plan_chunks(rows, K, n_words, max_pairs)
+    nr, nk = rows // rc, K // kc
+    ys = yw.reshape(nk, kc, *yw.shape[1:])           # (nk, kc, n_opbits, W)
+    xs = ia2.reshape(nr, rc, nk, kc).transpose(0, 2, 1, 3)  # (nr, nk, rc, kc)
+
+    def k_body(acc, xy):
+        idx_c, y_c = xy                              # (rc, kc), (kc, n_opbits, W)
+        prods = inj.products_outer(inj.operand_masks(idx_c), y_c)
+        return acc + jnp.sum(prods, axis=1, dtype=jnp.int32), None
+
+    def row_block(idx_row):                          # (nk, rc, kc) -> (rc, npad)
+        acc0 = jnp.zeros((rc, npad), jnp.int32)
+        if nk == 1:  # no scan wrapper for the single-chunk case
+            acc, _ = k_body(acc0, (idx_row[0], ys[0]))
+        else:
+            acc, _ = jax.lax.scan(k_body, acc0, (idx_row, ys))
+        return acc
+
+    if nr == 1:
+        out = row_block(xs[0])[None]
+    else:
+        _, out = jax.lax.scan(lambda c, x: (c, row_block(x)), None, xs)
+    return out.reshape(rows, npad)[:, :N].reshape(*lead, M, N)
+
+
+def _injected_matmul_pairs(inj: engine.CompiledInjector, ia, ib,
+                           max_pairs: int = MAX_PAIRS_PER_CHUNK):
+    """The PR 4 pairwise replay path, kept as a reference implementation.
+
+    Broadcasts every ``(row, k, col)`` operand pair and replays them
+    individually (value->bits gather + lane packing PER PAIR, weight bits
+    re-gathered for every activation row) — the baseline
+    ``benchmarks/inject_bench.py`` measures the outer-product path against.
+    Note its K-only chunking reproduces the PR 4 memory-knob bypass: when
+    ``rows * N > max_pairs`` each step still replays ``rows * N`` pairs.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    *lead, M, K = ia.shape
+    N = ib.shape[-1]
+    check_accumulation_bound(inj, K)
     rows = int(np.prod(lead, dtype=np.int64)) * M if lead else M
     ia2 = ia.reshape(rows, K)
     kc = max(1, min(K, max_pairs // max(rows * N, 1)))

@@ -51,6 +51,19 @@ TRAIN = {
     ],
     "wall_clock_s": 60.0,
 }
+INJECT = {
+    "schema": "BENCH_inject/v1", "backend": "cpu", "interpret": True,
+    "quick": True, "border": 8,
+    "results": [
+        {"impl": "pairs", "schedule": "default", "m": 32, "n": 64, "k": 48,
+         "bit_exact_vs_lut": True, "max_abs_diff": 0.0, "us_per_call": 20000.0},
+        {"impl": "xla_cached", "schedule": "default", "m": 32, "n": 64, "k": 48,
+         "bit_exact_vs_lut": True, "max_abs_diff": 0.0, "us_per_call": 9000.0},
+        {"impl": "pallas", "schedule": "dse_c0", "m": 32, "n": 64, "k": 48,
+         "bit_exact_vs_lut": True, "max_abs_diff": 0.0, "us_per_call": 11000.0},
+    ],
+    "wall_clock_s": 30.0,
+}
 
 
 def _errors(fresh, baseline):
@@ -148,6 +161,33 @@ class TestTrainArtifact:
         assert any("frontier" in e for e in _errors(bad, DSE))
 
 
+class TestInjectArtifact:
+    def test_identical_passes(self):
+        assert _errors(copy.deepcopy(INJECT), INJECT) == []
+
+    def test_oracle_mismatch_is_caught_per_impl(self):
+        """Any replay implementation drifting off the LUT oracle — even by
+        one integer — must fail the gate."""
+        for i in range(len(INJECT["results"])):
+            bad = copy.deepcopy(INJECT)
+            bad["results"][i]["bit_exact_vs_lut"] = False
+            bad["results"][i]["max_abs_diff"] = 1.0
+            errs = _errors(bad, INJECT)
+            assert any("bit_exact_vs_lut" in e for e in errs), i
+            assert any("max_abs_diff" in e for e in errs), i
+
+    def test_timing_drift_is_advisory(self):
+        slow = copy.deepcopy(INJECT)
+        slow["results"][0]["us_per_call"] *= 10
+        errs, advisories = check_bench.compare_artifacts(slow, INJECT, "t")
+        assert errs == [] and any("us_per_call" in a for a in advisories)
+
+    def test_missing_impl_row_is_caught(self):
+        bad = copy.deepcopy(INJECT)
+        bad["results"].pop()  # drop the pallas/dse arm
+        assert any("missing" in e for e in _errors(bad, INJECT))
+
+
 class TestMain:
     @pytest.fixture()
     def dirs(self, tmp_path):
@@ -159,6 +199,7 @@ class TestMain:
             (d / "BENCH_kernel.json").write_text(json.dumps(KERNEL))
             (d / "BENCH_dse.json").write_text(json.dumps(DSE))
             (d / "BENCH_train.json").write_text(json.dumps(TRAIN))
+            (d / "BENCH_inject.json").write_text(json.dumps(INJECT))
         return fresh, base
 
     def test_main_clean(self, dirs):
@@ -185,5 +226,6 @@ class TestMain:
         for name in check_bench.DEFAULT_ARTIFACTS:
             p = root / "benchmarks" / "baselines" / name
             art = json.loads(p.read_text())
-            assert art["schema"].startswith(("BENCH_kernel/", "BENCH_dse/", "BENCH_train/"))
+            assert art["schema"].startswith(
+                ("BENCH_kernel/", "BENCH_dse/", "BENCH_train/", "BENCH_inject/"))
             assert art["results"], f"{name} baseline has no rows"

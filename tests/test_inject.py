@@ -71,6 +71,48 @@ class TestInjectorProducts:
         np.testing.assert_array_equal(got, table[[0, 255, 128], [255, 0, 128]])
 
 
+class TestRegistryHandles:
+    def test_anonymous_handle_never_clobbers_explicit(self):
+        """Regression: ``custom:{len(_SCHEDULES)}`` could silently replace an
+        earlier explicit ``custom:<n>`` registration."""
+        sched = reduction.get_schedule(2, 8)
+        n = injection._ANON_COUNTER
+        explicit = injection.register_schedule(sched, name=f"custom:{n}")
+        marker = reduction.get_schedule(2, 6)
+        injection._SCHEDULES[explicit] = marker  # sentinel to detect clobber
+        anon = injection.register_schedule(sched)
+        assert anon != explicit
+        assert injection._SCHEDULES[explicit] is marker  # untouched
+        assert injection._SCHEDULES[anon] is sched
+
+    def test_handles_monotonic_across_replacement(self):
+        """Replacing a registration must not make later anonymous handles
+        reuse an existing name."""
+        sched = reduction.get_schedule(2, 8)
+        a1 = injection.register_schedule(sched)
+        injection.register_schedule(sched, name=a1)  # replace in place
+        a2 = injection.register_schedule(sched)
+        assert a2 != a1
+        a3 = injection.register_schedule(sched)
+        assert len({a1, a2, a3}) == 3
+
+
+class _RecordingInjector:
+    """Duck-typed CompiledInjector proxy recording peak replayed pairs."""
+
+    def __init__(self, inj):
+        self._inj = inj
+        self.peak_pairs = 0
+
+    def __getattr__(self, name):
+        return getattr(self._inj, name)
+
+    def products_outer(self, xm, yw):
+        r, c, _ = xm.shape
+        self.peak_pairs = max(self.peak_pairs, r * c * yw.shape[-1] * 32)
+        return self._inj.products_outer(xm, yw)
+
+
 class TestInjectedMatmulInt:
     def test_chunking_invariance(self):
         """Any max_pairs budget gives the identical int32 accumulation."""
@@ -94,6 +136,57 @@ class TestInjectedMatmulInt:
         want = table[ia[..., :, :, None], ib[None, None, :, :]].sum(axis=-2)
         np.testing.assert_array_equal(got, want)
 
+    def test_matches_pairwise_reference_path(self):
+        """The outer-product refactor == the PR 4 pairwise replay, bitwise."""
+        inj = engine.get_injector(2, 8)
+        rng = np.random.default_rng(4)
+        ia = jnp.asarray(rng.integers(0, 256, (5, 12)))
+        ib = jnp.asarray(rng.integers(0, 256, (12, 9)))
+        got = np.asarray(injection.injected_matmul_int(inj, ia, ib))
+        want = np.asarray(injection._injected_matmul_pairs(inj, ia, ib))
+        np.testing.assert_array_equal(got, want)
+
+    def test_max_pairs_bounds_rows_too(self):
+        """Regression: with rows * N > max_pairs and K=1, the PR 4 path
+        clamped kc to 1 but still replayed rows * N pairs per step; row
+        chunking must keep every step within the budget, bit-identically."""
+        inj = engine.get_injector(2, 8)
+        table = lut.build_int8_lut(8)
+        rng = np.random.default_rng(5)
+        ia = jnp.asarray(rng.integers(0, 256, (64, 1)))   # adversarial: M=64,
+        ib = jnp.asarray(rng.integers(0, 256, (1, 32)))   # K=1, rows*N = 2048
+        max_pairs = 256
+        rec = _RecordingInjector(inj)
+        got = np.asarray(injection.injected_matmul_int(
+            rec, ia, ib, max_pairs=max_pairs))
+        assert 0 < rec.peak_pairs <= max_pairs
+        want = table[np.asarray(ia)[:, :, None], np.asarray(ib)[None]].sum(1)
+        np.testing.assert_array_equal(got, want)
+
+    def test_plan_chunks_budget(self):
+        assert injection.plan_chunks(64, 1, 1, 256) == (8, 1)
+        rc, kc = injection.plan_chunks(48, 24, 2, 1 << 18)
+        assert rc == 48 and kc == 24          # whole problem inside budget
+        assert injection.plan_chunks(7, 5, 3, 1) == (1, 1)  # floor case
+        for rows, k, w, cap in [(96, 13, 2, 2048), (33, 7, 5, 640)]:
+            rc, kc = injection.plan_chunks(rows, k, w, cap)
+            assert rows % rc == 0 and k % kc == 0
+            assert rc * kc * w * 32 <= max(cap, w * 32)
+
+    def test_saturation_guard_names_both_numbers(self):
+        inj = engine.get_injector(2, 8)
+        k_bad = 2**31 // inj.max_abs_product + 1
+        ia = jnp.zeros((1, k_bad), jnp.int32)
+        ib = jnp.zeros((k_bad, 1), jnp.int32)
+        for fn in (injection.injected_matmul_int,
+                   injection._injected_matmul_pairs):
+            with pytest.raises(ValueError, match="saturate") as ei:
+                fn(inj, ia, ib)
+            assert str(k_bad) in str(ei.value)
+            assert str(inj.max_abs_product) in str(ei.value)
+        # safe K traces fine
+        injection.check_accumulation_bound(inj, 4096)
+
 
 class TestMatmulAmrInject:
     def setup_method(self):
@@ -115,6 +208,19 @@ class TestMatmulAmrInject:
         want = np.stack([np.asarray(matmul_amr_lut(self.a, self.b, 8)),
                          np.asarray(matmul_amr_lut(self.a * 0.5, self.b, 8))])
         np.testing.assert_array_equal(got, want)
+
+    def test_lut_oracle_saturation_guard(self):
+        """matmul_amr_lut rejects K that could wrap its int32 accumulation,
+        naming K and max|product| — the same bound the injected path checks."""
+        from repro.core import lut as lut_lib
+
+        max_abs = lut_lib.table_max_abs(8)
+        k_bad = 2**31 // max_abs + 1
+        a = jnp.zeros((1, k_bad), jnp.float32)
+        b = jnp.zeros((k_bad, 1), jnp.float32)
+        with pytest.raises(ValueError, match="saturate") as ei:
+            matmul_amr_lut(a, b, border=8)
+        assert str(k_bad) in str(ei.value) and str(max_abs) in str(ei.value)
 
     def test_grad_matches_full_precision_surrogate(self):
         """STE backward == plain matmul vjp (finite, correct shapes)."""

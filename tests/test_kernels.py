@@ -164,7 +164,7 @@ class TestPallasPolicy:
         assert pallas_config.resolve_interpret(True) is True
 
     def test_pick_tiles_divides_shapes(self):
-        for variant in ("lowrank", "lut"):
+        for variant in ("lowrank", "lut", "inject_replay"):
             for (m, n, k) in [(128, 128, 128), (96, 64, 160), (100, 12, 7)]:
                 t = pick_tiles(m, n, k, variant=variant)
                 assert m % t.bm == 0 and n % t.bn == 0 and k % t.bk == 0
@@ -174,6 +174,19 @@ class TestPallasPolicy:
         assert t == TileConfig(128, 128, 32)  # autotune entry, no clamping
         t = pick_tiles(256, 256, 256, variant="lut", backend="tpu", bk=256)
         assert t.bk == 256  # explicit override wins over the table
+        t = pick_tiles(256, 256, 256, variant="inject_replay", backend="tpu")
+        assert t == TileConfig(32, 128, 8)  # third-variant autotune entry
+
+    def test_pick_tiles_rejects_non_divisor_overrides(self):
+        """Regression: a bm/bn/bk override that does not divide the problem
+        shape produced a grid missing a partial tile; now a clear error."""
+        for variant in ("lowrank", "lut", "inject_replay"):
+            for kwargs in ({"bm": 96}, {"bn": 100}, {"bk": 5}, {"bm": 0}):
+                with pytest.raises(ValueError, match="does not tile"):
+                    pick_tiles(128, 128, 128, variant=variant, **kwargs)
+        # exact divisors still pass
+        t = pick_tiles(128, 128, 128, variant="inject_replay", bm=64, bn=32, bk=2)
+        assert t == TileConfig(64, 32, 2)
 
 
 class TestSSDKernel:
