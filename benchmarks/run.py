@@ -18,7 +18,8 @@ import traceback
 
 from . import (dryrun_summary, dse_bench, fig4_comparison, fig5_fa_usage,
                fig6_error_dist, inject_bench, kernel_bench, lowrank_fidelity,
-               table1_accuracy, table2_energy, train_numerics_bench)
+               serve_bench, table1_accuracy, table2_energy,
+               train_numerics_bench)
 
 MODULES = {
     "table1": table1_accuracy,
@@ -31,6 +32,7 @@ MODULES = {
     "dse": dse_bench,
     "train": train_numerics_bench,
     "inject": inject_bench,
+    "serve": serve_bench,
     "dryrun": dryrun_summary,
 }
 

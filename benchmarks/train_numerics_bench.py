@@ -124,7 +124,7 @@ def _train_arm(mode, schedule_tag, numerics, steps):
     grads = jax.jit(make_grads_step(cfg))(state.params, last_b)
     return {
         "mode": mode, "schedule": schedule_tag,
-        "border": None if mode == "exact" else BORDER,
+        "border": None if numerics.is_exact() else BORDER,
         "first_loss": round(losses[0], 6), "final_loss": round(losses[-1], 6),
         "loss_finite": bool(np.isfinite(losses).all()),
         "grad_finite": _finite(grads),

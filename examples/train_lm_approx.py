@@ -76,36 +76,30 @@ def run(cfg: ModelConfig, steps: int, batch: int, seq: int, seed: int = 0):
 
 
 def main() -> None:
+    from repro.launch.cli import (add_numerics_args, apply_pallas_interpret,
+                                  numerics_from_args, parse_modes, policy_label)
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--preset", default="small", choices=list(PRESETS))
-    ap.add_argument("--border", type=int, default=8)
-    ap.add_argument("--rank", type=int, default=16)
-    ap.add_argument("--modes", default="exact,amr_lowrank",
-                    help="comma list from: exact, amr_lowrank, amr_noise, amr_inject")
+    add_numerics_args(ap, multi=True, default="exact,amr_lowrank",
+                      rank_default=16)
     ap.add_argument("--dse-candidate", action="store_true",
                     help="also train a DSE-searched candidate schedule via amr_inject")
     ap.add_argument("--out", default="experiments/train_approx.json")
     args = ap.parse_args()
     p = PRESETS[args.preset]
+    apply_pallas_interpret(args, tag="example")
 
-    from repro.numerics import MODES
-
-    modes = [m.strip() for m in args.modes.split(",") if m.strip()]
-    unknown = [m for m in modes if m not in MODES]
-    if unknown:
-        ap.error(f"unknown numerics mode(s) {unknown}; choose from {list(MODES)}")
-
+    # every arm is built the same way — the registry validates the mode name
+    # and its parameters; there is no per-mode construction logic here
     arms: list[tuple[str, AMRNumerics]] = []
-    for mode in modes:
-        if mode == "exact":
-            arms.append(("exact", AMRNumerics("exact")))
-        elif mode == "amr_lowrank":
-            arms.append((f"amr_lowrank(b={args.border},r={args.rank})",
-                         AMRNumerics("amr_lowrank", border=args.border, rank=args.rank)))
-        else:  # amr_noise / amr_inject (default schedule for the border)
-            arms.append((f"{mode}(b={args.border})",
-                         AMRNumerics(mode, border=args.border)))
+    for mode in parse_modes(args):
+        try:
+            nm = numerics_from_args(args, mode=mode)
+        except ValueError as e:
+            ap.error(str(e))
+        arms.append((policy_label(nm), nm))
     if args.dse_candidate:
         # a raw searched assignment, trained with NO materialized LUT
         from repro.core.dse import materialize, search_assignments

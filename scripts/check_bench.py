@@ -21,7 +21,12 @@ produced ``BENCH_kernel.json`` / ``BENCH_dse.json`` / ``BENCH_train.json``
   * for the inject artifact: any flip of ``bit_exact_vs_lut`` /
     ``max_abs_diff`` on any replay implementation row — every impl
     (pairs / xla / xla_cached / pallas) must agree with the LUT-gather
-    oracle bit for bit.
+    oracle bit for bit,
+  * for the serve artifact: any flip of the continuous-batching exactness
+    fields (``bit_exact`` / ``tokens_match`` / ``max_abs_diff`` — slot-
+    batched decode must equal solo decode bitwise) or of ``complete`` /
+    ``requests`` / ``tokens`` on the throughput rows; serve latency and
+    tokens/s are advisory.
 
 Timings (``us_per_call``, ``s_per_step``, ``wall_clock_s``), energy-model
 outputs (``energy_pj``), search-effort counters (``nodes``) and train LOSS
@@ -44,7 +49,7 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 DEFAULT_ARTIFACTS = ("BENCH_kernel.json", "BENCH_dse.json", "BENCH_train.json",
-                     "BENCH_inject.json")
+                     "BENCH_inject.json", "BENCH_serve.json")
 FLOAT_RTOL = 1e-6  # float-path (non-bit-exact) kernel error rows only
 
 
@@ -59,6 +64,8 @@ def _row_key(schema: str, row: dict) -> tuple:
                 row.get("border"))
     if schema.startswith("BENCH_inject/"):
         return (row["impl"], row["schedule"], row["m"], row["n"], row["k"])
+    if schema.startswith("BENCH_serve/"):
+        return (row["kind"], row["mode"], row["concurrency"])
     raise ValueError(f"unknown artifact schema {schema!r}")
 
 
@@ -77,6 +84,13 @@ def _gated_fields(schema: str, row: dict) -> list[tuple[str, bool]]:
     if schema.startswith("BENCH_inject/"):
         # integer-derived oracle agreement: exactly equal or regressed
         return [("bit_exact_vs_lut", True), ("max_abs_diff", True)]
+    if schema.startswith("BENCH_serve/"):
+        if row.get("kind") == "bit_exact":
+            # batched-vs-solo decode agreement is integer/bit-derived:
+            # token streams AND logit streams must match exactly
+            return [("bit_exact", True), ("tokens_match", True),
+                    ("max_abs_diff", True)]
+        return [("complete", True), ("requests", True), ("tokens", True)]
     return [("expected_error", True), ("mred", True), ("mared", True),
             ("nmed", True), ("replay_match", True), ("frontier", True),
             ("complete", True)]
@@ -89,6 +103,9 @@ def _advisory_fields(schema: str) -> list[str]:
         return ["first_loss", "final_loss", "s_per_step"]
     if schema.startswith("BENCH_inject/"):
         return ["us_per_call"]
+    if schema.startswith("BENCH_serve/"):
+        return ["p50_latency_ms", "p99_latency_ms", "tokens_per_s",
+                "steady_tokens_per_s"]
     return ["energy_pj", "nodes"]
 
 
@@ -108,7 +125,8 @@ def compare_artifacts(fresh: dict, baseline: dict, name: str) -> tuple[list[str]
     schema = baseline.get("schema", "")
     if fresh.get("schema") != schema:
         return [f"{name}: schema {fresh.get('schema')!r} != baseline {schema!r}"], []
-    for meta in ("samples", "quick", "engine", "steps", "border", "config"):
+    for meta in ("samples", "quick", "engine", "steps", "border", "config",
+                 "gen", "capacity"):
         if meta in baseline and fresh.get(meta) != baseline[meta]:
             errors.append(f"{name}: run config {meta}={fresh.get(meta)!r} "
                           f"!= baseline {baseline[meta]!r}")

@@ -1,0 +1,105 @@
+"""Shared numerics CLI surface for every launcher / driver.
+
+One place defines how a numerics policy is expressed on a command line
+(``--numerics/--modes --border --rank --noise-seed --inject-impl
+--pallas-interpret``) and how parsed args become an ``AMRNumerics``.
+Choices are derived from the mode REGISTRY (``repro.numerics.mode_names``)
+— adding a mode in numerics/ makes it appear in every CLI with no edits
+here, and no launcher string-matches mode names.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+from typing import Callable
+
+from repro.numerics import AMRNumerics, get_mode, mode_names
+
+
+def add_numerics_args(
+    ap: argparse.ArgumentParser,
+    *,
+    multi: bool = False,
+    default: str | None = None,
+    rank_default: int = 8,
+) -> None:
+    """Attach the numerics policy flags to ``ap``.
+
+    ``multi=False`` adds ``--numerics`` (single mode, choices from the
+    registry); ``multi=True`` adds ``--modes`` (comma list — comparison
+    drivers training several arms). ``default=None`` means "keep the
+    config's policy" for single-mode launchers.
+    """
+    g = ap.add_argument_group("numerics policy")
+    if multi:
+        g.add_argument(
+            "--modes", default=default,
+            help=f"comma list of numerics modes from: {', '.join(mode_names())}")
+    else:
+        g.add_argument(
+            "--numerics", default=default, choices=list(mode_names()),
+            help="override the config's matmul numerics policy")
+    g.add_argument("--border", type=int, default=8,
+                   help="approximate border column for the AMR modes")
+    g.add_argument("--rank", type=int, default=rank_default,
+                   help="low-rank error rank; 0 with amr_kernel = full-LUT kernel")
+    g.add_argument("--noise-seed", type=int, default=0,
+                   help="PRNG seed for the Gaussian-surrogate mode")
+    g.add_argument("--inject-impl", default="auto",
+                   choices=["auto", *_inject_impls()],
+                   help="injection replay implementation (auto = backend detect)")
+    g.add_argument("--pallas-interpret", default=None, choices=["auto", "0", "1"],
+                   help="set REPRO_PALLAS_INTERPRET before any kernel traces")
+
+
+def _inject_impls() -> tuple[str, ...]:
+    from repro.kernels.pallas_config import INJECT_IMPLS
+
+    return INJECT_IMPLS
+
+
+def apply_pallas_interpret(args, log: Callable[[str], None] = print,
+                           tag: str = "launch") -> None:
+    """Honour ``--pallas-interpret`` BEFORE any kernel traces happen."""
+    value = getattr(args, "pallas_interpret", None)
+    if value is None:
+        return
+    from repro.kernels.pallas_config import ENV_VAR, default_interpret
+
+    os.environ[ENV_VAR] = value
+    log(f"[{tag}] {ENV_VAR}={value} (resolved interpret={default_interpret()})")
+
+
+def numerics_from_args(args, mode: str | None = None) -> AMRNumerics | None:
+    """Parsed args -> AMRNumerics (None = keep the config's policy).
+
+    ``mode`` overrides the parsed mode — multi-arm drivers call this once
+    per entry of ``--modes``. Validation (unknown mode, bad params) happens
+    in the ``AMRNumerics`` constructor against the registry, so the error
+    names the valid modes.
+    """
+    m = mode if mode is not None else getattr(args, "numerics", None)
+    if m is None:
+        return None
+    impl = None if args.inject_impl == "auto" else args.inject_impl
+    return AMRNumerics(m, border=args.border, rank=args.rank,
+                       noise_seed=getattr(args, "noise_seed", 0),
+                       inject_impl=impl)
+
+
+def parse_modes(args) -> list[str]:
+    """Split a ``--modes`` comma list; empty entries dropped."""
+    raw = getattr(args, "modes", None) or ""
+    return [m.strip() for m in raw.split(",") if m.strip()]
+
+
+def policy_label(nm: AMRNumerics) -> str:
+    """Human label like ``amr_lowrank(b=8,r=16)`` — which parameters are
+    shown is driven by the registry's required_params, not by mode names."""
+    req = get_mode(nm.mode).required_params
+    parts = []
+    if "border" in req:
+        parts.append(f"b={nm.border}")
+    if "rank" in req:
+        parts.append(f"r={nm.rank}")
+    return f"{nm.mode}({','.join(parts)})" if parts else nm.mode

@@ -1,38 +1,37 @@
-"""Serving launcher: prefill a batch of prompts, then batched greedy decode.
+"""Serving launcher: continuous-batching engine over the slot-decode path.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
-      --batch 4 --prompt-len 32 --gen 32 \
+      --requests 8 --slots 4 --prompt-len 32 --gen 32 \
       --numerics amr_kernel --border 8 --rank 8
 
-``--numerics`` overrides the config's matmul policy so serving exercises
-the approximate multiplier end to end; ``amr_kernel`` runs the Pallas
-kernel path (compiled on real TPU, interpreter mode on CPU/GPU).
-``--pallas-interpret {auto,0,1}`` sets the ``REPRO_PALLAS_INTERPRET``
-override before any kernel traces (docs/kernels.md).
+Thin CLI over ``repro.serve.ServeEngine``: requests enter a FIFO queue,
+map onto fixed decode slots of one shared KV cache, and every live slot
+advances with a single jitted masked decode step (no recompiles as
+requests finish / join). ``--numerics`` overrides the config's matmul
+policy (choices come from the numerics mode registry) so serving
+exercises the approximate multiplier end to end.
+
+Throughput reporting: ``--warmup`` (default on) first runs one throwaway
+request cycle so prefill+decode compilation is paid OUTSIDE the timed
+window, then the report separates steady-state decode tokens/s (decode
+steps only) from end-to-end wall time (queue + prefill + decode).
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import os
 import time
+from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config, get_reduced_config
+from repro.launch.cli import add_numerics_args, apply_pallas_interpret, numerics_from_args
 from repro.launch.mesh import make_host_mesh, mesh_context
 from repro.models import init_params
-from repro.numerics import AMRNumerics
-from repro.train.steps import make_serve_step
-
-
-def prefill_into_cache(cfg, params, tokens, capacity):
-    """One-shot prefill -> decode cache (models.prefill_with_cache)."""
-    from repro.models.model import prefill_with_cache
-    _, cache = prefill_with_cache(cfg, params, tokens, capacity)
-    return cache
+from repro.runtime import Heartbeat
+from repro.serve import Request, ServeEngine
 
 
 def main(argv=None) -> None:
@@ -40,63 +39,69 @@ def main(argv=None) -> None:
     ap.add_argument("--arch", default="gemma-2b")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--full", dest="reduced", action="store_false")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8,
+                    help="number of generation requests to serve")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="concurrent decode slots (continuous batching width)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--numerics", default=None,
-                    choices=["exact", "amr_lut", "amr_inject", "amr_lowrank",
-                             "amr_noise", "amr_kernel"],
-                    help="override the config's matmul numerics policy")
-    ap.add_argument("--border", type=int, default=8,
-                    help="approximate border column for the AMR modes")
-    ap.add_argument("--rank", type=int, default=8,
-                    help="low-rank error rank; 0 with amr_kernel = full-LUT kernel")
-    ap.add_argument("--inject-impl", default="auto", choices=["auto", "xla", "pallas"],
-                    help="amr_inject replay implementation: XLA outer-product "
-                         "replay or the Pallas kernel (auto = backend detect)")
-    ap.add_argument("--pallas-interpret", default=None, choices=["auto", "0", "1"],
-                    help="set REPRO_PALLAS_INTERPRET before any kernel traces")
+    ap.add_argument("--no-warmup", dest="warmup", action="store_false",
+                    help="skip the compile-warmup request cycle (timings then "
+                         "include compilation)")
+    ap.add_argument("--heartbeat", default=None,
+                    help="path for the serve heartbeat JSON (runtime.fault)")
+    add_numerics_args(ap)
     args = ap.parse_args(argv)
 
-    if args.pallas_interpret is not None:
-        from repro.kernels.pallas_config import ENV_VAR, default_interpret
-
-        os.environ[ENV_VAR] = args.pallas_interpret
-        print(f"[serve] {ENV_VAR}={args.pallas_interpret} "
-              f"(resolved interpret={default_interpret()})")
-
+    apply_pallas_interpret(args, tag="serve")
     cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
-    if args.numerics is not None:
-        impl = None if args.inject_impl == "auto" else args.inject_impl
-        cfg = dataclasses.replace(cfg, numerics=AMRNumerics(
-            args.numerics, border=args.border, rank=args.rank,
-            inject_impl=impl))
+    nm = numerics_from_args(args)
+    if nm is not None:
+        cfg = dataclasses.replace(cfg, numerics=nm)
         print(f"[serve] numerics policy: {cfg.numerics}")
+
     mesh = make_host_mesh()
     rng = np.random.default_rng(args.seed)
-    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)),
-                          jnp.int32)
+    capacity = args.prompt_len + args.gen
+    prompts = [tuple(int(t) for t in rng.integers(0, cfg.vocab, args.prompt_len))
+               for _ in range(args.requests)]
+    hb = Heartbeat(Path(args.heartbeat)) if args.heartbeat else None
 
     with mesh_context(mesh):
         params = init_params(cfg, jax.random.PRNGKey(args.seed))
-        print(f"[serve] prefilling {args.batch}x{args.prompt_len}")
-        cache = prefill_into_cache(cfg, params, prompts,
-                                   args.prompt_len + args.gen)
+        engine = ServeEngine(cfg, params, n_slots=args.slots, capacity=capacity,
+                             heartbeat=hb, log=print)
+        if args.warmup:
+            # one throwaway cycle compiles prefill (this prompt length),
+            # insert and the masked decode step outside the timed window
+            print("[serve] warmup: compiling prefill + decode")
+            engine.submit(Request(prompt=prompts[0], max_new_tokens=2))
+            engine.run()
+            engine.completions.clear()
+            engine.steps_done = 0
+            engine.decode_seconds = 0.0
+            engine.decode_tokens = 0
 
-        serve = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
-        tok = prompts[:, -1:]
-        out = []
-        t0 = time.time()
-        for _ in range(args.gen):
-            nxt, cache = serve(params, cache, {"token": tok})
-            tok = nxt[:, None]
-            out.append(np.asarray(nxt))
-        dt = time.time() - t0
-    gen = np.stack(out, axis=1)
-    print(f"[serve] generated {gen.shape} in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s)")
-    print("[serve] sample:", gen[0][:16].tolist())
+        for p in prompts:
+            engine.submit(Request(prompt=p, max_new_tokens=args.gen))
+        t0 = time.monotonic()
+        done = engine.run()
+        wall = time.monotonic() - t0
+
+    total_tokens = sum(len(c.tokens) for c in done)
+    lat = sorted(c.total_s for c in done)
+    print(f"[serve] {len(done)} requests, {total_tokens} tokens in {wall:.2f}s "
+          f"({total_tokens / wall:.1f} tok/s end-to-end)")
+    if engine.decode_seconds > 0:
+        # steady-state decode rate: tokens produced by masked decode steps
+        # only (excludes queue wait + prefill + any compile)
+        print(f"[serve] steady-state decode: {engine.decode_tokens} tokens / "
+              f"{engine.decode_seconds:.2f}s = "
+              f"{engine.decode_tokens / engine.decode_seconds:.1f} tok/s")
+    print(f"[serve] latency p50 {lat[len(lat) // 2] * 1e3:.0f}ms "
+          f"max {lat[-1] * 1e3:.0f}ms; stats {engine.stats()}")
+    print("[serve] sample:", list(done[0].tokens)[:16])
 
 
 if __name__ == "__main__":

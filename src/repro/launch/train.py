@@ -21,6 +21,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.registry import get_config, get_reduced_config
 from repro.data import SyntheticLM
+from repro.launch.cli import add_numerics_args, apply_pallas_interpret, numerics_from_args
 from repro.launch.mesh import make_host_mesh, mesh_context
 from repro.parallel import sharding as shard_lib
 from repro.runtime import FaultTolerantLoop, Heartbeat
@@ -40,23 +41,15 @@ def main(argv=None) -> None:
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--microbatch", type=int, default=0)
-    ap.add_argument("--numerics", default=None,
-                    choices=[None, "exact", "amr_lut", "amr_inject",
-                             "amr_lowrank", "amr_noise", "amr_kernel"])
-    ap.add_argument("--border", type=int, default=8)
-    ap.add_argument("--inject-impl", default="auto", choices=["auto", "xla", "pallas"],
-                    help="amr_inject replay implementation: XLA outer-product "
-                         "replay or the Pallas kernel (auto = backend detect)")
+    add_numerics_args(ap)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    apply_pallas_interpret(args, tag="train")
     cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
-    if args.numerics:
-        from repro.numerics import AMRNumerics
-        impl = None if args.inject_impl == "auto" else args.inject_impl
-        cfg = dataclasses.replace(
-            cfg, numerics=AMRNumerics(args.numerics, border=args.border,
-                                      inject_impl=impl))
+    nm = numerics_from_args(args)
+    if nm is not None:
+        cfg = dataclasses.replace(cfg, numerics=nm)
 
     mesh = make_host_mesh(model_parallel=args.tp)
     data = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq, batch=args.batch,

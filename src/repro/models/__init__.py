@@ -1,4 +1,12 @@
 """Model zoo: composable LM blocks covering all assigned architecture families."""
-from .model import decode_step, forward, group_structure, init_cache, init_params
+from .model import (
+    decode_step,
+    forward,
+    group_structure,
+    init_cache,
+    init_params,
+    prefill_with_cache,
+)
 
-__all__ = ["forward", "decode_step", "init_params", "init_cache", "group_structure"]
+__all__ = ["forward", "decode_step", "init_params", "init_cache",
+           "group_structure", "prefill_with_cache"]

@@ -153,17 +153,24 @@ def _chunked_attention(q, k, v, window: int, *, unroll: bool = False):
          meta_fields=[])
 @dataclasses.dataclass
 class KVCache:
-    """Ring-buffered KV cache. ``length`` = logical tokens written so far."""
+    """Ring-buffered KV cache. ``length`` = logical tokens written so far.
+
+    ``length`` is either a scalar (one shared position — single-prompt
+    batch decode, the historical layout) or a ``(B,)`` vector of PER-SLOT
+    positions (continuous batching: each batch row is an independent
+    request admitted at a different time — serve/engine.py).  All decode
+    math broadcasts over both.
+    """
 
     k: jnp.ndarray  # (B, C, n_kv, D)
     v: jnp.ndarray
-    length: jnp.ndarray  # () int32 — logical position of the next token
+    length: jnp.ndarray  # () or (B,) int32 — logical position of the next token
 
     @classmethod
-    def zeros(cls, batch, capacity, n_kv, head_dim, dtype):
+    def zeros(cls, batch, capacity, n_kv, head_dim, dtype, per_slot=False):
         shape = (batch, capacity, n_kv, head_dim)
-        return cls(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
-                   jnp.zeros((), jnp.int32))
+        length = jnp.zeros((batch,) if per_slot else (), jnp.int32)
+        return cls(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype), length)
 
 
 def attend_decode(
@@ -180,28 +187,34 @@ def attend_decode(
     numerics: AMRNumerics | None = None,
     eps: float = 1e-6,
 ) -> tuple[jnp.ndarray, KVCache]:
-    """One decode step: write K/V at the cache slot, attend over valid slots."""
+    """One decode step: write K/V at the cache slot, attend over valid slots.
+
+    ``cache.length`` may be per-slot (``(B,)`` — continuous batching); all
+    position math below is row-wise, so a batched step computes exactly
+    what each request's solo decode would.
+    """
     B = x.shape[0]
     C = cache.k.shape[1]
-    pos = cache.length  # scalar logical position
-    positions = jnp.broadcast_to(pos.astype(jnp.int32), (B, 1))
+    pos = cache.length  # () shared or (B,) per-slot logical position
+    pos_b = jnp.broadcast_to(pos.astype(jnp.int32), (B,))
+    positions = pos_b[:, None]
     q, k, v = _project_qkv(params, x, n_heads, n_kv, head_dim, positions, theta,
                            qk_norm, numerics, eps)
-    slot = jnp.where(window > 0, pos % C, jnp.minimum(pos, C - 1)).astype(jnp.int32)
+    slot = jnp.where(window > 0, pos_b % C, jnp.minimum(pos_b, C - 1)).astype(jnp.int32)
     # masked select instead of dynamic_update_slice: a DUS with a dynamic
     # index on the model-sharded cache dim makes GSPMD replicate the whole
     # cache per layer ("involuntary full rematerialization"); the select is
     # elementwise — it shards, fuses, and aliases in place under donation
-    hit = (jnp.arange(C, dtype=jnp.int32) == slot)[None, :, None, None]
+    hit = (jnp.arange(C, dtype=jnp.int32)[None, :] == slot[:, None])[:, :, None, None]
     new_k = jnp.where(hit, k.astype(cache.k.dtype), cache.k)
     new_v = jnp.where(hit, v.astype(cache.v.dtype), cache.v)
 
     scores = _gqa_scores(q, new_k).astype(jnp.float32)  # (B, Hq, 1, C)
-    idx = jnp.arange(C)
-    valid = idx <= slot if window <= 0 else (
-        (idx <= slot) | (pos >= C)  # ring buffer full: every slot is live
+    idx = jnp.arange(C)[None, :]
+    valid = idx <= slot[:, None] if window <= 0 else (
+        (idx <= slot[:, None]) | (pos_b[:, None] >= C)  # full ring: all live
     )
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
     # scores sharding must FOLLOW the cache layout (parallel/sharding.py):
     # kv heads divisible -> head-sharded; otherwise the cache seq dim is
     # model-sharded (flash-decoding) and scores shard on C — pinning heads

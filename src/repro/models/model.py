@@ -298,8 +298,14 @@ def forward(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
 # decode
 # --------------------------------------------------------------------------
 
-def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> Any:
-    """Grouped cache pytree: leaves stacked over n_repeat (scan axis)."""
+def init_cache(cfg: ModelConfig, batch: int, capacity: int,
+               per_slot: bool = False) -> Any:
+    """Grouped cache pytree: leaves stacked over n_repeat (scan axis).
+
+    ``per_slot=True`` gives each batch row its own KV position vector
+    (``KVCache.length`` of shape ``(B,)``) — the continuous-batching slot
+    cache used by serve/engine.py, where rows decode at different depths.
+    """
     kinds, n_repeat = group_structure(cfg)
     dtype = jnp.dtype(cfg.dtype)
 
@@ -308,7 +314,8 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> Any:
             return ssm_lib.SSMState.zeros(batch, cfg.d_model, cfg.ssm, dtype)
         cap = (min(capacity, cfg.sliding_window)
                if kind == "swa" and cfg.sliding_window else capacity)
-        return attn.KVCache.zeros(batch, cap, cfg.n_kv_heads, cfg.head_dim, dtype)
+        return attn.KVCache.zeros(batch, cap, cfg.n_kv_heads, cfg.head_dim, dtype,
+                                  per_slot=per_slot)
 
     group = tuple(one(k) for k in kinds)
     return jax.tree.map(lambda l: jnp.broadcast_to(l[None], (n_repeat,) + l.shape), group)
@@ -317,7 +324,11 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> Any:
 def _cache_position(cache: Any):
     """Logical decode position from the first KVCache in the tree (None for
     pure-SSM caches, which carry no position) — folds into the numerics
-    PRNG scope so amr_noise draws decorrelate across generated tokens."""
+    PRNG scope so amr_noise draws decorrelate across generated tokens.
+
+    Returns a scalar for shared-position caches or a ``(B,)`` vector for
+    per-slot caches (each request then folds its OWN position, keeping
+    batched amr_noise draws identical to each request's solo decode)."""
     found: list = []
 
     def is_kv(node):
@@ -330,12 +341,41 @@ def _cache_position(cache: Any):
     if not found:
         return None
     length = found[0]  # stacked over n_repeat: every copy holds the same pos
-    return length.reshape(-1)[0] if getattr(length, "ndim", 0) else length
+    return length[0] if getattr(length, "ndim", 0) else length
+
+
+def _merge_active(old: Any, new: Any, active: jnp.ndarray) -> Any:
+    """Keep ``new`` cache state only for active slots; inactive rows retain
+    ``old`` bit-for-bit (positions don't advance, K/V writes are discarded).
+
+    Cache leaves are stacked ``(n_repeat, B, ...)``; per-slot length leaves
+    are ``(n_repeat, B)``. Anything without a batch axis (shared scalar
+    positions) passes through unmasked — active-masked decode is only
+    meaningful on per-slot caches.
+    """
+    B = active.shape[0]
+
+    def merge(o, n):
+        if n.ndim >= 2 and n.shape[1] == B:
+            m = active.reshape((1, B) + (1,) * (n.ndim - 2))
+            return jnp.where(m, n, o)
+        return n
+
+    return jax.tree.map(merge, old, new)
 
 
 def decode_step(cfg: ModelConfig, params: dict, token: jnp.ndarray, cache: Any,
-                enc_out: jnp.ndarray | None = None) -> tuple[jnp.ndarray, Any]:
-    """One serving step: token (B, 1) int32 -> (logits (B, 1, V), new cache)."""
+                enc_out: jnp.ndarray | None = None,
+                active: jnp.ndarray | None = None) -> tuple[jnp.ndarray, Any]:
+    """One serving step: token (B, 1) int32 -> (logits (B, 1, V), new cache).
+
+    ``active`` (optional, (B,) bool): continuous-batching slot mask. All
+    rows compute (a single fixed-shape jit trace regardless of which slots
+    are live), but inactive rows' cache writes and position advances are
+    rolled back, so their state — and therefore the next admitted request's
+    prefill handoff — is untouched. Logits of inactive rows are garbage;
+    callers ignore them.
+    """
     kinds, _ = group_structure(cfg)
     numerics = cfg.numerics
     pos = _cache_position(cache)
@@ -371,6 +411,8 @@ def decode_step(cfg: ModelConfig, params: dict, token: jnp.ndarray, cache: Any,
         group_body, (x, cache, jnp.zeros((), jnp.int32)),
         (params["layers"], jnp.arange(n_repeat)),
         unroll=n_repeat if cfg.unroll_layers else 1)
+    if active is not None:
+        new_cache = _merge_active(cache, new_cache, active)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
     return unembed(x, head), new_cache

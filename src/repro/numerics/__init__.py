@@ -1,7 +1,22 @@
-"""Numerics policy: how the paper's approximate multiplier enters NN matmuls."""
-from .approx_matmul import MODES, AMRNumerics, approx_matmul
+"""Numerics policy: how the paper's approximate multiplier enters NN matmuls.
+
+Mode dispatch is registry-driven (``numerics.registry``): implementations
+register themselves, ``AMRNumerics`` validates against the registry at
+construction, and ``MODES`` / CLI choices / docs tables all derive from
+``registry.mode_names()`` — no string matching outside this package.
+"""
+from .approx_matmul import AMRNumerics, approx_matmul
 from .context import current_scope, noise_key, numerics_scope
 from .quant import dequantize, quantize_int8
+from .registry import ModeSpec, get_mode, mode_names, register_mode
 
 __all__ = ["AMRNumerics", "MODES", "approx_matmul", "quantize_int8",
-           "dequantize", "numerics_scope", "current_scope", "noise_key"]
+           "dequantize", "numerics_scope", "current_scope", "noise_key",
+           "ModeSpec", "register_mode", "get_mode", "mode_names"]
+
+
+def __getattr__(name: str):
+    # MODES is derived from the live registry (PEP 562), never a snapshot.
+    if name == "MODES":
+        return mode_names()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

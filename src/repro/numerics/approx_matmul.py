@@ -32,29 +32,47 @@ All functions take A: (..., M, K), B: (K, N) and contract the last/first
 axes, matching how dense layers consume them. jit/pjit-safe; the LUT and
 factors are closed-over constants (baked into the executable), pulled from
 core/lut.py's process-level caches — never rebuilt per call site.
+
+Dispatch goes through the mode REGISTRY (numerics/registry.py): each
+``matmul_amr_*`` registers ``(name, impl, required_params)`` at the bottom
+of this module, ``AMRNumerics`` validates mode/params against the registry
+at construction, and ``MODES`` is derived from it — external callers never
+string-match mode names.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import lut as lut_lib
+from . import registry
 from .context import noise_key
 from .quant import quantize_int8, quantize_int8_ste
 
-# 'exact' | 'amr_lut' | 'amr_inject' | 'amr_lowrank' | 'amr_noise' | 'amr_kernel'
+# A registered mode name — see numerics.registry.mode_names()
 Mode = str
 
-MODES: tuple[str, ...] = ("exact", "amr_lut", "amr_inject", "amr_lowrank",
-                          "amr_noise", "amr_kernel")
+
+def __getattr__(name: str):
+    # MODES stays importable (`from repro.numerics import MODES`) but is
+    # derived from the registry, so late registrations are never stale.
+    if name == "MODES":
+        return registry.mode_names()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
 @dataclasses.dataclass(frozen=True)
 class AMRNumerics:
-    """Policy object threaded through models; hashable/static for jit."""
+    """Policy object threaded through models; hashable/static for jit.
+
+    Construction validates ``mode`` and its required parameters against the
+    mode registry — an invalid policy fails HERE with a message naming the
+    valid modes, not deep inside a jit trace.
+    """
 
     mode: Mode = "exact"
     border: int = 8          # approximate border column (paper Table I/II)
@@ -71,8 +89,11 @@ class AMRNumerics:
     # the REPRO_INJECT_IMPL env override (kernels/pallas_config).
     inject_impl: str | None = None
 
+    def __post_init__(self):
+        registry.validate_policy(self)
+
     def is_exact(self) -> bool:
-        return self.mode == "exact"
+        return self.mode == _EXACT_SPEC.name
 
 
 def _lut_constants(border: int):
@@ -236,19 +257,52 @@ def _inject_bwd(numerics, res, g):
 matmul_amr_inject.defvjp(_inject_fwd, _inject_bwd)
 
 
+def _key_batch(key: jax.Array) -> int | None:
+    """Leading batch size of a batched PRNG key array, or None for one key.
+
+    ``noise_key`` returns a BATCH of keys when the ambient scope's step is a
+    per-request position vector (slot-batched decode, serve/engine.py): one
+    key per request, so each slot's noise stream depends only on ITS OWN
+    decode position — batched decode draws the same noise a solo decode of
+    that request would.
+    """
+    try:
+        if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+            return key.shape[0] if key.ndim else None
+    except (AttributeError, TypeError):
+        pass
+    return key.shape[0] if key.ndim > 1 else None  # raw uint32 keys: (B, 2)
+
+
 def matmul_amr_noise(a: jnp.ndarray, b: jnp.ndarray, border: int, key: jax.Array) -> jnp.ndarray:
     """Surrogate: exact matmul + error noise with AMR-MUL-matched moments.
 
     Per-element product error has mean mu and std sigma (from the LUT);
     a K-length accumulation contributes N(K*mu, sqrt(K)*sigma) in the int8
     domain, rescaled by the quantization scales.
+
+    ``key`` may be a batch of keys (one per leading-axis group of rows —
+    per-request keys in slot-batched decode); each group then draws from
+    its own stream, decorrelating noise per request.
     """
     mu, sigma = _noise_constants(border)
     qa, sa = quantize_int8_ste(a, axis=-1)
     qb, sb = quantize_int8_ste(b, axis=0)
     k = a.shape[-1]
     exact = jnp.matmul(qa, qb)
-    noise = mu * k + jnp.sqrt(float(k)) * sigma * jax.random.normal(key, exact.shape)
+    nb = _key_batch(key)
+    if nb is None:
+        draw = jax.random.normal(key, exact.shape)
+    else:
+        rows = math.prod(exact.shape[:-1])
+        if rows % nb:
+            raise ValueError(
+                f"amr_noise got {nb} per-request keys but {rows} output rows "
+                f"({exact.shape}); rows must divide evenly across requests")
+        per = rows // nb
+        draw = jax.vmap(lambda kk: jax.random.normal(kk, (per, exact.shape[-1])))(key)
+        draw = draw.reshape(exact.shape)
+    noise = mu * k + jnp.sqrt(float(k)) * sigma * draw
     return (exact + noise) * sa * sb
 
 
@@ -266,19 +320,86 @@ def approx_matmul(
     with the ambient ``numerics_scope`` (step / layer) it decorrelates the
     amr_noise PRNG stream per call site, layer and training step — an
     explicit ``key`` overrides the derivation entirely.
+
+    Dispatch is registry-driven: ``numerics.mode`` selects the impl
+    registered in ``numerics.registry`` (modes were validated when the
+    policy was constructed).
     """
     if numerics is None or numerics.is_exact():
         return matmul_exact(a, b)
-    if numerics.mode == "amr_lut":
-        return matmul_amr_lut(a, b, numerics.border)
-    if numerics.mode == "amr_inject":
-        return matmul_amr_inject(a, b, numerics)
-    if numerics.mode == "amr_lowrank":
-        return matmul_amr_lowrank(a, b, numerics.border, numerics.rank)
-    if numerics.mode == "amr_kernel":
-        return matmul_amr_kernel(a, b, numerics.border, numerics.rank)
-    if numerics.mode == "amr_noise":
-        if key is None:
-            key = noise_key(numerics.noise_seed, site)
-        return matmul_amr_noise(a, b, numerics.border, key)
-    raise ValueError(f"unknown numerics mode {numerics.mode!r} (one of {MODES})")
+    return registry.get_mode(numerics.mode).impl(a, b, numerics, key=key, site=site)
+
+
+# --------------------------------------------------------------------------
+# mode registration — canonical order; this block IS the MODES list
+# --------------------------------------------------------------------------
+
+def _require_border(nm) -> None:
+    if not isinstance(nm.border, int) or nm.border < 0:
+        raise ValueError(
+            f"numerics mode {nm.mode!r} needs a non-negative integer border, "
+            f"got {nm.border!r}")
+
+
+def _validate_rank(nm, *, minimum: int) -> None:
+    _require_border(nm)
+    if not isinstance(nm.rank, int) or nm.rank < minimum:
+        raise ValueError(
+            f"numerics mode {nm.mode!r} needs an integer rank >= {minimum}, "
+            f"got {nm.rank!r}")
+
+
+def _validate_inject(nm) -> None:
+    _require_border(nm)
+    if nm.inject_impl is not None:
+        from repro.kernels.pallas_config import INJECT_IMPLS  # lazy: pkg cycle
+
+        if nm.inject_impl not in INJECT_IMPLS:
+            raise ValueError(
+                f"inject_impl must be one of {INJECT_IMPLS} (or None = "
+                f"backend autodetect), got {nm.inject_impl!r}")
+    if nm.schedule_ref is not None and not isinstance(nm.schedule_ref, str):
+        raise ValueError(
+            f"schedule_ref must be a registered-schedule handle (str) or "
+            f"None, got {nm.schedule_ref!r}")
+
+
+_EXACT_SPEC = registry.register_mode(
+    "exact", lambda a, b, nm, *, key=None, site=None: matmul_exact(a, b),
+    description="jnp.einsum in the requested dtype (baseline)")
+
+registry.register_mode(
+    "amr_lut",
+    lambda a, b, nm, *, key=None, site=None: matmul_amr_lut(a, b, nm.border),
+    required_params=("border",), validate=_require_border,
+    description="bit-exact LUT-gather oracle (small shapes)")
+
+registry.register_mode(
+    "amr_inject",
+    lambda a, b, nm, *, key=None, site=None: matmul_amr_inject(a, b, nm),
+    required_params=("border",), validate=_validate_inject,
+    description="on-device exact error injection (any schedule)")
+
+registry.register_mode(
+    "amr_lowrank",
+    lambda a, b, nm, *, key=None, site=None: matmul_amr_lowrank(
+        a, b, nm.border, nm.rank),
+    required_params=("border", "rank"),
+    validate=partial(_validate_rank, minimum=1),
+    description="MXU low-rank error factorization")
+
+registry.register_mode(
+    "amr_noise",
+    lambda a, b, nm, *, key=None, site=None: matmul_amr_noise(
+        a, b, nm.border,
+        key if key is not None else noise_key(nm.noise_seed, site)),
+    required_params=("border", "noise_seed"), validate=_require_border,
+    description="Gaussian surrogate with AMR-matched moments")
+
+registry.register_mode(
+    "amr_kernel",
+    lambda a, b, nm, *, key=None, site=None: matmul_amr_kernel(
+        a, b, nm.border, nm.rank),
+    required_params=("border", "rank"),
+    validate=partial(_validate_rank, minimum=0),
+    description="Pallas kernel path (rank 0 = full-LUT variant)")

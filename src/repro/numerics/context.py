@@ -86,6 +86,13 @@ def noise_key(seed: int, site: str | None = None):
     Folds the static ``site`` label and the ambient (possibly traced)
     ``step``/``layer`` scope into ``PRNGKey(seed)``; components that are
     absent are skipped, so the key is always well-defined.
+
+    When the scope's ``step`` is a VECTOR of per-request decode positions
+    (slot-batched decode, serve/engine.py), a batch of keys is returned —
+    one per request, each the key a solo decode of that request at that
+    position would derive.  ``matmul_amr_noise`` then draws each request's
+    rows from its own stream, so batching never correlates (or shifts)
+    per-request noise.
     """
     import jax
 
@@ -93,8 +100,15 @@ def noise_key(seed: int, site: str | None = None):
     if site:
         key = jax.random.fold_in(key, _site_id(site))
     scope = current_scope()
-    if scope.step is not None:
-        key = jax.random.fold_in(key, scope.step)
-    if scope.layer is not None:
-        key = jax.random.fold_in(key, scope.layer)
+    step, layer = scope.step, scope.layer
+    if step is not None and getattr(step, "ndim", 0):
+        def fold(s):
+            k = jax.random.fold_in(key, s)
+            return jax.random.fold_in(k, layer) if layer is not None else k
+
+        return jax.vmap(fold)(step)
+    if step is not None:
+        key = jax.random.fold_in(key, step)
+    if layer is not None:
+        key = jax.random.fold_in(key, layer)
     return key

@@ -1,0 +1,111 @@
+"""Numerics-mode registry: the single source of truth for dispatch.
+
+``approx_matmul`` used to end in a hand-maintained 6-way ``if/elif`` over
+mode-name strings, mirrored by a ``MODES`` tuple and by ``choices=`` lists
+in every launcher — three surfaces that could drift independently.  This
+module replaces all of them: each ``matmul_amr_*`` implementation registers
+itself as a :class:`ModeSpec` via :func:`register_mode`, ``AMRNumerics``
+validates its mode/params against the registry at construction, and
+everything that needs the list of valid modes (dispatch, CLI ``choices``,
+error messages, docs tables) derives it from :func:`mode_names`.
+
+External callers NEVER match mode-name strings: models, serving, benches
+and launchers dispatch only through ``approx_matmul`` and build their CLI
+surfaces from the registry (``launch/cli.py``).
+
+Registered impls share one calling convention::
+
+    impl(a, b, numerics, *, key=None, site=None) -> jnp.ndarray
+
+where ``a: (..., M, K)``, ``b: (K, N)``, ``numerics`` is the (validated)
+policy object, and ``key``/``site`` feed the amr_noise PRNG derivation
+(ignored by deterministic modes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+__all__ = ["ModeSpec", "register_mode", "unregister_mode", "get_mode",
+           "mode_names", "validate_policy"]
+
+Impl = Callable[..., Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModeSpec:
+    """One numerics mode: name, implementation, and its parameter contract.
+
+    ``required_params`` are ``AMRNumerics`` field names that must be
+    non-None for this mode; ``validate`` is an optional extra check run at
+    policy construction (raise ``ValueError`` with a clear message).
+    """
+
+    name: str
+    impl: Impl
+    required_params: tuple[str, ...] = ()
+    description: str = ""
+    validate: Callable[[Any], None] | None = None
+
+
+# Registration order is preserved — it defines the canonical MODES order
+# shown in CLIs, error messages and docs.
+_REGISTRY: dict[str, ModeSpec] = {}
+
+
+def register_mode(
+    name: str,
+    impl: Impl,
+    *,
+    required_params: tuple[str, ...] = (),
+    description: str = "",
+    validate: Callable[[Any], None] | None = None,
+) -> ModeSpec:
+    """Register a numerics mode. Names are unique — re-registration is an
+    error (use :func:`unregister_mode` first if a test needs to replace
+    one), so a typo'd duplicate can never silently shadow a real mode."""
+    if not name or not isinstance(name, str):
+        raise ValueError(f"mode name must be a non-empty string, got {name!r}")
+    if name in _REGISTRY:
+        raise ValueError(
+            f"numerics mode {name!r} is already registered; "
+            f"unregister_mode({name!r}) first to replace it")
+    spec = ModeSpec(name=name, impl=impl, required_params=tuple(required_params),
+                    description=description, validate=validate)
+    _REGISTRY[name] = spec
+    return spec
+
+
+def unregister_mode(name: str) -> None:
+    """Remove a registered mode (test hook; no-op if absent)."""
+    _REGISTRY.pop(name, None)
+
+
+def mode_names() -> tuple[str, ...]:
+    """Valid mode names, in registration (canonical) order."""
+    return tuple(_REGISTRY)
+
+
+def get_mode(name: str) -> ModeSpec:
+    spec = _REGISTRY.get(name)
+    if spec is None:
+        raise ValueError(
+            f"unknown numerics mode {name!r}; valid modes: {mode_names()}")
+    return spec
+
+
+def validate_policy(numerics: Any) -> None:
+    """Validate an ``AMRNumerics`` policy against its mode's registry entry.
+
+    Called from ``AMRNumerics.__post_init__`` so an invalid policy fails at
+    construction with a message naming the valid modes / the offending
+    parameter — not deep inside a jit trace.
+    """
+    spec = get_mode(numerics.mode)
+    for p in spec.required_params:
+        if getattr(numerics, p, None) is None:
+            raise ValueError(
+                f"numerics mode {numerics.mode!r} requires parameter {p!r} "
+                f"(got None); required params: {spec.required_params}")
+    if spec.validate is not None:
+        spec.validate(numerics)

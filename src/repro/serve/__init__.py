@@ -1,0 +1,18 @@
+"""Continuous-batching serving engine over the slot-decode model path.
+
+Requests enter a FIFO ``RequestQueue``; a ``SlotAllocator`` maps each
+admitted request onto a fixed decode slot of one shared, capacity-bounded
+KV cache; ``ServeEngine`` prefills into the slot, then advances ALL live
+slots with a single jitted decode step (active-slot mask — no recompiles
+as requests finish and new ones are admitted mid-flight).
+
+The engine is numerics-policy agnostic: the same loop serves exact and
+every approximate AMR mode, and batched slot-decode is bit-identical to
+decoding each request alone (benchmarks/serve_bench.py gates this in CI).
+"""
+from .engine import ServeEngine
+from .request import Completion, Request, RequestQueue
+from .slots import SlotAllocator
+
+__all__ = ["Request", "Completion", "RequestQueue", "SlotAllocator",
+           "ServeEngine"]

@@ -130,11 +130,28 @@ def make_prefill_step(cfg: ModelConfig):
     return prefill_step
 
 
-def make_serve_step(cfg: ModelConfig):
+def make_serve_step(cfg: ModelConfig, *, with_logits: bool = False):
+    """One greedy decode step over a (possibly slot-batched) cache.
+
+    ``batch`` may carry ``active`` — a (B,) bool continuous-batching slot
+    mask threaded through to ``decode_step`` (inactive slots' cache state is
+    held bit-for-bit; their outputs are garbage the caller masks off). One
+    trace serves every admit/evict pattern: the mask is a traced operand,
+    so slots finishing or joining never recompiles.
+
+    ``with_logits=True`` additionally returns the final-position logits
+    (float32) — serve_bench uses the raw logit stream for the
+    batched-vs-solo bit-exactness gate, which is a strictly stronger check
+    than argmax-token equality.
+    """
+
     def serve_step(params, cache, batch):
         logits, cache = decode_step(cfg, params, batch["token"], cache,
-                                    batch.get("enc_out"))
-        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                                    batch.get("enc_out"), batch.get("active"))
+        last = logits[:, -1]
+        next_tok = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        if with_logits:
+            return next_tok, last.astype(jnp.float32), cache
         return next_tok, cache
 
     return serve_step

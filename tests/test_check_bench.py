@@ -64,6 +64,28 @@ INJECT = {
     ],
     "wall_clock_s": 30.0,
 }
+SERVE = {
+    "schema": "BENCH_serve/v1", "engine": "jax", "quick": True, "gen": 4,
+    "capacity": 11, "border": 8,
+    "config": {"d_model": 32, "d_ff": 64, "vocab": 64, "n_layers": 2},
+    "results": [
+        {"kind": "throughput", "mode": "exact", "concurrency": 1,
+         "requests": 4, "tokens": 16, "complete": True,
+         "p50_latency_ms": 15.0, "p99_latency_ms": 21.0,
+         "tokens_per_s": 700.0, "steady_tokens_per_s": 2900.0},
+        {"kind": "throughput", "mode": "exact", "concurrency": 4,
+         "requests": 4, "tokens": 16, "complete": True,
+         "p50_latency_ms": 10.0, "p99_latency_ms": 10.2,
+         "tokens_per_s": 1500.0, "steady_tokens_per_s": 13000.0},
+        {"kind": "bit_exact", "mode": "exact", "concurrency": 3,
+         "requests": 4, "bit_exact": True, "tokens_match": True,
+         "max_abs_diff": 0.0},
+        {"kind": "bit_exact", "mode": "amr_inject", "concurrency": 3,
+         "requests": 4, "bit_exact": True, "tokens_match": True,
+         "max_abs_diff": 0.0},
+    ],
+    "wall_clock_s": 40.0,
+}
 
 
 def _errors(fresh, baseline):
@@ -188,6 +210,54 @@ class TestInjectArtifact:
         assert any("missing" in e for e in _errors(bad, INJECT))
 
 
+class TestServeArtifact:
+    def test_identical_passes(self):
+        assert _errors(copy.deepcopy(SERVE), SERVE) == []
+
+    def test_batching_exactness_flip_is_caught(self):
+        """Slot-batched decode drifting off solo decode — even one ulp of
+        logit difference — must fail the gate, per numerics mode."""
+        for i in (2, 3):  # both bit_exact rows
+            bad = copy.deepcopy(SERVE)
+            bad["results"][i]["bit_exact"] = False
+            bad["results"][i]["max_abs_diff"] = 1e-7
+            errs = _errors(bad, SERVE)
+            assert any("bit_exact" in e for e in errs), i
+            assert any("max_abs_diff" in e for e in errs), i
+
+    def test_token_stream_mismatch_is_caught(self):
+        bad = copy.deepcopy(SERVE)
+        bad["results"][3]["tokens_match"] = False
+        assert any("tokens_match" in e for e in _errors(bad, SERVE))
+
+    def test_incomplete_serving_is_caught(self):
+        bad = copy.deepcopy(SERVE)
+        bad["results"][1]["complete"] = False
+        bad["results"][1]["tokens"] = 12
+        errs = _errors(bad, SERVE)
+        assert any("complete" in e for e in errs)
+        assert any("tokens" in e for e in errs)
+
+    def test_latency_and_throughput_are_advisory(self):
+        slow = copy.deepcopy(SERVE)
+        slow["results"][0]["p99_latency_ms"] *= 10
+        slow["results"][0]["steady_tokens_per_s"] /= 10
+        errs, advisories = check_bench.compare_artifacts(slow, SERVE, "t")
+        assert errs == []
+        assert any("p99_latency_ms" in a for a in advisories)
+        assert any("steady_tokens_per_s" in a for a in advisories)
+
+    def test_missing_concurrency_row_is_caught(self):
+        bad = copy.deepcopy(SERVE)
+        del bad["results"][1]
+        assert any("missing" in e for e in _errors(bad, SERVE))
+
+    def test_run_config_mismatch_fails(self):
+        bad = copy.deepcopy(SERVE)
+        bad["gen"] = 8
+        assert any("gen" in e for e in _errors(bad, SERVE))
+
+
 class TestMain:
     @pytest.fixture()
     def dirs(self, tmp_path):
@@ -200,6 +270,7 @@ class TestMain:
             (d / "BENCH_dse.json").write_text(json.dumps(DSE))
             (d / "BENCH_train.json").write_text(json.dumps(TRAIN))
             (d / "BENCH_inject.json").write_text(json.dumps(INJECT))
+            (d / "BENCH_serve.json").write_text(json.dumps(SERVE))
         return fresh, base
 
     def test_main_clean(self, dirs):
@@ -227,5 +298,6 @@ class TestMain:
             p = root / "benchmarks" / "baselines" / name
             art = json.loads(p.read_text())
             assert art["schema"].startswith(
-                ("BENCH_kernel/", "BENCH_dse/", "BENCH_train/", "BENCH_inject/"))
+                ("BENCH_kernel/", "BENCH_dse/", "BENCH_train/",
+                 "BENCH_inject/", "BENCH_serve/"))
             assert art["results"], f"{name} baseline has no rows"

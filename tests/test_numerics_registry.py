@@ -1,0 +1,157 @@
+"""Numerics mode registry: dispatch table, construction-time validation,
+CLI derivation. The registry is the single source of truth for mode names
+— MODES, argparse choices and policy validation all derive from it."""
+import argparse
+
+import pytest
+
+from repro.numerics import (AMRNumerics, MODES, get_mode, mode_names,
+                            register_mode)
+from repro.numerics.registry import unregister_mode
+
+CANONICAL = ("exact", "amr_lut", "amr_inject", "amr_lowrank", "amr_noise",
+             "amr_kernel")
+
+
+class TestModeNames:
+    def test_canonical_modes_registered_in_order(self):
+        assert mode_names() == CANONICAL
+
+    def test_modules_modes_attr_is_live_view(self):
+        # both repro.numerics.MODES and approx_matmul.MODES derive from the
+        # registry (PEP 562), never a snapshot (the package also exports the
+        # approx_matmul FUNCTION, so fetch the module via importlib)
+        import importlib
+
+        am = importlib.import_module("repro.numerics.approx_matmul")
+        assert MODES == mode_names()
+        assert am.MODES == mode_names()
+
+    def test_get_mode_returns_spec_with_impl(self):
+        spec = get_mode("amr_lut")
+        assert spec.name == "amr_lut"
+        assert callable(spec.impl)
+        assert "border" in spec.required_params
+
+    def test_unknown_mode_error_names_valid_modes(self):
+        with pytest.raises(ValueError) as ei:
+            get_mode("bogus")
+        msg = str(ei.value)
+        assert "bogus" in msg
+        for name in CANONICAL:
+            assert name in msg
+
+
+class TestPolicyValidation:
+    def test_unknown_mode_fails_at_construction(self):
+        with pytest.raises(ValueError, match="valid modes"):
+            AMRNumerics("not_a_mode")
+
+    def test_negative_border_rejected(self):
+        with pytest.raises(ValueError, match="border"):
+            AMRNumerics("amr_lut", border=-1)
+
+    def test_lowrank_requires_positive_rank(self):
+        with pytest.raises(ValueError, match="rank"):
+            AMRNumerics("amr_lowrank", border=4, rank=0)
+
+    def test_kernel_rank_zero_is_full_lut_variant(self):
+        # rank=0 selects the bit-exact full-LUT kernel — valid for amr_kernel
+        assert AMRNumerics("amr_kernel", border=4, rank=0).rank == 0
+
+    def test_bad_inject_impl_rejected(self):
+        with pytest.raises(ValueError, match="inject_impl"):
+            AMRNumerics("amr_inject", border=4, inject_impl="nope")
+
+    def test_valid_policies_construct(self):
+        for mode in CANONICAL:
+            AMRNumerics(mode, border=4, rank=2)
+
+    def test_is_exact(self):
+        assert AMRNumerics("exact").is_exact()
+        assert not AMRNumerics("amr_lut", border=4).is_exact()
+
+
+class TestCustomRegistration:
+    def test_register_unregister_roundtrip(self):
+        def impl(a, b, nm, *, key=None, site=None):
+            return a @ b
+
+        register_mode("test_custom", impl, required_params=("border",),
+                      description="test-only mode")
+        try:
+            assert "test_custom" in mode_names()
+            assert AMRNumerics("test_custom", border=1).mode == "test_custom"
+            with pytest.raises(ValueError):
+                register_mode("test_custom", impl)  # duplicates rejected
+        finally:
+            unregister_mode("test_custom")
+        assert "test_custom" not in mode_names()
+        with pytest.raises(ValueError):
+            AMRNumerics("test_custom")
+
+    def test_custom_mode_dispatches_through_approx_matmul(self):
+        import jax.numpy as jnp
+
+        from repro.numerics import approx_matmul
+
+        def impl(a, b, nm, *, key=None, site=None):
+            return jnp.zeros(a.shape[:-1] + (b.shape[-1],), jnp.float32)
+
+        register_mode("test_zero", impl)
+        try:
+            nm = AMRNumerics("test_zero")
+            out = approx_matmul(jnp.ones((2, 3)), jnp.ones((3, 4)), nm)
+            assert float(abs(out).max()) == 0.0
+        finally:
+            unregister_mode("test_zero")
+
+
+class TestCLIDerivation:
+    def test_argparse_choices_derive_from_registry(self):
+        from repro.launch.cli import add_numerics_args
+
+        ap = argparse.ArgumentParser()
+        add_numerics_args(ap)
+        action = next(a for a in ap._actions if a.dest == "numerics")
+        assert tuple(action.choices) == mode_names()
+
+    def test_numerics_from_args_builds_policy(self):
+        from repro.launch.cli import add_numerics_args, numerics_from_args
+
+        ap = argparse.ArgumentParser()
+        add_numerics_args(ap)
+        args = ap.parse_args(["--numerics", "amr_lowrank", "--border", "4",
+                              "--rank", "2"])
+        nm = numerics_from_args(args)
+        assert nm == AMRNumerics("amr_lowrank", border=4, rank=2)
+
+    def test_numerics_from_args_none_keeps_config_policy(self):
+        from repro.launch.cli import add_numerics_args, numerics_from_args
+
+        ap = argparse.ArgumentParser()
+        add_numerics_args(ap)
+        assert numerics_from_args(ap.parse_args([])) is None
+
+    def test_multi_mode_parse_and_labels(self):
+        from repro.launch.cli import (add_numerics_args, numerics_from_args,
+                                      parse_modes, policy_label)
+
+        ap = argparse.ArgumentParser()
+        add_numerics_args(ap, multi=True, default="exact,amr_lowrank",
+                          rank_default=16)
+        args = ap.parse_args(["--border", "8"])
+        modes = parse_modes(args)
+        assert modes == ["exact", "amr_lowrank"]
+        labels = [policy_label(numerics_from_args(args, mode=m)) for m in modes]
+        assert labels == ["exact", "amr_lowrank(b=8,r=16)"]
+
+    def test_multi_mode_unknown_raises_with_valid_names(self):
+        from repro.launch.cli import add_numerics_args, numerics_from_args
+
+        ap = argparse.ArgumentParser()
+        add_numerics_args(ap, multi=True)
+        args = ap.parse_args(["--modes", "exact,bogus"])
+        with pytest.raises(ValueError, match="valid modes"):
+            for m in ["exact", "bogus"]:
+                numerics_from_args(args, mode=m)
