@@ -1,0 +1,189 @@
+"""Cross-architecture numerics conformance matrix (the tentpole artifact).
+
+Drives ``repro.conformance`` over the config zoo: tiny reduced variants of
+every family (dense attention, SSM, hybrid, MoE, audio encoder-decoder,
+VLM) through the real train-step and prefill->decode paths under every
+registered numerics mode, recording per-arm invariants:
+
+  * train               — finite loss/grads, non-degenerate logits;
+  * inject_audit        — amr_inject bit-identical to the LUT-gather oracle
+                          at every dense call site (grid-step units);
+  * decode_parity       — prefill->decode vs full forward within per-mode
+                          tolerance;
+  * noise_decorrelation — amr_noise reproducible within a step coordinate,
+                          distinct across steps;
+  * restart             — FaultTolerantLoop under amr_inject preempted
+                          mid-run resumes bitwise (loss-stream equality),
+                          including DSE-schedule re-registration (full run).
+
+  PYTHONPATH=src python -m benchmarks.matrix_bench --quick \
+      --out BENCH_matrix.json
+
+JSON schema (``BENCH_matrix.json``)::
+
+  {"schema": "BENCH_matrix/v1", "engine": "jax", "quick": bool,
+   "border": int,
+   "results": [{"kind": "train", "arch": str, "mode": str, ...},
+               {"kind": "inject_audit", "arch": str, "schedule": str,
+                "bit_exact": bool, "max_abs_diff": float, ...},
+               {"kind": "decode_parity", "arch": str, "mode": str,
+                "applicable": bool, "within_tol": bool, ...},
+               {"kind": "noise_decorrelation", "arch": str, ...},
+               {"kind": "restart", "arch": str, "schedule": str,
+                "bit_exact": bool, "tmp_cleaned": bool, ...}],
+   "wall_clock_s": float}
+
+``scripts/check_bench.py`` gates every exactness/finiteness field against
+``benchmarks/baselines/BENCH_matrix.json``; losses and parity diffs are
+advisory (they ride on float matmuls).  Quick mode keeps CI tractable:
+one representative arch per family, with amr_inject (the load-bearing
+approximate mode) and exact covering the train grid and the full mode
+list covered on the dense representative; ``--quick`` off sweeps every
+arch x every mode (the nightly workflow).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+BORDER = 8
+QUICK_TRAIN_MODES = ("exact", "amr_inject")
+
+
+def _arms(quick: bool):
+    from repro.conformance import REPRESENTATIVE, arch_mode_arms
+    from repro.numerics import mode_names
+
+    reps = list(REPRESENTATIVE.values())
+    modes = list(mode_names())
+    if quick:
+        train = [(a, m) for a in reps for m in QUICK_TRAIN_MODES]
+        # full mode list still exercised, on the dense representative
+        dense = REPRESENTATIVE["dense"]
+        train += [(dense, m) for m in modes if m not in QUICK_TRAIN_MODES]
+        parity = [(a, "exact") for a in reps] + \
+                 [(dense, m) for m in modes if m != "exact"]
+        audit = reps
+        noise = [dense]
+    else:
+        train = arch_mode_arms()
+        parity = arch_mode_arms()
+        from repro.configs import ALL_NAMES
+        audit = list(ALL_NAMES)
+        noise = reps
+    return train, parity, audit, noise
+
+
+def run(quick: bool = False, out: str | None = None) -> list[str]:
+    from repro.conformance import (
+        run_decode_parity,
+        run_inject_audit,
+        run_noise_decorrelation,
+        run_restart_arm,
+        run_train_arm,
+    )
+    from repro.core import reduction
+    from repro.numerics import injection
+
+    t0 = time.time()
+    rows: list[str] = []
+    results: list[dict] = []
+    train, parity, audit, noise = _arms(quick)
+
+    for arch, mode in train:
+        t_arm = time.time()
+        r = run_train_arm(arch, mode, steps=2)
+        results.append(r)
+        rows.append(
+            f"matrix_train_{arch}_{mode},0,"
+            f"loss={r['first_loss']:.4f}->{r['final_loss']:.4f};"
+            f"finite={r['loss_finite'] and r['grad_finite']};"
+            f"wall={time.time() - t_arm:.1f}s")
+
+    for arch in audit:
+        r = run_inject_audit(arch)
+        results.append(r)
+        rows.append(f"matrix_audit_{arch},0,bit_exact={r['bit_exact']};"
+                    f"sites={r['sites']};calls={r['calls']}")
+
+    for arch, mode in parity:
+        r = run_decode_parity(arch, mode)
+        results.append(r)
+        rows.append(f"matrix_parity_{arch}_{mode},0,"
+                    f"diff={r['parity_diff']:.4g};within_tol={r['within_tol']}")
+
+    for arch in noise:
+        r = run_noise_decorrelation(arch)
+        results.append(r)
+        rows.append(f"matrix_noise_{arch},0,reproducible={r['reproducible']};"
+                    f"decorrelated={r['steps_decorrelated']}")
+
+    t_arm = time.time()
+    r = run_restart_arm()
+    results.append(r)
+    rows.append(f"matrix_restart_default,0,bit_exact={r['bit_exact']};"
+                f"resumed_from={r['resumed_from']};"
+                f"wall={time.time() - t_arm:.1f}s")
+    if not quick:
+        # the DSE-schedule restart: registry wiped between lives, restored
+        # by the on_restore hook — the real process-death protocol
+        sched = reduction.get_schedule(2, BORDER)
+        handle = injection.register_schedule(sched, name="matrix:restart")
+        r = run_restart_arm(
+            schedule_ref=handle,
+            between_lives=lambda: (injection._SCHEDULES.pop(handle, None),
+                                   injection._INJECTORS.pop(handle, None)),
+            on_restore=lambda s, st: injection.register_schedule(
+                sched, name=handle))
+        results.append(r)
+        rows.append(f"matrix_restart_dse,0,bit_exact={r['bit_exact']}")
+
+    artifact = {
+        "schema": "BENCH_matrix/v1",
+        "engine": "jax",
+        "quick": quick,
+        "border": BORDER,
+        "results": results,
+        "wall_clock_s": round(time.time() - t0, 2),
+    }
+    out = out or os.environ.get("REPRO_BENCH_MATRIX_OUT", "BENCH_matrix.json")
+    with open(out, "w") as f:
+        json.dump(artifact, f, indent=1)
+    rows.append(f"matrix_bench_artifact,0,{out}:{len(results)}_results")
+
+    # Hard gates — the artifact is only worth committing if the invariants
+    # hold; a regression must fail the bench itself, not just the diff.
+    sick = [(r["arch"], r["mode"]) for r in results if r["kind"] == "train"
+            and not (r["loss_finite"] and r["grad_finite"]
+                     and r["nondegenerate"])]
+    if sick:
+        raise RuntimeError(f"non-finite/degenerate train arms: {sick}")
+    bad = [r["arch"] for r in results if r["kind"] == "inject_audit"
+           and (not r["bit_exact"] or r["max_abs_diff"] != 0.0)]
+    if bad:
+        raise RuntimeError(f"amr_inject disagrees with the LUT oracle: {bad}")
+    off = [(r["arch"], r["mode"]) for r in results
+           if r["kind"] == "decode_parity" and not r["within_tol"]]
+    if off:
+        raise RuntimeError(f"decode parity out of tolerance: {off}")
+    broken = [r["arch"] for r in results if r["kind"] == "restart"
+              and not (r["bit_exact"] and r["tmp_cleaned"])]
+    if broken:
+        raise RuntimeError(f"restart not bit-consistent: {broken}")
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None,
+                    help="artifact path (BENCH_matrix.json)")
+    args = ap.parse_args(argv)
+    for row in run(quick=args.quick, out=args.out):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

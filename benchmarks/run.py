@@ -18,7 +18,7 @@ import traceback
 
 from . import (dryrun_summary, dse_bench, fig4_comparison, fig5_fa_usage,
                fig6_error_dist, inject_bench, kernel_bench, lowrank_fidelity,
-               serve_bench, table1_accuracy, table2_energy,
+               matrix_bench, serve_bench, table1_accuracy, table2_energy,
                train_numerics_bench)
 
 MODULES = {
@@ -33,6 +33,7 @@ MODULES = {
     "train": train_numerics_bench,
     "inject": inject_bench,
     "serve": serve_bench,
+    "matrix": matrix_bench,
     "dryrun": dryrun_summary,
 }
 

@@ -22,6 +22,12 @@ produced ``BENCH_kernel.json`` / ``BENCH_dse.json`` / ``BENCH_train.json``
     ``max_abs_diff`` on any replay implementation row — every impl
     (pairs / xla / xla_cached / pallas) must agree with the LUT-gather
     oracle bit for bit,
+  * for the matrix artifact (cross-architecture conformance): any flip of
+    the per-arm invariants — train finiteness/non-degeneracy, inject-vs-LUT
+    bit-identity (``max_abs_diff`` is in integer grid-step units, so it
+    must be EXACTLY 0.0), decode-parity ``within_tol``, amr_noise
+    reproducibility/decorrelation, restart loss-stream ``bit_exact`` and
+    ``tmp_cleaned``; losses and parity diffs are advisory,
   * for the serve artifact: any flip of the continuous-batching exactness
     fields (``bit_exact`` / ``tokens_match`` / ``max_abs_diff`` — slot-
     batched decode must equal solo decode bitwise) or of ``complete`` /
@@ -49,7 +55,8 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 DEFAULT_ARTIFACTS = ("BENCH_kernel.json", "BENCH_dse.json", "BENCH_train.json",
-                     "BENCH_inject.json", "BENCH_serve.json")
+                     "BENCH_inject.json", "BENCH_serve.json",
+                     "BENCH_matrix.json")
 FLOAT_RTOL = 1e-6  # float-path (non-bit-exact) kernel error rows only
 
 
@@ -66,6 +73,9 @@ def _row_key(schema: str, row: dict) -> tuple:
         return (row["impl"], row["schedule"], row["m"], row["n"], row["k"])
     if schema.startswith("BENCH_serve/"):
         return (row["kind"], row["mode"], row["concurrency"])
+    if schema.startswith("BENCH_matrix/"):
+        return (row["kind"], row.get("arch"), row.get("mode"),
+                row.get("schedule"))
     raise ValueError(f"unknown artifact schema {schema!r}")
 
 
@@ -84,6 +94,23 @@ def _gated_fields(schema: str, row: dict) -> list[tuple[str, bool]]:
     if schema.startswith("BENCH_inject/"):
         # integer-derived oracle agreement: exactly equal or regressed
         return [("bit_exact_vs_lut", True), ("max_abs_diff", True)]
+    if schema.startswith("BENCH_matrix/"):
+        kind = row.get("kind")
+        if kind == "train":
+            return [("loss_finite", True), ("grad_finite", True),
+                    ("nondegenerate", True)]
+        if kind == "inject_audit":
+            # grid-step units (integer-derived): exactly 0.0 or regressed
+            return [("bit_exact", True), ("max_abs_diff", True),
+                    ("sites", True)]
+        if kind == "decode_parity":
+            return [("applicable", True), ("within_tol", True)]
+        if kind == "noise_decorrelation":
+            return [("reproducible", True), ("steps_decorrelated", True)]
+        # restart: float32 loss streams must stay bitwise equal across the
+        # kill/resume boundary, and restore must sweep .tmp debris
+        return [("bit_exact", True), ("max_abs_diff", True),
+                ("tmp_cleaned", True), ("resumed_from", True)]
     if schema.startswith("BENCH_serve/"):
         if row.get("kind") == "bit_exact":
             # batched-vs-solo decode agreement is integer/bit-derived:
@@ -106,6 +133,8 @@ def _advisory_fields(schema: str) -> list[str]:
     if schema.startswith("BENCH_serve/"):
         return ["p50_latency_ms", "p99_latency_ms", "tokens_per_s",
                 "steady_tokens_per_s"]
+    if schema.startswith("BENCH_matrix/"):
+        return ["first_loss", "final_loss", "parity_diff"]
     return ["energy_pj", "nodes"]
 
 

@@ -1,4 +1,11 @@
 """Mesh-agnostic sharded checkpointing with async save + retention."""
-from .checkpoint import CheckpointManager, restore_tree, save_tree
+from .checkpoint import (
+    CheckpointManager,
+    clean_stale_tmp,
+    latest_step,
+    restore_tree,
+    save_tree,
+)
 
-__all__ = ["CheckpointManager", "save_tree", "restore_tree"]
+__all__ = ["CheckpointManager", "save_tree", "restore_tree", "latest_step",
+           "clean_stale_tmp"]

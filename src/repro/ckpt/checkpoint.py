@@ -112,6 +112,26 @@ def latest_step(directory: str | Path) -> int | None:
     return steps[-1] if steps else None
 
 
+def clean_stale_tmp(directory: str | Path) -> list[str]:
+    """Remove ``.tmp-step_*`` debris left by a save killed mid-write.
+
+    A preempted process can die between ``tmp.mkdir`` and the atomic
+    rename; the half-written directory never matches the ``step_*`` glob
+    (it can't shadow a good checkpoint) but would accumulate and confuse
+    humans inspecting the directory.  Called on the restore path — the
+    next process's first restore sweeps the previous life's debris.
+    Returns the removed directory names.
+    """
+    directory = Path(directory)
+    if not directory.exists():
+        return []
+    removed = []
+    for p in directory.glob(".tmp-step_*"):
+        shutil.rmtree(p, ignore_errors=True)
+        removed.append(p.name)
+    return sorted(removed)
+
+
 class CheckpointManager:
     """Async save + retention + restore-latest."""
 
@@ -146,6 +166,7 @@ class CheckpointManager:
 
     def restore_latest(self, abstract_tree: Any, shardings: Any | None = None):
         self.wait()
+        clean_stale_tmp(self.directory)
         step = latest_step(self.directory)
         if step is None:
             return None, None

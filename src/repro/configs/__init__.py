@@ -1,6 +1,15 @@
 """Architecture configs (one module per assigned arch) + shape registry."""
 from .base import SHAPES, ModelConfig, ShapeConfig, shape_applicable
-from .registry import ARCH_NAMES, get_config, get_reduced_config
+from .registry import (
+    ALL_NAMES,
+    ARCH_NAMES,
+    families,
+    family_of,
+    get_config,
+    get_reduced_config,
+)
+from .validation import validate_config
 
 __all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "shape_applicable",
-           "ARCH_NAMES", "get_config", "get_reduced_config"]
+           "ARCH_NAMES", "ALL_NAMES", "get_config", "get_reduced_config",
+           "family_of", "families", "validate_config"]

@@ -35,3 +35,20 @@ def get_config(name: str) -> ModelConfig:
 
 def get_reduced_config(name: str) -> ModelConfig:
     return _module(name).reduced()
+
+
+def family_of(name: str) -> str:
+    """The workload family ('dense'/'ssm'/'hybrid'/'moe'/'audio'/'vlm') of a
+    registered arch — read from its config, so registry and configs can
+    never disagree."""
+    return get_config(name).family
+
+
+def families() -> dict[str, list[str]]:
+    """All registered families -> arch names, in registry order (the
+    conformance matrix's sweep axes derive from this, so a newly registered
+    arch is swept automatically)."""
+    out: dict[str, list[str]] = {}
+    for n in ALL_NAMES:
+        out.setdefault(family_of(n), []).append(n)
+    return out

@@ -1,0 +1,26 @@
+"""Cross-architecture numerics conformance: one harness, many consumers.
+
+``matrix`` runs tiny reduced variants of every registered config family
+through train-step and prefill->decode paths under every registered
+numerics mode, asserting the per-family invariants documented in
+docs/testing.md.  ``tests/conformance/`` parametrizes over it for pytest;
+``benchmarks/matrix_bench.py`` sweeps it into ``BENCH_matrix.json`` rows
+gated by ``scripts/check_bench.py``.
+"""
+from .matrix import (
+    PARITY_TOL,
+    REPRESENTATIVE,
+    arch_mode_arms,
+    make_inputs,
+    policy_for,
+    run_decode_parity,
+    run_inject_audit,
+    run_noise_decorrelation,
+    run_restart_arm,
+    run_train_arm,
+    tiny_config,
+)
+
+__all__ = ["REPRESENTATIVE", "PARITY_TOL", "arch_mode_arms", "policy_for",
+           "tiny_config", "make_inputs", "run_train_arm", "run_inject_audit",
+           "run_decode_parity", "run_noise_decorrelation", "run_restart_arm"]

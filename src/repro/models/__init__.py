@@ -1,6 +1,7 @@
 """Model zoo: composable LM blocks covering all assigned architecture families."""
 from .model import (
     decode_step,
+    encode,
     forward,
     group_structure,
     init_cache,
@@ -8,5 +9,5 @@ from .model import (
     prefill_with_cache,
 )
 
-__all__ = ["forward", "decode_step", "init_params", "init_cache",
+__all__ = ["forward", "encode", "decode_step", "init_params", "init_cache",
            "group_structure", "prefill_with_cache"]

@@ -237,6 +237,19 @@ def _encoder_forward(cfg: ModelConfig, params, frames, numerics):
     return rms_norm(x, params["enc_norm"], cfg.norm_eps)
 
 
+def encode(cfg: ModelConfig, params: dict, frames: jnp.ndarray) -> jnp.ndarray:
+    """Public encoder entry point (whisper-family): frame embeddings
+    (B, P, D) -> encoder output (B, P, D) under ``cfg.numerics``.
+
+    ``decode_step`` takes this as ``enc_out`` so a decode loop can attend
+    the same encoder state ``forward``/``prefill_with_cache`` computed —
+    the decode-vs-forward parity arm of the conformance matrix needs it.
+    """
+    if not cfg.encoder_layers:
+        raise ValueError("encode() requires cfg.encoder_layers > 0")
+    return _encoder_forward(cfg, params, frames, cfg.numerics)
+
+
 def forward(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
             extra_embeddings: jnp.ndarray | None = None,
             last_only: bool = False) -> tuple[jnp.ndarray, jnp.ndarray]:

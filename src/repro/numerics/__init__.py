@@ -6,13 +6,13 @@ construction, and ``MODES`` / CLI choices / docs tables all derive from
 ``registry.mode_names()`` — no string matching outside this package.
 """
 from .approx_matmul import AMRNumerics, approx_matmul
-from .context import current_scope, noise_key, numerics_scope
+from .context import AuditTrace, current_scope, noise_key, numerics_scope
 from .quant import dequantize, quantize_int8
 from .registry import ModeSpec, get_mode, mode_names, register_mode
 
 __all__ = ["AMRNumerics", "MODES", "approx_matmul", "quantize_int8",
            "dequantize", "numerics_scope", "current_scope", "noise_key",
-           "ModeSpec", "register_mode", "get_mode", "mode_names"]
+           "AuditTrace", "ModeSpec", "register_mode", "get_mode", "mode_names"]
 
 
 def __getattr__(name: str):

@@ -50,7 +50,7 @@ import jax.numpy as jnp
 
 from repro.core import lut as lut_lib
 from . import registry
-from .context import noise_key
+from .context import current_scope, noise_key
 from .quant import quantize_int8, quantize_int8_ste
 
 # A registered mode name — see numerics.registry.mode_names()
@@ -113,30 +113,41 @@ def matmul_exact(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     return jnp.matmul(a, b)
 
 
-def matmul_amr_lut(a: jnp.ndarray, b: jnp.ndarray, border: int) -> jnp.ndarray:
-    """Bit-exact AMR-MUL matmul via LUT gather (oracle; small shapes only).
+def _lut_matmul(a: jnp.ndarray, b: jnp.ndarray, table, max_abs: int,
+                what: str, quantizer=quantize_int8) -> jnp.ndarray:
+    """Shared LUT-gather matmul core: quantize, gather, int32-accumulate.
+
+    ``quantizer`` selects the int8 front end: ``quantize_int8`` (hard int8,
+    the amr_lut mode) or ``quantize_int8_ste`` (float-on-the-int8-grid —
+    what the inject path uses; its audit oracle must quantize IDENTICALLY,
+    bf16 inputs round differently through the two forms).
 
     Raises ``ValueError`` at trace time when the contraction length could
     saturate the int32 accumulator (K * max|product| >= 2**31) — the same
     guard ``injection.injected_matmul_int`` applies, so oracle and injected
     path reject exactly the same shapes instead of silently wrapping.
     """
-    table = _lut_constants(border)
     k = a.shape[-1]
-    max_abs = lut_lib.table_max_abs(border)
     if k * max_abs >= 2**31:
         raise ValueError(
-            f"amr_lut int32 accumulator can saturate: K={k} with "
+            f"{what} int32 accumulator can saturate: K={k} with "
             f"max|product|={max_abs} gives K*max|product| = {k * max_abs} "
-            f">= 2**31 = {2**31}; keep K <= {(2**31 - 1) // max_abs} for "
-            f"border={border} (or split the contraction before the matmul)")
-    qa, sa = quantize_int8(a, axis=-1)           # per-row scale (..., M, 1)
-    qb, sb = quantize_int8(b, axis=0)            # per-col scale (1, N)
-    ia = qa.astype(jnp.int32) + 128              # (..., M, K)
-    ib = qb.astype(jnp.int32) + 128              # (K, N)
+            f">= 2**31 = {2**31}; keep K <= {(2**31 - 1) // max_abs} "
+            f"(or split the contraction before the matmul)")
+    qa, sa = quantizer(a, axis=-1)               # per-row scale (..., M, 1)
+    qb, sb = quantizer(b, axis=0)                # per-col scale (1, N)
+    ia = jax.lax.stop_gradient(qa).astype(jnp.int32) + 128  # (..., M, K)
+    ib = jax.lax.stop_gradient(qb).astype(jnp.int32) + 128  # (K, N)
     prods = table[ia[..., :, :, None], ib[None, :, :]]  # (..., M, K, N)
     acc = prods.sum(axis=-2).astype(jnp.float32)
     return acc * sa * sb
+
+
+def matmul_amr_lut(a: jnp.ndarray, b: jnp.ndarray, border: int) -> jnp.ndarray:
+    """Bit-exact AMR-MUL matmul via LUT gather (oracle; small shapes only)."""
+    return _lut_matmul(a, b, _lut_constants(border),
+                       lut_lib.table_max_abs(border),
+                       f"amr_lut(border={border})")
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(2, 3))
@@ -257,6 +268,48 @@ def _inject_bwd(numerics, res, g):
 matmul_amr_inject.defvjp(_inject_fwd, _inject_bwd)
 
 
+# Exported product tables of registered custom schedules, keyed by handle —
+# same lifetime/keying as injection's per-handle injector cache.
+_ORACLE_TABLES: dict[str, tuple] = {}
+
+
+def _inject_oracle(a: jnp.ndarray, b: jnp.ndarray, numerics: "AMRNumerics") -> jnp.ndarray:
+    """LUT-gather reference of the amr_inject products (the audit oracle).
+
+    Gathers from a product table built INDEPENDENTLY of the on-device
+    replay — ``core/lut``'s (2, border) table for the paper-default
+    schedule, or ``dse.lut_from_schedule`` for a registered DSE candidate
+    (``numerics.schedule_ref``) — so a zero audit diff proves the injector's
+    circuit replay bit-identical to the tabulated multiplier, not merely
+    self-consistent.  Quantizes with the SAME ``quantize_int8_ste`` front
+    end as ``_inject_fwd``: on bf16 activations the hard-int8 form rounds
+    in bf16 and would feed the table different operands.
+    """
+    if numerics.schedule_ref is None:
+        table = _lut_constants(numerics.border)
+        max_abs = lut_lib.table_max_abs(numerics.border)
+        what = f"amr_inject(border={numerics.border}) oracle"
+    else:
+        table, max_abs = _oracle_table(numerics)
+        what = f"amr_inject[{numerics.schedule_ref}] oracle"
+    return _lut_matmul(a, b, table, max_abs, what, quantizer=quantize_int8_ste)
+
+
+def _oracle_table(numerics):
+    cached = _ORACLE_TABLES.get(numerics.schedule_ref)
+    if cached is None:
+        import numpy as np
+
+        from repro.core.dse.export import lut_from_schedule  # lazy: pkg cycle
+        from . import injection
+
+        tab = lut_from_schedule(injection.resolve_schedule(numerics))
+        with jax.ensure_compile_time_eval():
+            cached = (jnp.asarray(tab, jnp.int32), int(np.abs(tab).max()))
+        _ORACLE_TABLES[numerics.schedule_ref] = cached
+    return cached
+
+
 def _key_batch(key: jax.Array) -> int | None:
     """Leading batch size of a batched PRNG key array, or None for one key.
 
@@ -324,10 +377,43 @@ def approx_matmul(
     Dispatch is registry-driven: ``numerics.mode`` selects the impl
     registered in ``numerics.registry`` (modes were validated when the
     policy was constructed).
+
+    When the ambient scope carries an AUDIT channel
+    (``numerics_scope(audit=AuditTrace())``) and the mode registered a
+    bit-exact ``oracle``, the oracle is evaluated alongside the impl and
+    the per-site max-abs-diff recorded at run time via
+    ``jax.debug.callback`` — the conformance matrix's inject-vs-LUT
+    bit-identity proof (read the trace after ``jax.effects_barrier()``).
     """
     if numerics is None or numerics.is_exact():
         return matmul_exact(a, b)
-    return registry.get_mode(numerics.mode).impl(a, b, numerics, key=key, site=site)
+    spec = registry.get_mode(numerics.mode)
+    out = spec.impl(a, b, numerics, key=key, site=site)
+    audit = current_scope().audit
+    if audit is not None and spec.oracle is not None:
+        ref = spec.oracle(a, b, numerics)
+        diff = _grid_diff(out, ref, a, b)
+        jax.debug.callback(partial(audit.record, site or "<unlabeled>"), diff)
+    return out
+
+
+def _grid_diff(out, ref, a, b):
+    """Max |out - ref| in integer-product-grid steps (audit metric).
+
+    Audited modes share one quantization convention (per-row scales of A,
+    per-column scales of B); impl and oracle outputs are both
+    ``float(acc) * sa * sb`` with bitwise-identical scales, so any REAL
+    semantic difference is >= 1 step on the int32 accumulator grid.
+    Comparing after dividing the scales back out makes the audit immune to
+    XLA compiling the two (mathematically identical) rescale chains with
+    different FMA contraction — observed ~1-ulp float noise that is not a
+    numerics difference.  Sub-quantum float noise rounds to 0.0; a genuine
+    product mismatch records >= 1.0.  (The reconstruction is exact while
+    |acc| < 2**24, i.e. for oracle-sized shapes — the regime the
+    conformance matrix audits.)
+    """
+    quantum = quantize_int8(a, axis=-1)[1] * quantize_int8(b, axis=0)[1]
+    return jnp.max(jnp.abs(jnp.round(out / quantum) - jnp.round(ref / quantum)))
 
 
 # --------------------------------------------------------------------------
@@ -378,6 +464,7 @@ registry.register_mode(
     "amr_inject",
     lambda a, b, nm, *, key=None, site=None: matmul_amr_inject(a, b, nm),
     required_params=("border",), validate=_validate_inject,
+    oracle=_inject_oracle,
     description="on-device exact error injection (any schedule)")
 
 registry.register_mode(

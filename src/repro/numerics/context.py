@@ -22,7 +22,21 @@ steps differ via the traced ``step``.
 
 Scopes nest (inner values override, absent inner values inherit) and are
 (re-)entered INSIDE scan/checkpoint bodies, so a remat re-trace rebuilds
-the identical keys — noise is deterministic given (seed, site, step, layer).
+the identical keys — noise is deterministic given (seed, site, step, layer,
+unit).
+
+``unit`` is a fourth coordinate for vmapped sub-layer instances that share
+one traced call site — e.g. the per-expert matmuls of an MoE layer, which
+are ONE ``approx_matmul`` trace under ``jax.vmap``: without it every expert
+drew the identical noise tensor (site/step/layer are all equal across the
+map).  The instance index rides in as a vmapped operand and folds into the
+key per instance.
+
+The scope also carries the conformance AUDIT channel (``audit=``): an
+:class:`AuditTrace` that, while in scope, makes ``approx_matmul`` compare
+every call site's output against the mode's bit-exact oracle
+(``registry.ModeSpec.oracle``) and record the per-site max-abs-diff — the
+inject-vs-LUT bit-identity proof of ``tests/conformance`` runs on it.
 """
 from __future__ import annotations
 
@@ -32,7 +46,37 @@ import threading
 import zlib
 from typing import Any
 
-__all__ = ["numerics_scope", "current_scope", "noise_key", "NumericsScope"]
+__all__ = ["numerics_scope", "current_scope", "noise_key", "NumericsScope",
+           "AuditTrace"]
+
+
+class AuditTrace:
+    """Per-call-site record of |mode output - oracle output| maxima.
+
+    Populated at RUN time through ``jax.debug.callback`` (so it works under
+    jit / scan / remat traces); read it only after the audited computation
+    has executed (``jax.effects_barrier()`` flushes pending callbacks).
+    ``sites`` maps the static call-site label to ``{"calls", "max_abs_diff"}``.
+    """
+
+    def __init__(self):
+        self.sites: dict[str, dict[str, Any]] = {}
+
+    def record(self, site: str, diff) -> None:
+        ent = self.sites.setdefault(site, {"calls": 0, "max_abs_diff": 0.0})
+        ent["calls"] += 1
+        ent["max_abs_diff"] = max(ent["max_abs_diff"], float(diff))
+
+    @property
+    def max_abs_diff(self) -> float:
+        return max((e["max_abs_diff"] for e in self.sites.values()), default=0.0)
+
+    @property
+    def calls(self) -> int:
+        return sum(e["calls"] for e in self.sites.values())
+
+    def bit_exact(self) -> bool:
+        return self.max_abs_diff == 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,6 +85,8 @@ class NumericsScope:
 
     step: Any = None   # traced int scalar (training step), or None
     layer: Any = None  # traced int scalar (flat layer index), or None
+    unit: Any = None   # traced int scalar (vmapped instance, e.g. expert), or None
+    audit: Any = None  # AuditTrace recording oracle diffs, or None
 
 
 # Thread-local scope stack: scopes are entered/exited during Python tracing
@@ -57,13 +103,16 @@ def _stack() -> list:
 
 
 @contextlib.contextmanager
-def numerics_scope(*, step=None, layer=None):
-    """Provide step/layer decorrelation values to nested approx matmuls."""
+def numerics_scope(*, step=None, layer=None, unit=None, audit=None):
+    """Provide step/layer/unit decorrelation values (and the optional audit
+    channel) to nested approx matmuls."""
     cur = current_scope()
     stack = _stack()
     stack.append(NumericsScope(
         step=step if step is not None else cur.step,
-        layer=layer if layer is not None else cur.layer))
+        layer=layer if layer is not None else cur.layer,
+        unit=unit if unit is not None else cur.unit,
+        audit=audit if audit is not None else cur.audit))
     try:
         yield
     finally:
@@ -100,15 +149,21 @@ def noise_key(seed: int, site: str | None = None):
     if site:
         key = jax.random.fold_in(key, _site_id(site))
     scope = current_scope()
-    step, layer = scope.step, scope.layer
+    step, layer, unit = scope.step, scope.layer, scope.unit
     if step is not None and getattr(step, "ndim", 0):
         def fold(s):
             k = jax.random.fold_in(key, s)
-            return jax.random.fold_in(k, layer) if layer is not None else k
+            if layer is not None:
+                k = jax.random.fold_in(k, layer)
+            if unit is not None:
+                k = jax.random.fold_in(k, unit)
+            return k
 
         return jax.vmap(fold)(step)
     if step is not None:
         key = jax.random.fold_in(key, step)
     if layer is not None:
         key = jax.random.fold_in(key, layer)
+    if unit is not None:
+        key = jax.random.fold_in(key, unit)
     return key

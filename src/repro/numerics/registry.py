@@ -39,6 +39,13 @@ class ModeSpec:
     ``required_params`` are ``AMRNumerics`` field names that must be
     non-None for this mode; ``validate`` is an optional extra check run at
     policy construction (raise ``ValueError`` with a clear message).
+
+    ``oracle`` is an optional bit-exact reference implementation
+    ``(a, b, numerics) -> ndarray`` of the same product semantics — when a
+    ``numerics_scope(audit=AuditTrace())`` is active, ``approx_matmul``
+    evaluates it alongside ``impl`` at every call site and records the
+    per-site max-abs-diff (the conformance matrix's inject-vs-LUT
+    bit-identity proof rides on this hook).
     """
 
     name: str
@@ -46,6 +53,7 @@ class ModeSpec:
     required_params: tuple[str, ...] = ()
     description: str = ""
     validate: Callable[[Any], None] | None = None
+    oracle: Impl | None = None
 
 
 # Registration order is preserved — it defines the canonical MODES order
@@ -60,6 +68,7 @@ def register_mode(
     required_params: tuple[str, ...] = (),
     description: str = "",
     validate: Callable[[Any], None] | None = None,
+    oracle: Impl | None = None,
 ) -> ModeSpec:
     """Register a numerics mode. Names are unique — re-registration is an
     error (use :func:`unregister_mode` first if a test needs to replace
@@ -71,7 +80,7 @@ def register_mode(
             f"numerics mode {name!r} is already registered; "
             f"unregister_mode({name!r}) first to replace it")
     spec = ModeSpec(name=name, impl=impl, required_params=tuple(required_params),
-                    description=description, validate=validate)
+                    description=description, validate=validate, oracle=oracle)
     _REGISTRY[name] = spec
     return spec
 

@@ -109,6 +109,7 @@ class FaultTolerantLoop:
         max_retries: int = 3,
         remesh: Callable[[Any], Any] | None = None,
         heartbeat: Heartbeat | None = None,
+        on_restore: Callable[[Any, int], None] | None = None,
     ):
         self.manager = CheckpointManager(ckpt_dir, keep=keep)
         self.make_state = make_state
@@ -118,6 +119,7 @@ class FaultTolerantLoop:
         self.max_retries = max_retries
         self.remesh = remesh
         self.heartbeat = heartbeat
+        self.on_restore = on_restore
         self.straggler = StragglerMonitor()
         self._preempted = threading.Event()
 
@@ -176,4 +178,10 @@ class FaultTolerantLoop:
             return fresh, 0
         if self.remesh is not None:
             restored = self.remesh(restored)
+        if self.on_restore is not None:
+            # process-level side effects a restart must re-establish before
+            # stepping — e.g. re-registering the amr_inject schedule handle
+            # the restored state's numerics policy refers to (the schedule
+            # registry does not survive the process)
+            self.on_restore(restored, int(step))
         return restored, int(step)

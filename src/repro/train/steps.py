@@ -38,14 +38,19 @@ def make_train_state(cfg: ModelConfig, key) -> TrainState:
 
 
 def loss_fn(cfg: ModelConfig, params, tokens, targets, extra=None,
-            aux_weight: float = 0.01, step=None):
+            aux_weight: float = 0.01, step=None, *, with_logits: bool = False):
     """``step`` (traced int scalar) feeds the numerics PRNG scope so
-    amr_noise draws decorrelate across training steps (repro.numerics.context)."""
+    amr_noise draws decorrelate across training steps (repro.numerics.context).
+
+    ``with_logits=True`` returns ``(loss, (aux, logits))`` — lets a single
+    differentiated call serve both the gradient and a logits inspection
+    (the conformance probes) without a second forward compile."""
     with numerics_scope(step=step):
         logits, aux = forward(cfg, params, tokens, extra)
     ll = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
     nll = -jnp.take_along_axis(ll, targets[..., None], axis=-1)[..., 0]
-    return nll.mean() + aux_weight * aux, aux
+    loss = nll.mean() + aux_weight * aux
+    return (loss, (aux, logits)) if with_logits else (loss, aux)
 
 
 def make_train_step(cfg: ModelConfig, *, peak_lr: float = 3e-4, warmup: int = 100,

@@ -1,0 +1,7 @@
+"""Make the shared test helpers (tests/_hyp.py, tests/_markers.py)
+importable from this subpackage — pytest puts each test file's own
+directory on sys.path, not the parent tests/ dir."""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))

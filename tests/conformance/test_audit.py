@@ -1,0 +1,188 @@
+"""Audit-scope and PRNG-coordinate unit tests: the hooks the conformance
+matrix rides on, plus the MoE per-expert decorrelation regression."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import MoEConfig
+from repro.models.moe import init_moe, moe_forward
+from repro.numerics import (
+    AMRNumerics,
+    AuditTrace,
+    approx_matmul,
+    noise_key,
+    numerics_scope,
+)
+from repro.numerics import registry
+
+
+@pytest.fixture
+def operands():
+    a = jax.random.normal(jax.random.PRNGKey(0), (4, 16))
+    b = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+    return a, b
+
+
+def test_audit_records_per_site(operands):
+    a, b = operands
+    nm = AMRNumerics(mode="amr_inject", border=8)
+    trace = AuditTrace()
+
+    @jax.jit
+    def f(a, b):
+        with numerics_scope(audit=trace):
+            x = approx_matmul(a, b, nm, site="site.one")
+            y = approx_matmul(a, b, nm, site="site.two")
+            z = approx_matmul(a, b, nm, site="site.one")
+        return x + y + z
+
+    f(a, b).block_until_ready()
+    jax.effects_barrier()
+    assert set(trace.sites) == {"site.one", "site.two"}
+    assert trace.sites["site.one"]["calls"] == 2
+    assert trace.calls == 3
+    assert trace.bit_exact() and trace.max_abs_diff == 0.0
+
+
+def test_audit_absent_means_no_oracle_cost(operands):
+    a, b = operands
+    nm = AMRNumerics(mode="amr_inject", border=8)
+    out = approx_matmul(a, b, nm, site="s")  # no scope: must not record
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_audit_detects_corrupted_oracle(operands):
+    a, b = operands
+    nm = AMRNumerics(mode="amr_inject", border=8)
+    spec = registry.get_mode("amr_inject")
+    # snapshot the whole registry dict: restoring it wholesale preserves the
+    # canonical registration ORDER (re-registering would move amr_inject to
+    # the end and break mode_names()-order assertions elsewhere)
+    snapshot = dict(registry._REGISTRY)
+    registry.unregister_mode("amr_inject")
+    try:
+        registry.register_mode(
+            "amr_inject", spec.impl, required_params=spec.required_params,
+            validate=spec.validate,
+            # off-by-two-grid-steps oracle: the audit must see it
+            oracle=lambda a, b, n: spec.oracle(a, b, n) * 1.5 + 1.0)
+        trace = AuditTrace()
+        with numerics_scope(audit=trace):
+            approx_matmul(a, b, nm, site="s").block_until_ready()
+        jax.effects_barrier()
+        assert not trace.bit_exact()
+        assert trace.max_abs_diff >= 1.0
+    finally:
+        registry._REGISTRY.clear()
+        registry._REGISTRY.update(snapshot)
+
+
+def test_audit_inject_oracle_custom_schedule(operands):
+    from repro.core import reduction
+    from repro.numerics import injection
+
+    a, b = operands
+    handle = injection.register_schedule(reduction.get_schedule(2, 6),
+                                         name="conf:audit-custom")
+    nm = AMRNumerics(mode="amr_inject", border=6, schedule_ref=handle)
+    trace = AuditTrace()
+
+    @jax.jit
+    def f(a, b):
+        with numerics_scope(audit=trace):
+            return approx_matmul(a, b, nm, site="s")
+
+    f(a, b).block_until_ready()
+    jax.effects_barrier()
+    assert trace.bit_exact(), trace.sites
+
+
+def test_noise_key_folds_unit():
+    k_base = noise_key(0, "s")
+    with numerics_scope(unit=jnp.asarray(0, jnp.int32)):
+        k0 = noise_key(0, "s")
+    with numerics_scope(unit=jnp.asarray(1, jnp.int32)):
+        k1 = noise_key(0, "s")
+    assert not jnp.array_equal(k0, k1)
+    assert not jnp.array_equal(k_base, k0)
+
+
+def test_noise_key_unit_folds_in_vector_step_path():
+    steps = jnp.asarray([3, 5], jnp.int32)
+    with numerics_scope(step=steps, unit=jnp.asarray(1, jnp.int32)):
+        ku = noise_key(0, "s")
+    with numerics_scope(step=steps):
+        kv = noise_key(0, "s")
+    assert ku.shape[0] == 2 and kv.shape[0] == 2
+    assert not jnp.array_equal(ku, kv)
+
+
+def test_vmapped_units_decorrelate_noise():
+    """The exact shape of the MoE bug: one traced site under vmap."""
+    nm = AMRNumerics(mode="amr_noise", border=8, noise_seed=0)
+    E = 4
+    x = jnp.broadcast_to(jax.random.normal(jax.random.PRNGKey(2), (1, 6, 16)),
+                         (E, 6, 16))
+    w = jnp.broadcast_to(jax.random.normal(jax.random.PRNGKey(3), (1, 16, 8)),
+                         (E, 16, 8))
+
+    def with_unit(e, xe, we):
+        with numerics_scope(unit=e):
+            return approx_matmul(xe, we, nm, site="s")
+
+    ys = jax.vmap(with_unit)(jnp.arange(E, dtype=jnp.int32), x, w)
+    for e in range(1, E):
+        assert float(jnp.max(jnp.abs(ys[0] - ys[e]))) > 0, (
+            f"expert {e} drew the same noise as expert 0")
+
+    # without the unit coordinate the draws ARE identical — the regression
+    # this guards against (delete the unit fold and this starts failing)
+    def without_unit(xe, we):
+        return approx_matmul(xe, we, nm, site="s")
+
+    ys_bug = jax.vmap(without_unit)(x, w)
+    assert float(jnp.max(jnp.abs(ys_bug[0] - ys_bug[1]))) == 0.0
+
+
+def test_moe_experts_draw_distinct_noise():
+    """Model-level: identical expert weights + identical token buffers must
+    still produce distinct per-expert outputs under amr_noise."""
+    cfg = MoEConfig(n_experts=4, top_k=2, d_ff_expert=32)
+    params = init_moe(jax.random.PRNGKey(0), 16, cfg, jnp.float32)
+    # clone expert 0's weights into every expert
+    for k in ("w_gate", "w_up", "w_down"):
+        params[k] = jnp.broadcast_to(params[k][:1], params[k].shape)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 16))
+
+    nm = AMRNumerics(mode="amr_noise", border=8, noise_seed=3)
+    out, _ = jax.jit(lambda p, x: moe_forward(p, x, cfg, numerics=nm))(params, x)
+    assert bool(jnp.isfinite(out).all())
+
+    nm_exact = AMRNumerics("exact")
+    out_a, _ = moe_forward(params, x, cfg, numerics=nm_exact)
+    # exact path with cloned weights: routing still mixes experts; just
+    # check the noise path changed SOMETHING (it injected per-expert noise)
+    assert float(jnp.max(jnp.abs(out - out_a))) > 0
+
+
+def test_moe_inject_unit_scope_stays_deterministic():
+    """unit only feeds the PRNG: deterministic modes must be unaffected,
+    and the MoE inject path must still pass the audit bit-identity."""
+    cfg = MoEConfig(n_experts=4, top_k=2, d_ff_expert=32)
+    params = init_moe(jax.random.PRNGKey(0), 16, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 16))
+    nm = AMRNumerics(mode="amr_inject", border=8)
+    trace = AuditTrace()
+
+    @jax.jit
+    def f(p, x):
+        with numerics_scope(audit=trace):
+            out, _ = moe_forward(p, x, cfg, numerics=nm)
+        return out
+
+    out1 = f(params, x)
+    out2 = f(params, x)
+    assert bool(jnp.all(out1 == out2))
+    jax.effects_barrier()
+    assert trace.bit_exact(), trace.sites
+    assert set(trace.sites) == {"moe.w_gate", "moe.w_up", "moe.w_down"}

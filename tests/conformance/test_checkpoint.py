@@ -1,0 +1,137 @@
+"""ckpt/checkpoint.py round-trip and crash-debris properties.
+
+The restart bit-consistency proof rests on these: custom-dtype leaves
+(bf16/f8) restoring bit-exactly, half-written ``.tmp-step_*`` dirs never
+shadowing a good checkpoint, and retention keeping step 0.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+from repro.ckpt import (
+    CheckpointManager,
+    clean_stale_tmp,
+    latest_step,
+    restore_tree,
+    save_tree,
+)
+
+CUSTOM_DTYPES = ["bfloat16", "float8_e4m3fn", "float8_e5m2"]
+
+
+def _assert_bit_equal(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    assert a.dtype == b.dtype and a.shape == b.shape
+    # byte-level comparison: NaN-safe and works for 0-d leaves
+    assert a.tobytes() == b.tobytes()
+
+
+def _tree_for(dtype: str, seed: int, shape=(3, 5)):
+    rng = np.random.default_rng(seed)
+    vals = rng.normal(scale=4.0, size=shape)
+    return {
+        "w": jnp.asarray(vals.astype(getattr(ml_dtypes, dtype))),
+        "nested": {"b": jnp.asarray(rng.normal(size=(7,)), jnp.float32),
+                   "step": jnp.asarray(seed, jnp.int32)},
+    }
+
+
+@pytest.mark.parametrize("dtype", CUSTOM_DTYPES)
+def test_custom_dtype_round_trip_bit_exact(tmp_path, dtype):
+    tree = _tree_for(dtype, 0)
+    path = save_tree(tmp_path, tree, step=3)
+    assert path.name == "step_00000003"
+    back = restore_tree(path, tree)
+    for orig, rest in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        _assert_bit_equal(orig, rest)
+
+
+@given(seed=st.integers(0, 2**16), dtype=st.sampled_from(CUSTOM_DTYPES))
+@settings(max_examples=10)
+def test_round_trip_property(tmp_path_factory, seed, dtype):
+    tmp = tmp_path_factory.mktemp("ckpt")
+    tree = _tree_for(dtype, seed)
+    back = restore_tree(save_tree(tmp, tree, step=1), tree)
+    for orig, rest in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        _assert_bit_equal(orig, rest)
+
+
+def test_nonfinite_values_round_trip(tmp_path):
+    tree = {"w": jnp.asarray([np.inf, -np.inf, np.nan, 0.0],
+                             ml_dtypes.bfloat16)}
+    back = restore_tree(save_tree(tmp_path, tree, step=0), tree)
+    _assert_bit_equal(tree["w"], back["w"])
+
+
+def _plant_tmp_debris(directory, step: int, tree=None):
+    tmp = directory / f".tmp-step_{step:08d}"
+    tmp.mkdir(parents=True)
+    (tmp / "leaf_00000.npy").write_bytes(b"half-written")
+    if tree is not None:
+        # even a COMPLETE-looking tmp dir (manifest present) must not count
+        manifest = {"step": step, "leaves": {}}
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+    return tmp
+
+
+def test_stale_tmp_never_shadows_latest(tmp_path):
+    tree = _tree_for("bfloat16", 1)
+    save_tree(tmp_path, tree, step=5)
+    _plant_tmp_debris(tmp_path, 7, tree)
+    assert latest_step(tmp_path) == 5  # .tmp-step_7 invisible to the glob
+
+
+def test_restore_latest_cleans_stale_tmp(tmp_path):
+    tree = _tree_for("bfloat16", 2)
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(tree, step=4)
+    debris = _plant_tmp_debris(tmp_path, 9)
+    restored, step = mgr.restore_latest(tree)
+    assert step == 4
+    assert not debris.exists(), "restore must sweep mid-save debris"
+    for orig, rest in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert (np.asarray(orig) == np.asarray(rest)).all()
+
+
+def test_clean_stale_tmp_reports_and_tolerates_missing_dir(tmp_path):
+    assert clean_stale_tmp(tmp_path / "never-created") == []
+    _plant_tmp_debris(tmp_path, 1)
+    _plant_tmp_debris(tmp_path, 2)
+    removed = clean_stale_tmp(tmp_path)
+    assert removed == [".tmp-step_00000001", ".tmp-step_00000002"]
+    assert clean_stale_tmp(tmp_path) == []
+
+
+def test_interrupted_save_leaves_previous_checkpoint_usable(tmp_path):
+    """A save that dies mid-write (simulated: only the tmp dir exists for
+    the new step) must leave restore_latest returning the previous step."""
+    tree = _tree_for("bfloat16", 3)
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save(tree, step=2)
+    _plant_tmp_debris(tmp_path, 3, tree)  # step 3's save never renamed
+    restored, step = mgr.restore_latest(tree)
+    assert step == 2 and restored is not None
+
+
+def test_retention_keeps_step_zero(tmp_path):
+    tree = _tree_for("bfloat16", 4)
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (0, 1, 2, 3, 4):
+        mgr.save(tree, step=s)
+    kept = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert kept == ["step_00000000", "step_00000003", "step_00000004"]
+
+
+def test_async_save_then_restore(tmp_path):
+    tree = _tree_for("bfloat16", 5)
+    mgr = CheckpointManager(tmp_path, keep=3)
+    mgr.save_async(tree, step=6)
+    restored, step = mgr.restore_latest(tree)  # waits for the writer
+    assert step == 6
+    for orig, rest in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        _assert_bit_equal(orig, rest)

@@ -1,0 +1,95 @@
+"""Conformance matrix: every config family x every registry mode.
+
+Tier-1 keeps one representative arch per family on the load-bearing
+invariants (amr_inject train + bit-identity, decode parity under the
+Pallas kernel path); the full arch x mode sweep runs nightly
+(REPRO_NIGHTLY=1 — .github/workflows/nightly.yml).
+"""
+import pytest
+from _markers import nightly
+
+from repro.configs import ALL_NAMES
+from repro.conformance import (
+    PARITY_TOL,
+    REPRESENTATIVE,
+    arch_mode_arms,
+    run_decode_parity,
+    run_inject_audit,
+    run_noise_decorrelation,
+    run_train_arm,
+)
+from repro.numerics import mode_names
+
+FAMILY_REPS = sorted(REPRESENTATIVE.items())
+REP_ARCHS = [a for _, a in FAMILY_REPS]
+
+
+def test_parity_tolerances_cover_all_modes():
+    assert set(PARITY_TOL) == set(mode_names()), (
+        "PARITY_TOL must name every registered mode")
+
+
+# ------------------------------------------------------------------ tier-1
+
+@pytest.mark.parametrize("family,arch", FAMILY_REPS)
+def test_representative_trains_under_inject(family, arch):
+    row = run_train_arm(arch, "amr_inject", steps=2)
+    assert row["loss_finite"], row
+    assert row["grad_finite"], row
+    assert row["nondegenerate"], row
+
+
+@pytest.mark.parametrize("family,arch", FAMILY_REPS)
+def test_representative_inject_bit_identity(family, arch):
+    row = run_inject_audit(arch)
+    assert row["sites"] > 0 and row["calls"] > 0, row
+    assert row["bit_exact"], (
+        f"{arch}: inject != LUT oracle at sites {row['site_diffs']}")
+
+
+@pytest.mark.parametrize("family,arch", FAMILY_REPS)
+def test_representative_decode_parity_exact(family, arch):
+    row = run_decode_parity(arch, "exact")
+    assert row["within_tol"], row
+
+
+def test_representative_decode_parity_kernel():
+    # one kernel-path parity arm stays tier-1 (full sweep is nightly)
+    row = run_decode_parity(REPRESENTATIVE["dense"], "amr_kernel")
+    assert row["within_tol"], row
+
+
+def test_representative_noise_decorrelation():
+    row = run_noise_decorrelation(REPRESENTATIVE["dense"])
+    assert row["reproducible"], row
+    assert row["steps_decorrelated"], row
+
+
+# ----------------------------------------------------------------- nightly
+
+@nightly
+@pytest.mark.parametrize("arch,mode", arch_mode_arms())
+def test_matrix_train(arch, mode):
+    row = run_train_arm(arch, mode, steps=2)
+    assert row["loss_finite"] and row["grad_finite"] and row["nondegenerate"], row
+
+
+@nightly
+@pytest.mark.parametrize("arch,mode", arch_mode_arms())
+def test_matrix_decode_parity(arch, mode):
+    row = run_decode_parity(arch, mode)
+    assert row["within_tol"], row
+
+
+@nightly
+@pytest.mark.parametrize("arch", ALL_NAMES)
+def test_matrix_inject_bit_identity(arch):
+    row = run_inject_audit(arch)
+    assert row["bit_exact"], row["site_diffs"]
+
+
+@nightly
+@pytest.mark.parametrize("arch", REP_ARCHS)
+def test_matrix_noise_decorrelation(arch):
+    row = run_noise_decorrelation(arch)
+    assert row["reproducible"] and row["steps_decorrelated"], row

@@ -1,0 +1,93 @@
+"""Registry-wide config validity: every registered arch, full AND reduced,
+passes ``validate_config``; reduced variants are genuinely CPU-sized; the
+family index covers the whole zoo and the conformance representatives.
+Negative cases pin down that the validator actually rejects the shrink
+mistakes it exists to catch."""
+import dataclasses
+
+import pytest
+
+from repro.configs import (
+    ALL_NAMES,
+    families,
+    family_of,
+    get_config,
+    get_reduced_config,
+    validate_config,
+)
+from repro.conformance import REPRESENTATIVE
+
+FAMILY_NAMES = ("dense", "ssm", "hybrid", "moe", "audio", "vlm")
+
+
+@pytest.mark.parametrize("arch", ALL_NAMES)
+def test_full_config_valid(arch):
+    cfg = get_config(arch)
+    assert validate_config(cfg) is cfg
+
+
+@pytest.mark.parametrize("arch", ALL_NAMES)
+def test_reduced_config_valid_and_tiny(arch):
+    cfg = validate_config(get_reduced_config(arch))
+    assert cfg.n_layers <= 4, f"{arch}: reduced n_layers={cfg.n_layers}"
+    assert cfg.d_model <= 256, f"{arch}: reduced d_model={cfg.d_model}"
+    assert cfg.vocab <= 4096, f"{arch}: reduced vocab={cfg.vocab}"
+    # the shrink must not change what the config IS
+    assert cfg.family == get_config(arch).family
+
+
+def test_families_cover_registry():
+    fams = families()
+    assert set(fams) == set(FAMILY_NAMES)
+    listed = [a for members in fams.values() for a in members]
+    assert sorted(listed) == sorted(ALL_NAMES)
+    for fam, members in fams.items():
+        for a in members:
+            assert family_of(a) == fam
+
+
+def test_representatives_exist_with_matching_family():
+    assert set(REPRESENTATIVE) == set(FAMILY_NAMES)
+    for fam, arch in REPRESENTATIVE.items():
+        assert arch in ALL_NAMES
+        assert family_of(arch) == fam
+
+
+# ------------------------------------------------------------ negative cases
+
+def _reduced(arch):
+    return get_reduced_config(arch)
+
+
+def test_rejects_bad_gqa_grouping():
+    cfg = dataclasses.replace(_reduced("gemma-2b"), n_heads=4, n_kv_heads=3)
+    with pytest.raises(ValueError, match="GQA"):
+        validate_config(cfg)
+
+
+def test_rejects_pattern_layer_mismatch():
+    cfg = _reduced("gemma3-1b")
+    assert cfg.pattern is not None
+    cfg = dataclasses.replace(cfg, n_layers=cfg.pattern.n_layers + 1)
+    with pytest.raises(ValueError, match="pattern"):
+        validate_config(cfg)
+
+
+def test_rejects_bad_ssm_head_divisibility():
+    cfg = _reduced("mamba2-370m")
+    bad_ssm = dataclasses.replace(cfg.ssm, head_dim=cfg.ssm.head_dim + 1)
+    with pytest.raises(ValueError, match="SSM"):
+        validate_config(dataclasses.replace(cfg, ssm=bad_ssm))
+
+
+def test_rejects_bad_moe_top_k():
+    cfg = _reduced("dbrx-132b")
+    bad_moe = dataclasses.replace(cfg.moe, top_k=cfg.moe.n_experts + 1)
+    with pytest.raises(ValueError, match="top_k"):
+        validate_config(dataclasses.replace(cfg, moe=bad_moe))
+
+
+def test_rejects_swa_without_window():
+    cfg = _reduced("gemma3-1b")  # has swa layers in its pattern
+    with pytest.raises(ValueError, match="sliding_window"):
+        validate_config(dataclasses.replace(cfg, sliding_window=0))

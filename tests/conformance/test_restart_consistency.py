@@ -1,0 +1,94 @@
+"""Kill/restart bit-consistency: a FaultTolerantLoop under amr_inject,
+interrupted mid-run, must resume from ckpt/ and reproduce the
+uninterrupted float32 loss stream bitwise.
+
+Covers the three things a process death actually breaks: the step counter
+(resume must not replay or skip a batch), the PRNG/step fold (losses after
+the boundary must match, not just stay finite), and the injection schedule
+registry (process-local — a DSE schedule_ref dangles in the new life until
+``on_restore`` re-registers it).
+"""
+import signal
+
+import pytest
+from _markers import nightly
+
+from repro.conformance import run_restart_arm
+from repro.core import reduction
+from repro.numerics import injection
+
+ARCH = "gemma-2b"
+
+
+def _assert_bitwise(row):
+    assert row["resumed_from"] > 0, row
+    assert row["tmp_cleaned"], "stale .tmp-step_* debris survived restore"
+    assert row["bit_exact"], (
+        f"loss streams diverged after resume (max diff "
+        f"{row['max_abs_diff']}): ref={row['ref_losses']} "
+        f"resumed={row['resumed_losses']}")
+
+
+def test_restart_bit_consistency_event_preemption():
+    row = run_restart_arm(ARCH, total_steps=6, preempt_at=3)
+    _assert_bitwise(row)
+    assert row["resumed_from"] == 3
+
+
+@nightly
+def test_restart_bit_consistency_real_sigterm():
+    """Same proof via an actual SIGTERM delivered to this process (the
+    handler installed by install_preemption_handler)."""
+    prev = signal.getsignal(signal.SIGTERM)
+    try:
+        row = run_restart_arm(ARCH, total_steps=6, preempt_at=3,
+                              use_signal=True)
+    finally:
+        signal.signal(signal.SIGTERM, prev)
+    _assert_bitwise(row)
+
+
+def test_restart_reregisters_dse_schedule():
+    """schedule_ref policies survive a restart only because on_restore
+    re-registers the schedule; between_lives wipes the registry the way a
+    real process death would."""
+    sched = reduction.get_schedule(2, 8)
+    handle = injection.register_schedule(sched, name="conf:restart")
+
+    def between_lives():
+        injection._SCHEDULES.pop(handle, None)
+        injection._INJECTORS.pop(handle, None)
+
+    def on_restore(state, step):  # noqa: ARG001 — loop hook signature
+        injection.register_schedule(sched, name=handle)
+
+    try:
+        row = run_restart_arm(ARCH, total_steps=6, preempt_at=3,
+                              schedule_ref=handle,
+                              between_lives=between_lives,
+                              on_restore=on_restore)
+        _assert_bitwise(row)
+    finally:
+        between_lives()
+
+
+@nightly
+def test_restart_without_reregistration_fails_loudly():
+    """The negative control: if nothing re-registers the schedule, the
+    resumed life must fail with the registry's actionable KeyError — not
+    silently fall back to the default schedule (that would *change the
+    numerics* mid-run)."""
+    sched = reduction.get_schedule(2, 8)
+    handle = injection.register_schedule(sched, name="conf:restart-neg")
+
+    def between_lives():
+        injection._SCHEDULES.pop(handle, None)
+        injection._INJECTORS.pop(handle, None)
+
+    try:
+        with pytest.raises(KeyError, match="not.*registered"):
+            run_restart_arm(ARCH, total_steps=6, preempt_at=3,
+                            schedule_ref=handle,
+                            between_lives=between_lives)
+    finally:
+        between_lives()

@@ -88,6 +88,29 @@ SERVE = {
 }
 
 
+MATRIX = {
+    "schema": "BENCH_matrix/v1", "engine": "jax", "quick": True, "border": 8,
+    "results": [
+        {"kind": "train", "arch": "gemma3-1b", "mode": "amr_inject",
+         "steps": 2, "loss_finite": True, "grad_finite": True,
+         "nondegenerate": True, "first_loss": 6.2, "final_loss": 5.9},
+        {"kind": "inject_audit", "arch": "dbrx-132b", "schedule": "default",
+         "bit_exact": True, "max_abs_diff": 0.0, "sites": 9, "calls": 18,
+         "site_diffs": {"moe.w_gate": 0.0}},
+        {"kind": "decode_parity", "arch": "whisper-small", "mode": "exact",
+         "applicable": True, "within_tol": True, "parity_diff": 0.02,
+         "tol": 0.15},
+        {"kind": "noise_decorrelation", "arch": "gemma3-1b",
+         "reproducible": True, "steps_decorrelated": True},
+        {"kind": "restart", "arch": "gemma-2b", "schedule": "default",
+         "bit_exact": True, "max_abs_diff": 0.0, "steps": 6,
+         "resumed_from": 3, "tmp_cleaned": True,
+         "ref_losses": [6.1, 6.0], "resumed_losses": [6.1, 6.0]},
+    ],
+    "wall_clock_s": 300.0,
+}
+
+
 def _errors(fresh, baseline):
     errs, _ = check_bench.compare_artifacts(fresh, baseline, "t.json")
     return errs
@@ -258,6 +281,56 @@ class TestServeArtifact:
         assert any("gen" in e for e in _errors(bad, SERVE))
 
 
+class TestMatrixArtifact:
+    def test_identical_passes(self):
+        assert _errors(copy.deepcopy(MATRIX), MATRIX) == []
+
+    def test_inject_bit_identity_flip_is_caught(self):
+        """The tentpole invariant: inject-vs-LUT-oracle grid-step agreement
+        is integer-derived, so even a one-grid-step drift fails."""
+        bad = copy.deepcopy(MATRIX)
+        bad["results"][1]["bit_exact"] = False
+        bad["results"][1]["max_abs_diff"] = 1.0
+        errs = _errors(bad, MATRIX)
+        assert any("bit_exact" in e for e in errs)
+        assert any("max_abs_diff" in e for e in errs)
+
+    def test_train_invariant_flips_are_caught(self):
+        for field in ("loss_finite", "grad_finite", "nondegenerate"):
+            bad = copy.deepcopy(MATRIX)
+            bad["results"][0][field] = False
+            assert any(field in e for e in _errors(bad, MATRIX)), field
+
+    def test_decode_parity_flip_is_caught(self):
+        bad = copy.deepcopy(MATRIX)
+        bad["results"][2]["within_tol"] = False
+        bad["results"][2]["parity_diff"] = 3.0
+        assert any("within_tol" in e for e in _errors(bad, MATRIX))
+
+    def test_restart_regression_is_caught(self):
+        for field in ("bit_exact", "tmp_cleaned"):
+            bad = copy.deepcopy(MATRIX)
+            bad["results"][4][field] = False
+            assert any(field in e for e in _errors(bad, MATRIX)), field
+        early = copy.deepcopy(MATRIX)
+        early["results"][4]["resumed_from"] = 0  # silently started over
+        assert any("resumed_from" in e for e in _errors(early, MATRIX))
+
+    def test_loss_and_parity_drift_are_advisory(self):
+        drift = copy.deepcopy(MATRIX)
+        drift["results"][0]["final_loss"] *= 1.5
+        drift["results"][2]["parity_diff"] *= 3
+        errs, advisories = check_bench.compare_artifacts(drift, MATRIX, "t")
+        assert errs == []
+        assert any("final_loss" in a for a in advisories)
+        assert any("parity_diff" in a for a in advisories)
+
+    def test_missing_arm_is_caught(self):
+        bad = copy.deepcopy(MATRIX)
+        del bad["results"][3]
+        assert any("missing" in e for e in _errors(bad, MATRIX))
+
+
 class TestMain:
     @pytest.fixture()
     def dirs(self, tmp_path):
@@ -271,6 +344,7 @@ class TestMain:
             (d / "BENCH_train.json").write_text(json.dumps(TRAIN))
             (d / "BENCH_inject.json").write_text(json.dumps(INJECT))
             (d / "BENCH_serve.json").write_text(json.dumps(SERVE))
+            (d / "BENCH_matrix.json").write_text(json.dumps(MATRIX))
         return fresh, base
 
     def test_main_clean(self, dirs):
@@ -299,5 +373,5 @@ class TestMain:
             art = json.loads(p.read_text())
             assert art["schema"].startswith(
                 ("BENCH_kernel/", "BENCH_dse/", "BENCH_train/",
-                 "BENCH_inject/", "BENCH_serve/"))
+                 "BENCH_inject/", "BENCH_serve/", "BENCH_matrix/"))
             assert art["results"], f"{name} baseline has no rows"
