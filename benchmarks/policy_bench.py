@@ -1,0 +1,228 @@
+"""Model-level numerics-policy search benchmark (BENCH_policy.json).
+
+Two halves, one artifact:
+
+  * uniform_parity — the API-redesign safety net: for every registered
+    mode, ``UniformPolicy(nm)`` must trace the SAME computation as the
+    legacy bare ``AMRNumerics`` — training logits bitwise equal AND served
+    token/logit streams identical.  Gated exactly by
+    ``scripts/check_bench.py`` (any flip means the policy indirection
+    changed numerics, which it never may).
+  * model-level search — the payoff: run the real pipeline
+    (``pareto_sweep`` -> ``frontier_choices`` -> short training ->
+    ``measure_sensitivity`` -> ``search_model_policy``) on a reduced
+    config and record the searched per-layer policy against every uniform
+    point at the same budget.  The ``searched`` row's
+    ``dominates_best_uniform`` flag is gated True: the heterogeneous
+    assignment must beat the best feasible uniform policy on fidelity at
+    no more energy.  Frontier tiers and uniform energies are
+    integer/seeded-MC derived and gated exactly; fidelities/losses ride on
+    float matmuls and stay advisory.
+
+  PYTHONPATH=src python -m benchmarks.policy_bench --quick \
+      --out BENCH_policy.json
+
+JSON schema (``BENCH_policy/v1``)::
+
+  {"schema": "BENCH_policy/v1", "quick": bool, "samples": int,
+   "results": [
+     {"kind": "uniform_parity", "mode": str, "bit_exact": bool,
+      "tokens_match": bool, "max_abs_diff": float},
+     {"kind": "frontier", "label": str, "energy_per_mac": float,
+      "err": float},
+     {"kind": "uniform", "label": str, "energy": float, "feasible": bool,
+      "fidelity": float, "loss": float},
+     {"kind": "searched", "label": "searched", "policy": str,
+      "energy": float, "fidelity": float, "moves": int,
+      "dominates_best_uniform": bool}],
+   "wall_clock_s": float}
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+SAMPLES = 4000
+BORDERS = (4, 5, 6, 7, 8, 9, 10)
+
+
+def _parity_modes():
+    from repro.numerics import default_policy, mode_names
+
+    return [default_policy(m, border=2, rank=2 if m == "amr_lowrank" else 0)
+            for m in mode_names()]
+
+
+def _tiny_cfg(numerics):
+    from repro.configs.base import ModelConfig
+
+    return ModelConfig(
+        name="policy-bench", family="dense", vocab=61, d_model=32, n_layers=2,
+        n_heads=4, n_kv_heads=2, head_dim=8, d_ff=64, numerics=numerics)
+
+
+def _uniform_parity(nm) -> dict:
+    """Bare AMRNumerics vs UniformPolicy(nm): train logits + served streams."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.models import init_params
+    from repro.numerics import UniformPolicy
+    from repro.serve import Request, ServeEngine
+    from repro.train.steps import loss_fn
+
+    prompts = [(5, 9, 2, 7), (3, 11, 4, 1, 8, 6), (13, 2)]
+    max_diff = 0.0
+    tokens_match = True
+    outs = []
+    for numerics in (nm, UniformPolicy(nm)):
+        cfg = _tiny_cfg(numerics)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 8)), jnp.int32)
+        _, (_, logits) = loss_fn(cfg, params, toks[:, :-1], toks[:, 1:],
+                                 step=jnp.zeros((), jnp.int32),
+                                 with_logits=True)
+        eng = ServeEngine(cfg, params, n_slots=2, capacity=16,
+                          record_logits=True)
+        for p in prompts:
+            eng.submit(Request(prompt=p, max_new_tokens=3))
+        outs.append((np.asarray(logits, np.float32), eng.run()))
+    (lg_a, done_a), (lg_b, done_b) = outs
+    max_diff = float(np.max(np.abs(lg_a - lg_b)))
+    for a, b in zip(done_a, done_b):
+        tokens_match &= a.tokens == b.tokens
+        for la, lb in zip(a.logits, b.logits):
+            max_diff = max(max_diff, float(np.max(np.abs(
+                np.asarray(la) - np.asarray(lb)))))
+    return {"kind": "uniform_parity", "mode": nm.mode,
+            "bit_exact": max_diff == 0.0, "tokens_match": bool(tokens_match),
+            "max_abs_diff": max_diff}
+
+
+def _search_arm(quick: bool, samples: int) -> list[dict]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.registry import get_reduced_config
+    from repro.core.dse import pareto
+    from repro.core.dse.model_policy import (frontier_choices,
+                                             measure_sensitivity,
+                                             policy_energy,
+                                             search_model_policy,
+                                             site_mac_counts)
+    from repro.data import SyntheticLM
+    from repro.launch.cli import policy_label
+    from repro.train.steps import make_train_state, make_train_step
+
+    points = pareto.pareto_sweep(2, BORDERS, k=1, n_samples=samples,
+                                 beam_width=8, branch_cap=3, max_nodes=2000)
+    choices = frontier_choices(points)
+    results = [{"kind": "frontier", "label": c.label,
+                "energy_per_mac": c.energy_per_mac, "err": c.err}
+               for c in choices]
+
+    cfg = dataclasses.replace(get_reduced_config("gemma-2b"), n_layers=4)
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=16, batch=4, seed=0)
+    state = make_train_state(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, peak_lr=3e-3, warmup=5,
+                                   total_steps=20), donate_argnums=(0,))
+    for i in range(20):
+        state, _ = step(state, {k: jnp.asarray(v)
+                                for k, v in data.batch_at(i).items()})
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+    sens = measure_sensitivity(cfg, state.params, batch)
+
+    # pin the budget at the mid frontier tier's uniform energy: the search
+    # starts AT the best uniform point and must leave it strictly behind
+    unit_macs = [m for sites in site_mac_counts(cfg) for _, m in sites]
+    mid = len(choices) // 2
+    budget = policy_energy(unit_macs, [mid] * len(unit_macs), choices)
+    result = search_model_policy(
+        cfg, state.params, batch, choices, budget=budget, sensitivity=sens,
+        max_moves=2 if quick else 8, beam=3 if quick else 4)
+
+    for u in result.uniform.values():
+        results.append({"kind": "uniform", "label": u["label"],
+                        "energy": u["energy"], "feasible": u["feasible"],
+                        "fidelity": u["fidelity"], "loss": u["loss"]})
+    best = result.best_uniform
+    dominates = (result.energy <= best["energy"]
+                 and result.fidelity < best["fidelity"])
+    results.append({"kind": "searched", "label": "searched",
+                    "policy": policy_label(result.policy),
+                    "energy": result.energy, "fidelity": result.fidelity,
+                    "moves": len(result.history),
+                    "dominates_best_uniform": dominates})
+    return results
+
+
+def run(quick: bool = False, out: str | None = None) -> list[str]:
+    t0 = time.time()
+    samples = SAMPLES if quick else 4 * SAMPLES
+    rows: list[str] = []
+    results: list[dict] = []
+
+    for nm in _parity_modes():
+        r = _uniform_parity(nm)
+        results.append(r)
+        rows.append(f"policy_parity_{r['mode']},0,bit_exact={r['bit_exact']};"
+                    f"tokens_match={r['tokens_match']};"
+                    f"max_abs_diff={r['max_abs_diff']:.4g}")
+
+    t_arm = time.time()
+    search_rows = _search_arm(quick, samples)
+    results.extend(search_rows)
+    for r in search_rows:
+        if r["kind"] == "uniform":
+            rows.append(f"policy_uniform_{r['label']},0,"
+                        f"energy={r['energy']:.4g};feasible={r['feasible']};"
+                        f"fidelity={r['fidelity']:.4g}")
+        elif r["kind"] == "searched":
+            rows.append(f"policy_searched,0,{r['policy']};"
+                        f"energy={r['energy']:.4g};"
+                        f"fidelity={r['fidelity']:.4g};"
+                        f"dominates={r['dominates_best_uniform']};"
+                        f"wall={time.time() - t_arm:.1f}s")
+
+    artifact = {
+        "schema": "BENCH_policy/v1",
+        "quick": quick,
+        "samples": samples,
+        "results": results,
+        "wall_clock_s": round(time.time() - t0, 2),
+    }
+    out = out or os.environ.get("REPRO_BENCH_POLICY_OUT", "BENCH_policy.json")
+    with open(out, "w") as f:
+        json.dump(artifact, f, indent=1)
+    rows.append(f"policy_bench_artifact,0,{out}:{len(results)}_results")
+
+    # Hard gates — a broken invariant fails the bench, not just the diff.
+    broken = [r["mode"] for r in results if r["kind"] == "uniform_parity"
+              and not (r["bit_exact"] and r["tokens_match"])]
+    if broken:
+        raise RuntimeError(
+            f"UniformPolicy is not bit-identical to bare AMRNumerics: {broken}")
+    searched = [r for r in results if r["kind"] == "searched"]
+    if not all(r["dominates_best_uniform"] for r in searched):
+        raise RuntimeError(
+            "searched per-layer policy failed to dominate the best uniform")
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None,
+                    help="artifact path (BENCH_policy.json)")
+    args = ap.parse_args(argv)
+    for row in run(quick=args.quick, out=args.out):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

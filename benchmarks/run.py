@@ -18,8 +18,8 @@ import traceback
 
 from . import (dryrun_summary, dse_bench, fig4_comparison, fig5_fa_usage,
                fig6_error_dist, inject_bench, kernel_bench, lowrank_fidelity,
-               matrix_bench, serve_bench, table1_accuracy, table2_energy,
-               train_numerics_bench)
+               matrix_bench, policy_bench, serve_bench, table1_accuracy,
+               table2_energy, train_numerics_bench)
 
 MODULES = {
     "table1": table1_accuracy,
@@ -34,6 +34,7 @@ MODULES = {
     "inject": inject_bench,
     "serve": serve_bench,
     "matrix": matrix_bench,
+    "policy": policy_bench,
     "dryrun": dryrun_summary,
 }
 

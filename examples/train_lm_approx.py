@@ -100,6 +100,10 @@ def main() -> None:
         except ValueError as e:
             ap.error(str(e))
         arms.append((policy_label(nm), nm))
+    if getattr(args, "policy_file", None):
+        # a saved (possibly per-layer) policy artifact trains as one more arm
+        pol = numerics_from_args(args)
+        arms.append((policy_label(pol), pol))
     if args.dse_candidate:
         # a raw searched assignment, trained with NO materialized LUT
         from repro.core.dse import materialize, search_assignments

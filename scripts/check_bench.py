@@ -32,7 +32,13 @@ produced ``BENCH_kernel.json`` / ``BENCH_dse.json`` / ``BENCH_train.json``
     fields (``bit_exact`` / ``tokens_match`` / ``max_abs_diff`` — slot-
     batched decode must equal solo decode bitwise) or of ``complete`` /
     ``requests`` / ``tokens`` on the throughput rows; serve latency and
-    tokens/s are advisory.
+    tokens/s are advisory,
+  * for the policy artifact (model-level numerics-policy search): any flip
+    of a ``uniform_parity`` row (``UniformPolicy`` must trace bit-for-bit
+    what the bare ``AMRNumerics`` traces), any drift of the frontier tiers
+    or uniform energies (literal-count + seeded integer-replay derived),
+    or the ``searched`` row's ``dominates_best_uniform`` flag dropping —
+    per-policy fidelities/losses ride on float matmuls and are advisory.
 
 Timings (``us_per_call``, ``s_per_step``, ``wall_clock_s``), energy-model
 outputs (``energy_pj``), search-effort counters (``nodes``) and train LOSS
@@ -56,7 +62,7 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parent.parent
 DEFAULT_ARTIFACTS = ("BENCH_kernel.json", "BENCH_dse.json", "BENCH_train.json",
                      "BENCH_inject.json", "BENCH_serve.json",
-                     "BENCH_matrix.json")
+                     "BENCH_matrix.json", "BENCH_policy.json")
 FLOAT_RTOL = 1e-6  # float-path (non-bit-exact) kernel error rows only
 
 
@@ -76,6 +82,8 @@ def _row_key(schema: str, row: dict) -> tuple:
     if schema.startswith("BENCH_matrix/"):
         return (row["kind"], row.get("arch"), row.get("mode"),
                 row.get("schedule"))
+    if schema.startswith("BENCH_policy/"):
+        return (row["kind"], row.get("mode") or row.get("label"))
     raise ValueError(f"unknown artifact schema {schema!r}")
 
 
@@ -118,6 +126,22 @@ def _gated_fields(schema: str, row: dict) -> list[tuple[str, bool]]:
             return [("bit_exact", True), ("tokens_match", True),
                     ("max_abs_diff", True)]
         return [("complete", True), ("requests", True), ("tokens", True)]
+    if schema.startswith("BENCH_policy/"):
+        kind = row.get("kind")
+        if kind == "uniform_parity":
+            # the policy indirection may NEVER change numerics: UniformPolicy
+            # must trace bit-for-bit what the bare AMRNumerics traces
+            return [("bit_exact", True), ("tokens_match", True),
+                    ("max_abs_diff", True)]
+        if kind == "frontier":
+            # literal-count energies + seeded integer-replay MC: deterministic
+            return [("energy_per_mac", True), ("err", True)]
+        if kind == "uniform":
+            return [("energy", True), ("feasible", True)]
+        # searched: the per-layer assignment may differ across platforms
+        # (fidelity evals ride on float matmuls) but it must always beat the
+        # best feasible uniform point on fidelity at no more energy
+        return [("dominates_best_uniform", True)]
     return [("expected_error", True), ("mred", True), ("mared", True),
             ("nmed", True), ("replay_match", True), ("frontier", True),
             ("complete", True)]
@@ -135,6 +159,8 @@ def _advisory_fields(schema: str) -> list[str]:
                 "steady_tokens_per_s"]
     if schema.startswith("BENCH_matrix/"):
         return ["first_loss", "final_loss", "parity_diff"]
+    if schema.startswith("BENCH_policy/"):
+        return ["fidelity", "loss", "moves"]
     return ["energy_pj", "nodes"]
 
 

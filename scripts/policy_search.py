@@ -1,0 +1,175 @@
+"""Model-level numerics policy search — per-layer (site, border) assignment.
+
+Reworks the hillclimb "D" arm from *one global border for the whole model*
+into a heterogeneous per-(layer, site) assignment searched end to end
+(docs/dse.md#model-level-search):
+
+  1. multiplier-level Pareto sweep (``core.dse.pareto_sweep``) measures the
+     border family and ``frontier_choices`` turns the frontier into
+     assignable design points with registered injection schedules;
+  2. a short real training run produces non-degenerate activations;
+  3. ``measure_sensitivity`` scores every (site, layer) coordinate with the
+     exact-error audit in ONE instrumented forward/backward;
+  4. ``search_model_policy`` hill-climbs assignments under a per-token
+     energy budget and must strictly dominate the best feasible uniform;
+  5. the winning policy is saved as a JSON artifact every launcher loads
+     via ``--policy-file`` (docs/numerics.md#policy-files).
+
+  PYTHONPATH=src python scripts/policy_search.py --arch gemma-2b \
+      --n-layers 4 --train-steps 20 --budget-tier 2 \
+      --out experiments/policy_gemma.json
+
+``--variance-scored`` additionally routes the multiplier search itself
+through the measured-variance score hook (``pareto.measured_score_hook``)
+instead of the analytic literal count.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--n-layers", type=int, default=0,
+                    help="override the reduced config's layer count (0 = keep)")
+    ap.add_argument("--borders", default="4,5,6,7,8,9,10",
+                    help="comma list of candidate borders for the 2-digit sweep")
+    ap.add_argument("--samples", type=int, default=4000,
+                    help="Monte-Carlo samples per sweep candidate")
+    ap.add_argument("--variance-scored", action="store_true",
+                    help="rank multiplier candidates by measured std_ed "
+                         "instead of the analytic literal proxy")
+    ap.add_argument("--train-steps", type=int, default=20,
+                    help="short training run before sensitivity scoring")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--budget-tier", type=int, default=-1,
+                    help="pin the energy budget at this frontier tier's "
+                         "uniform energy (index into the energy-sorted "
+                         "choices; -1 = use --budget-frac)")
+    ap.add_argument("--budget-frac", type=float, default=0.7,
+                    help="budget as a fraction of the all-exact energy "
+                         "(only when --budget-tier is -1)")
+    ap.add_argument("--max-moves", type=int, default=8)
+    ap.add_argument("--beam", type=int, default=3)
+    ap.add_argument("--out", default="experiments/policy_search.json")
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> None:
+    args = parse_args(argv)
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.registry import get_reduced_config
+    from repro.core.dse import pareto
+    from repro.core.dse.model_policy import (frontier_choices,
+                                             measure_sensitivity,
+                                             policy_energy,
+                                             search_model_policy,
+                                             site_mac_counts)
+    from repro.data import SyntheticLM
+    from repro.launch.cli import policy_label
+    from repro.numerics import save_policy
+    from repro.train.steps import make_train_state, make_train_step
+
+    borders = tuple(int(b) for b in args.borders.split(",") if b.strip())
+
+    # 1. multiplier-level sweep -> assignable frontier tiers
+    t0 = time.time()
+    sweep_kwargs = dict(k=1, n_samples=args.samples, beam_width=8,
+                        branch_cap=3, max_nodes=2000)
+    if args.variance_scored:
+        sweep_kwargs["score_hook"] = pareto.measured_score_hook(
+            n_samples=args.samples)
+    points = pareto.pareto_sweep(2, borders, **sweep_kwargs)
+    choices = frontier_choices(points)
+    print(f"[policy-search] sweep: {len(points)} candidates -> "
+          f"{len(choices)} frontier tiers in {time.time() - t0:.0f}s")
+    for c in choices:
+        print(f"  {c.label:14s} energy/mac {c.energy_per_mac:8.4f} "
+              f"err {c.err:.4g}")
+
+    # 2. short real training run (non-degenerate activations for scoring)
+    cfg = get_reduced_config(args.arch)
+    if args.n_layers:
+        cfg = dataclasses.replace(cfg, n_layers=args.n_layers)
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq, batch=args.batch,
+                       seed=args.seed)
+    state = make_train_state(cfg, jax.random.PRNGKey(args.seed))
+    step = jax.jit(make_train_step(cfg, peak_lr=3e-3, warmup=5,
+                                   total_steps=max(args.train_steps, 1)),
+                   donate_argnums=(0,))
+    t0 = time.time()
+    for i in range(args.train_steps):
+        b = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+        state, metrics = step(state, b)
+    if args.train_steps:
+        print(f"[policy-search] trained {args.train_steps} steps "
+              f"(loss {float(metrics['loss']):.4f}) in {time.time() - t0:.0f}s")
+    params = state.params
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+
+    # 3. per-(site, layer) audit sensitivity, one forward/backward
+    t0 = time.time()
+    sens = measure_sensitivity(cfg, params, batch)
+    print(f"[policy-search] sensitivity: {len(sens.coords)} coords, "
+          f"probe loss {sens.loss:.4f} in {time.time() - t0:.0f}s")
+
+    # 4. budget + assignment hill-climb
+    unit_macs = [m for sites in site_mac_counts(cfg) for _, m in sites]
+    budget = None
+    if args.budget_tier >= 0:
+        budget = policy_energy(unit_macs, [args.budget_tier] * len(unit_macs),
+                               choices)
+        print(f"[policy-search] budget pinned at uniform "
+              f"{choices[args.budget_tier].label}: {budget:.4g}")
+    t0 = time.time()
+    result = search_model_policy(
+        cfg, params, batch, choices, budget=budget,
+        budget_frac=args.budget_frac, sensitivity=sens,
+        max_moves=args.max_moves, beam=args.beam)
+    best_u = result.best_uniform
+    dominates = (result.energy <= best_u["energy"]
+                 and result.fidelity < best_u["fidelity"])
+    print(f"[policy-search] search: {len(result.history)} accepted moves "
+          f"in {time.time() - t0:.0f}s")
+    for mv in result.history:
+        print(f"  + {mv['move']:32s} energy {mv['energy']:.4g} "
+              f"fidelity {mv['fidelity']:.4g}")
+    print(f"[policy-search] searched {policy_label(result.policy)}: "
+          f"energy {result.energy:.4g} fidelity {result.fidelity:.4g}")
+    print(f"[policy-search] best uniform {best_u['label']}: "
+          f"energy {best_u['energy']:.4g} fidelity {best_u['fidelity']:.4g}")
+    print(f"[policy-search] strictly dominates best uniform: {dominates}")
+
+    # 5. the saved artifact is what --policy-file loads
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    save_policy(result.policy, out, meta={
+        "arch": args.arch, "n_layers": cfg.n_layers,
+        "budget": result.budget, "energy": result.energy,
+        "fidelity": result.fidelity, "loss": result.loss,
+        "exact_energy": result.exact_energy,
+        "dominates_best_uniform": dominates,
+        "best_uniform": best_u,
+        "uniform": result.uniform,
+        "history": result.history,
+        "choices": [c.label for c in result.choices],
+    })
+    print(f"[policy-search] wrote {out}")
+    print(json.dumps({"energy": result.energy, "fidelity": result.fidelity,
+                      "dominates": dominates}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

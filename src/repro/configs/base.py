@@ -11,7 +11,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Literal
 
-from repro.numerics import AMRNumerics
+from repro.numerics import AMRNumerics, NumericsPolicy
 
 Family = Literal["dense", "moe", "ssm", "hybrid", "audio", "vlm"]
 AttnKind = Literal["full", "swa", "none"]
@@ -96,8 +96,12 @@ class ModelConfig:
     norm_eps: float = 1e-6
     dtype: str = "bfloat16"
 
-    # the paper's technique: numerics policy for matmuls
-    numerics: AMRNumerics = AMRNumerics("exact")
+    # the paper's technique: numerics policy for matmuls — one AMRNumerics
+    # design point everywhere (the legacy shorthand), or a site-resolved
+    # NumericsPolicy (UniformPolicy / PerLayerPolicy, numerics/policy.py)
+    # assigning per-layer / per-call-site design points.  Both are hashable
+    # statics; launch/cli.py loads PerLayerPolicy artifacts (--policy-file).
+    numerics: AMRNumerics | NumericsPolicy = AMRNumerics("exact")
 
     # which layers the mixer is (derived when pattern is None)
     default_mixer: str = "full"

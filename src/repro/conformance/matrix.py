@@ -86,22 +86,17 @@ PARITY_TOL: dict[str, float | None] = {
 def policy_for(mode: str, *, border: int = BORDER,
                schedule_ref: str | None = None,
                noise_seed: int = 0) -> AMRNumerics:
-    """The conformance policy for a registry mode.
+    """The conformance policy for a registry mode — registry-driven.
 
-    amr_kernel pins rank=0 — the full-LUT Pallas variant, bit-exact AMR
-    semantics (the low-rank variant is covered by amr_lowrank's arm).
+    Each ``ModeSpec`` declares its default params (amr_kernel pins rank=0,
+    the full-LUT Pallas variant with bit-exact AMR semantics; amr_lowrank
+    pins rank=4) and which overrides it accepts, so adding a mode needs no
+    edit here: ``default_policy`` drops overrides the mode doesn't take.
     """
-    if mode == "amr_kernel":
-        return AMRNumerics(mode=mode, border=border, rank=0)
-    if mode == "amr_lowrank":
-        return AMRNumerics(mode=mode, border=border, rank=4)
-    if mode == "amr_inject":
-        return AMRNumerics(mode=mode, border=border, schedule_ref=schedule_ref)
-    if mode == "amr_noise":
-        return AMRNumerics(mode=mode, border=border, noise_seed=noise_seed)
-    if mode == "amr_lut":
-        return AMRNumerics(mode=mode, border=border)
-    return AMRNumerics(mode)
+    from repro.numerics import default_policy
+
+    return default_policy(mode, border=border, schedule_ref=schedule_ref,
+                          noise_seed=noise_seed)
 
 
 def tiny_config(arch: str, mode: str, **policy_kw: Any) -> ModelConfig:

@@ -17,6 +17,10 @@ Layered package:
     dispatch per chunk (``measure_candidates``), (error, energy) frontier
     (``pareto_front`` / ``pareto_sweep``) and border selection under an
     error budget (``select_border``).
+  * ``model_policy`` — MODEL-level search over the frontier: per-layer
+    (mode, border, schedule) assignment under an energy budget, driven by
+    a measured sensitivity pass (lazy attribute: it pulls in jax + the
+    model stack, while the rest of the package stays numpy-only).
 
 ``from repro.core.dse import assign_column`` keeps working — the historical
 module is now this package.
@@ -27,8 +31,15 @@ from .export import lut_from_schedule, materialize
 from .multiplier import (ColumnChoice, MultiplierAssignment, ShapeEvent,
                          compile_shape, greedy_assignment, initial_columns,
                          search_assignments)
-from .pareto import (CandidatePoint, measure_candidates, pareto_front,
-                     pareto_sweep, select_border)
+from .pareto import (CandidatePoint, measure_candidates, measured_score_hook,
+                     pareto_front, pareto_sweep, select_border)
+
+_MODEL_POLICY = (
+    "PolicyChoice", "SensitivityReport", "PolicySearchResult",
+    "site_mac_counts", "layer_mac_counts", "frontier_choices",
+    "measure_sensitivity",
+    "assignment_policy", "policy_energy", "search_model_policy",
+)
 
 __all__ = [
     "DSEResult", "assign_column", "assign_column_topk", "brute_force_column",
@@ -36,6 +47,17 @@ __all__ = [
     "ShapeEvent", "ColumnChoice", "MultiplierAssignment", "compile_shape",
     "initial_columns", "greedy_assignment", "search_assignments",
     "materialize", "lut_from_schedule",
-    "CandidatePoint", "measure_candidates", "pareto_front", "pareto_sweep",
-    "select_border",
+    "CandidatePoint", "measure_candidates", "measured_score_hook",
+    "pareto_front", "pareto_sweep", "select_border",
+    *_MODEL_POLICY,
 ]
+
+
+def __getattr__(name: str):
+    # model_policy imports jax + the model stack; keep the numpy-only core
+    # importable without it (PEP 562 lazy attribute)
+    if name in _MODEL_POLICY:
+        from . import model_policy
+
+        return getattr(model_policy, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,490 @@
+"""Model-level numerics DSE: per-(layer, site) assignment under a budget.
+
+The per-multiplier Pareto sweep (``pareto.pareto_sweep``) ends with a
+frontier of (measured error, modeled energy) design points; this module
+lifts that frontier to a MODEL decision: which design point runs in which
+matmul of which decoder layer.  Two measured phases
+(docs/dse.md#model-level-search):
+
+  * Phase 1 — sensitivity (:func:`measure_sensitivity`): ONE instrumented
+    forward/backward pass of the real loss on a real batch under a probe
+    ``amr_inject`` policy, with ``AuditTrace(compare="exact")`` recording
+    the exact |approx - exact| error mass per ``(site, layer)`` coordinate.
+    Coordinates whose activations push more error through the approximate
+    multiplier are the ones to keep accurate.
+  * Phase 2 — assignment search (:func:`search_model_policy`): hill-climb
+    over per-(layer, site) frontier choices under a total modeled-energy
+    budget (per-site MAC counts x per-multiply energy from ``core.energy``).
+    Starts from the best uniform policy that fits the budget, then applies
+    sensitivity-ordered upgrade and swap moves, accepting only strict
+    fidelity improvements — so the searched heterogeneous policy never does
+    worse than the best uniform point at the same budget.
+
+Site granularity is what makes the search pay: measured per-site fidelity
+sensitivity spans >10x at equal MACs (attention q/k errors are attenuated
+through the softmax; ``mlp.w_down`` errors land on the residual stream
+directly), while adjacent frontier tiers differ ~2-3x in standalone error.
+A swap (upgrade a hot site, downgrade a cold one) beats the uniform point
+exactly when the sensitivity ratio exceeds the squared tier-error ratio —
+whole layers rarely clear that bar, individual sites do.
+
+Fidelity is the float32 logit MSE against the exact-numerics reference on
+the probe batch (argmax-token agreement is too coarse to rank candidate
+assignments at smoke scale).  The result's ``policy`` is a
+``numerics.PerLayerPolicy`` — a committable JSON artifact
+(``numerics.save_policy``) consumed by ``launch/cli.py --policy-file``.
+
+Energy here is the *multiplier* energy model (switched-literal proxy or a
+calibrated ``CostModel.energy``), scaled by per-token MAC counts; it ranks
+hardware design points, it is not a chip power estimate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .. import reduction
+from .pareto import CandidatePoint, pareto_front
+
+__all__ = [
+    "PolicyChoice", "SensitivityReport", "PolicySearchResult",
+    "site_mac_counts", "layer_mac_counts", "frontier_choices",
+    "measure_sensitivity", "assignment_policy", "policy_energy",
+    "search_model_policy",
+]
+
+
+# --------------------------------------------------------------- MAC model
+def _attn_sites(cfg) -> list[tuple[str, int]]:
+    d, nh, nkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return [("attn.wq", d * nh * hd), ("attn.wk", d * nkv * hd),
+            ("attn.wv", d * nkv * hd), ("attn.wo", nh * hd * d)]
+
+
+def _xattn_sites(cfg) -> list[tuple[str, int]]:
+    # cross-attention q/k/v/o all project full heads (k/v read the encoder
+    # stream; counted per token like the self-attn projections)
+    d, nh, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    return [("xattn.wq", d * nh * hd), ("xattn.wk", d * nh * hd),
+            ("xattn.wv", d * nh * hd), ("xattn.wo", nh * hd * d)]
+
+
+def _mlp_sites(cfg, *, shared: bool = False) -> list[tuple[str, int]]:
+    if cfg.moe is not None and not shared:
+        # per token: the top_k routed experts each run the full expert mlp
+        m = cfg.moe.top_k * cfg.d_model * cfg.moe.d_ff_expert
+        return [("moe.w_gate", m), ("moe.w_up", m), ("moe.w_down", m)]
+    m = cfg.d_model * cfg.d_ff
+    return [("mlp.w_gate", m), ("mlp.w_up", m), ("mlp.w_down", m)]
+
+
+def _ssm_sites(cfg) -> list[tuple[str, int]]:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner = s.expand * d
+    n_heads = d_inner // s.head_dim
+    return [("ssm.wz", d * d_inner), ("ssm.wx", d * d_inner),
+            ("ssm.wb", d * s.n_groups * s.d_state),
+            ("ssm.wc", d * s.n_groups * s.d_state),
+            ("ssm.wdt", d * n_heads), ("ssm.out_proj", d_inner * d)]
+
+
+def site_mac_counts(cfg) -> tuple[tuple[tuple[str, int], ...], ...]:
+    """Per-token MACs through each policy-covered matmul, per flat decoder
+    layer: ``out[layer] = ((site, macs), ...)``.
+
+    Mirrors the dense call sites the numerics policy reaches (attn.*,
+    xattn.*, mlp.*, moe.*, ssm.*); attention score/value products and the
+    exact unembed are excluded."""
+    out = []
+    for kind in cfg.layer_kinds():
+        if kind == "ssm":
+            sites = _ssm_sites(cfg)
+        elif kind == "shared_attn":
+            sites = _attn_sites(cfg) + _mlp_sites(cfg, shared=True)
+        elif kind == "cross":
+            sites = _attn_sites(cfg) + _xattn_sites(cfg) + _mlp_sites(cfg)
+        else:  # full / swa
+            sites = _attn_sites(cfg) + _mlp_sites(cfg)
+        out.append(tuple(sites))
+    return tuple(out)
+
+
+def layer_mac_counts(cfg) -> tuple[int, ...]:
+    """Per-token MACs per flat decoder layer (site counts summed)."""
+    return tuple(sum(m for _, m in sites) for sites in site_mac_counts(cfg))
+
+
+# ----------------------------------------------------------------- choices
+@dataclasses.dataclass(frozen=True)
+class PolicyChoice:
+    """One assignable design point: a numerics policy + its per-MAC energy
+    and measured standalone error (frontier coordinates)."""
+
+    label: str
+    numerics: Any                 # AMRNumerics
+    energy_per_mac: float
+    err: float                    # |measured err_key| of the schedule (0 = exact)
+
+
+def frontier_choices(
+    points: Sequence[CandidatePoint],
+    *,
+    err_key: str = "mared",
+    include_exact: bool = True,
+    cost_fn: Callable | None = None,
+    prefix: str = "dse",
+) -> list[PolicyChoice]:
+    """Sweep ``CandidatePoint``s -> assignable per-site design choices.
+
+    The (|err_key|, energy) frontier is recomputed here over ALL explored
+    points rather than reusing the sweep's ``frontier`` flags: the sweep may
+    have ranked on a different metric (default ``mred``, whose signed
+    cancellation can drop designs that are non-dominated on ``mared``), and
+    the search wants the DENSEST monotone error ladder available — swap
+    moves only pay when adjacent tiers are close.
+
+    Each frontier schedule is registered as a NAMED injection handle
+    (``"<prefix>:b<border>.<rank>"``) so the resulting policy's
+    ``schedule_ref`` strings survive JSON round-trips: re-running
+    ``frontier_choices`` on the same sweep in a fresh process re-registers
+    the same handles (the ``on_restore`` idiom, docs/numerics.md#policy-files).
+    Returned sorted by ascending energy (most approximate first), with the
+    exact reference design appended when ``include_exact``.
+    """
+    from repro import numerics as num
+    from repro.numerics import injection
+    from .. import energy as energy_mod
+
+    cost_fn = cost_fn or energy_mod.literal_energy_proxy
+    points = list(points)
+    if not points:
+        raise ValueError("empty sweep result")
+    n_digits = points[0].n_digits
+    if n_digits != 2:
+        raise ValueError(
+            f"model policies run on the int8 (2-digit) matmul path; the "
+            f"sweep explored n_digits={n_digits}")
+    flags = pareto_front([abs(float(p.measured[err_key])) for p in points],
+                         [p.energy for p in points])
+    front = sorted((p for p, f in zip(points, flags) if f),
+                   key=lambda p: p.energy)
+    choices = []
+    for p in front:
+        handle = injection.register_schedule(
+            p.schedule, name=f"{prefix}:b{p.border}.{p.candidate}")
+        nm = num.AMRNumerics("amr_inject", border=p.border, schedule_ref=handle)
+        choices.append(PolicyChoice(
+            handle, nm, float(p.energy), abs(float(p.measured[err_key]))))
+    if include_exact:
+        exact_energy = float(cost_fn(reduction.get_schedule(n_digits, None)))
+        choices.append(PolicyChoice(
+            "exact", num.AMRNumerics("exact"), exact_energy, 0.0))
+    return sorted(choices, key=lambda c: (c.energy_per_mac, c.err))
+
+
+# ------------------------------------------------------------- sensitivity
+@dataclasses.dataclass
+class SensitivityReport:
+    """Exact-error mass injected by the probe design, per coordinate."""
+
+    coords: dict[tuple[str, int], float]  # (site, flat layer) -> sum |err|
+    per_layer: tuple[float, ...]          # aggregated over sites
+    loss: float                           # probe-batch loss under the probe
+
+    def mass(self, site: str, layer: int) -> float:
+        return self.coords.get((site, layer), 0.0)
+
+    def ranked_layers(self) -> list[int]:
+        """Flat layer indices, most error-sensitive first."""
+        return sorted(range(len(self.per_layer)),
+                      key=lambda i: -self.per_layer[i])
+
+
+def measure_sensitivity(cfg, params, batch, *, probe=None,
+                        aux_weight: float = 0.01) -> SensitivityReport:
+    """Phase 1: per-(site, layer) exact-error mass in ONE forward/backward.
+
+    Runs the real ``train.steps.loss_fn`` (value_and_grad, so the measured
+    activations are the training-time ones) under a uniform probe policy
+    with ``AuditTrace(compare="exact")``: every approximate matmul replays
+    its exact counterpart and the audit accumulates ``sum |approx - exact|``
+    per call-site coordinate.  The probe rides ``PerLayerPolicy`` with
+    ``static_unroll=True`` and ``remat="none"`` — audit callbacks are
+    dropped inside grad-of-scan and double-counted under remat, so the
+    probe forces the plain unrolled layer loop.
+    """
+    from repro import numerics as num
+    from repro.train.steps import loss_fn
+
+    probe = probe or num.AMRNumerics("amr_inject", border=8)
+    probe_cfg = dataclasses.replace(
+        cfg,
+        numerics=num.PerLayerPolicy(default=probe, static_unroll=True),
+        remat="none")
+    trace = num.AuditTrace(compare="exact")
+
+    def lf(p):
+        loss, _ = loss_fn(probe_cfg, p, batch["tokens"], batch["targets"],
+                          batch.get("extra"), aux_weight=aux_weight,
+                          step=jnp.zeros((), jnp.int32))
+        return loss
+
+    with num.numerics_scope(audit=trace):
+        loss, _ = jax.value_and_grad(lf)(params)
+        loss.block_until_ready()
+    jax.effects_barrier()
+
+    n_layers = len(cfg.layer_kinds())
+    per_layer = [0.0] * n_layers
+    coords: dict[tuple[str, int], float] = {}
+    for (site, layer), ent in trace.coords.items():
+        mass = float(ent["sum_abs_diff"])
+        coords[(site, layer)] = mass
+        if 0 <= layer < n_layers:
+            per_layer[layer] += mass
+    return SensitivityReport(coords, tuple(per_layer), float(loss))
+
+
+# ------------------------------------------------------------------ search
+def assignment_policy(units: Sequence[tuple[int, str]],
+                      assignment: Sequence[int],
+                      choices: Sequence[PolicyChoice]):
+    """Per-unit choice indices -> a ``PerLayerPolicy`` artifact.
+
+    ``units`` are ``(flat layer, site)`` coordinates.  Coordinates outside
+    the unit list (encoder layers, unembed) resolve the exact default."""
+    from repro import numerics as num
+
+    return num.PerLayerPolicy(
+        default=num.AMRNumerics("exact"),
+        layer_sites=tuple((layer, site, choices[a].numerics)
+                          for (layer, site), a in zip(units, assignment)))
+
+
+def policy_energy(unit_macs: Sequence[int], assignment: Sequence[int],
+                  choices: Sequence[PolicyChoice]) -> float:
+    """Modeled per-token multiplier energy of one assignment."""
+    return float(sum(m * choices[a].energy_per_mac
+                     for m, a in zip(unit_macs, assignment)))
+
+
+@dataclasses.dataclass
+class PolicySearchResult:
+    policy: Any                    # PerLayerPolicy
+    units: list[tuple[int, str]]   # (flat layer, site) coordinates searched
+    assignment: tuple[int, ...]    # per unit, index into choices
+    choices: list[PolicyChoice]
+    energy: float                  # modeled per-token multiplier energy
+    fidelity: float                # float32 logit MSE vs exact reference
+    loss: float                    # probe-batch LM loss under the policy
+    budget: float
+    exact_energy: float            # all-exact assignment energy (scale ref)
+    uniform: dict[str, dict]       # per choice label: energy/fidelity/loss/feasible
+    sensitivity: SensitivityReport
+    history: list[dict]            # accepted moves
+
+    @property
+    def best_uniform(self) -> dict:
+        """The budget-feasible uniform point the search had to beat."""
+        feas = {k: v for k, v in self.uniform.items() if v["feasible"]}
+        return min(feas.values(), key=lambda v: v["fidelity"])
+
+
+def _eval_policy(cfg, params, batch, policy, aux_weight):
+    """(loss, float32 logits) of the probe batch under one policy."""
+    from repro.train.steps import loss_fn
+
+    ecfg = dataclasses.replace(cfg, numerics=policy, remat="none")
+    loss, (_, logits) = loss_fn(
+        ecfg, params, batch["tokens"], batch["targets"], batch.get("extra"),
+        aux_weight=aux_weight, step=jnp.zeros((), jnp.int32),
+        with_logits=True)
+    return float(loss), logits.astype(jnp.float32)
+
+
+def search_model_policy(
+    cfg, params, batch, choices: Sequence[PolicyChoice],
+    *,
+    budget: float | None = None,
+    budget_frac: float = 0.7,
+    sensitivity: SensitivityReport | None = None,
+    probe=None,
+    max_moves: int = 12,
+    beam: int = 4,
+    aux_weight: float = 0.01,
+) -> PolicySearchResult:
+    """Phase 2: hill-climb per-(layer, site) assignments under a budget.
+
+    ``budget`` caps the modeled per-token multiplier energy (default:
+    ``budget_frac`` of the all-exact energy).  Start = the budget-feasible
+    uniform assignment with the best measured fidelity; each round proposes
+    up to ``beam`` sensitivity-ordered moves — *site-class* moves first
+    (upgrade every layer's instance of a hot site, or swap a hot class up
+    while a cold class goes down a tier; often a net energy SAVING), then
+    single-unit swaps for fine-tuning — and accepts the best strict
+    fidelity improvement.  Terminates when no proposal improves or after
+    ``max_moves`` accepted moves.
+
+    Move ordering is CALIBRATED, not just audited: the phase-1 audit mass
+    measures the error a site injects locally, but propagation differs
+    wildly per site (softmax attenuates q/k error; ``mlp.w_down`` lands on
+    the residual stream), so the search first measures each site class's
+    isolated fidelity impact (one forward per class) and ranks by measured
+    fidelity per MAC, distributing within a class by audit mass.  Every
+    candidate evaluation is one forward of the probe batch (a fresh trace
+    per distinct policy — run this on ``reduced()``-scale configs).
+    """
+    choices = sorted(choices, key=lambda c: (c.energy_per_mac, c.err))
+    per_layer_sites = site_mac_counts(cfg)
+    units: list[tuple[int, str]] = []
+    unit_macs: list[int] = []
+    for layer, sites in enumerate(per_layer_sites):
+        for site, m in sites:
+            units.append((layer, site))
+            unit_macs.append(m)
+    n_units = len(units)
+    n_choice = len(choices)
+    exact_energy = policy_energy(unit_macs, [n_choice - 1] * n_units, choices)
+    budget = float(budget) if budget is not None else budget_frac * exact_energy
+
+    if sensitivity is None:
+        sensitivity = measure_sensitivity(cfg, params, batch, probe=probe,
+                                          aux_weight=aux_weight)
+
+    from repro import numerics as num
+    exact_nm = num.AMRNumerics("exact")
+    _, ref_logits = _eval_policy(
+        cfg, params, batch, num.UniformPolicy(exact_nm), aux_weight)
+
+    def eval_policy(policy):
+        loss, logits = _eval_policy(cfg, params, batch, policy, aux_weight)
+        return loss, float(jnp.mean((logits - ref_logits) ** 2))
+
+    def fidelity_of(assignment):
+        return eval_policy(assignment_policy(units, assignment, choices))
+
+    # uniform reference points (the frontier the search must dominate)
+    uniform: dict[str, dict] = {}
+    for ci, c in enumerate(choices):
+        e = policy_energy(unit_macs, [ci] * n_units, choices)
+        loss, fid = fidelity_of([ci] * n_units)
+        uniform[c.label] = {"label": c.label, "energy": e, "loss": loss,
+                            "fidelity": fid, "feasible": e <= budget}
+    feasible = [ci for ci, c in enumerate(choices)
+                if uniform[c.label]["feasible"]]
+    if not feasible:
+        raise ValueError(
+            f"no uniform choice fits budget={budget:.4g} (cheapest uniform "
+            f"needs {min(u['energy'] for u in uniform.values()):.4g}); "
+            f"raise the budget or add cheaper frontier points")
+    start = min(feasible, key=lambda ci: uniform[choices[ci].label]["fidelity"])
+
+    # phase 1b — calibrate: isolated fidelity of each site class at the
+    # start tier (exact everywhere else) measures PROPAGATED impact
+    class_macs: dict[str, int] = {}
+    class_mass: dict[str, float] = {}
+    for (layer, site), m in zip(units, unit_macs):
+        class_macs[site] = class_macs.get(site, 0) + m
+        class_mass[site] = class_mass.get(site, 0.0) + sensitivity.mass(site, layer)
+    probe_tier = min(start, n_choice - 2)  # exact probes nothing
+    class_fid: dict[str, float] = {}
+    for site in class_macs:
+        _, f = eval_policy(num.PerLayerPolicy(
+            default=exact_nm, sites={site: choices[probe_tier].numerics}))
+        class_fid[site] = f
+    class_density = {s: class_fid[s] / max(class_macs[s], 1)
+                     for s in class_macs}
+    classes_hot = sorted(class_macs, key=lambda s: -class_density[s])
+
+    def unit_density(u):
+        layer, site = units[u]
+        share = (sensitivity.mass(site, layer) / class_mass[site]
+                 if class_mass.get(site) else 1.0)
+        return class_fid[site] * share / max(unit_macs[u], 1)
+
+    by_sens = sorted(range(n_units), key=lambda u: -unit_density(u))
+
+    assignment = [start] * n_units
+    cur_energy = uniform[choices[start].label]["energy"]
+    cur_loss = uniform[choices[start].label]["loss"]
+    cur_fid = uniform[choices[start].label]["fidelity"]
+    history: list[dict] = []
+
+    def unit_name(u):
+        layer, site = units[u]
+        return f"L{layer}.{site}"
+
+    def class_shift(base, site, delta):
+        """Shift every unit of one site class a tier (None when any unit
+        cannot move)."""
+        a = list(base)
+        for i, (_, s) in enumerate(units):
+            if s == site:
+                a[i] += delta
+                if not 0 <= a[i] < n_choice:
+                    return None
+        return a
+
+    def propose():
+        seen: set[tuple] = set()
+        props: list[tuple[str, list[int]]] = []
+
+        def add(label, a):
+            if a is not None and tuple(a) not in seen \
+                    and policy_energy(unit_macs, a, choices) <= budget:
+                seen.add(tuple(a))
+                props.append((label, a))
+
+        # class-level moves: biggest measured-fidelity leverage first
+        for hot in classes_hot:
+            if len(props) >= beam:
+                return props
+            up = class_shift(assignment, hot, +1)
+            add(f"class {hot}+", up)
+            if up is not None:
+                for cold in reversed(classes_hot):  # coldest class first
+                    if cold == hot:
+                        continue
+                    add(f"class {hot}+ {cold}-", class_shift(up, cold, -1))
+                    break
+        # unit-level swaps: fine-tuning within the remaining beam
+        for hot in by_sens:
+            if len(props) >= beam:
+                return props
+            if assignment[hot] >= n_choice - 1:
+                continue
+            up = list(assignment)
+            up[hot] += 1
+            add(f"unit {unit_name(hot)}+", up)
+            for cold in reversed(by_sens):
+                if cold == hot or assignment[cold] <= 0:
+                    continue
+                sw = list(up)
+                sw[cold] -= 1
+                add(f"unit {unit_name(hot)}+ {unit_name(cold)}-", sw)
+                break
+        return props
+
+    for _ in range(max_moves):
+        best = None
+        for label, cand in propose():
+            loss, fid = fidelity_of(cand)
+            if fid < cur_fid and (best is None or fid < best[2]):
+                best = (label, cand, fid, loss)
+        if best is None:
+            break
+        label, assignment, cur_fid, cur_loss = best
+        cur_energy = policy_energy(unit_macs, assignment, choices)
+        history.append({"move": label, "energy": cur_energy,
+                        "fidelity": cur_fid, "loss": cur_loss})
+
+    return PolicySearchResult(
+        policy=assignment_policy(units, assignment, choices),
+        units=units, assignment=tuple(assignment), choices=list(choices),
+        energy=cur_energy, fidelity=cur_fid, loss=cur_loss, budget=budget,
+        exact_energy=exact_energy, uniform=uniform,
+        sensitivity=sensitivity, history=history)

@@ -370,6 +370,8 @@ def search_assignments(
     beam_width: int = 64,
     branch_cap: int = 6,
     max_nodes: int = 100_000,
+    score_hook=None,
+    pool: int | None = None,
 ) -> list[MultiplierAssignment]:
     """The ``k`` best whole-multiplier assignments by |expected error|.
 
@@ -378,19 +380,40 @@ def search_assignments(
     DFS exhausts the tree, ``[0]`` is the provable optimum and every result
     carries ``complete=True``.  Results are sorted by (|error|, error) and
     are pairwise-distinct assignments.
+
+    ``score_hook`` re-ranks by a MEASURED criterion: the analytic |expected
+    error| only tracks the error mean, so two assignments with equal means
+    can have very different variance.  When given, the search keeps a wider
+    analytic pool (``pool``, default ``3 * k``), calls
+    ``score_hook(assignments) -> sequence of floats`` (lower is better —
+    e.g. Monte-Carlo ``std_ed`` via :func:`repro.core.dse.pareto.
+    measured_score_hook`), and returns the ``k`` best by (score, |error|).
     """
     events = compile_shape(n_digits, border)
     init_cols = initial_columns(n_digits)
+    keep = k if score_hook is None else max(pool or 3 * k, k)
     if not any(ev.decision for ev in events):
         return [MultiplierAssignment(n_digits, border, (), Fraction(0), 0, True)]
     suffix = _suffix_bounds(events)
-    best, beam_nodes = _beam(events, init_cols, k, beam_width, branch_cap)
+    best, beam_nodes = _beam(events, init_cols, keep, beam_width, branch_cap)
     # The greedy incumbent is free and often optimal — seed it too.
     greedy = greedy_assignment(n_digits, border)
     best.offer(greedy.expected_error, greedy.choices)
     dfs_nodes, complete = _dfs(events, init_cols, suffix, best, max_nodes)
     nodes = beam_nodes + greedy.nodes + dfs_nodes
-    return [
+    results = [
         MultiplierAssignment(n_digits, border, choices, e_abs, nodes, complete)
         for _abs_e, e_abs, choices in best.items
     ]
+    if score_hook is not None:
+        scores = list(score_hook(results))
+        if len(scores) != len(results):
+            raise ValueError(
+                f"score_hook returned {len(scores)} scores for "
+                f"{len(results)} assignments")
+        order = sorted(
+            range(len(results)),
+            key=lambda j: (scores[j], abs(results[j].expected_error),
+                           results[j].expected_error))
+        results = [results[j] for j in order[:k]]
+    return results

@@ -82,6 +82,33 @@ def measure_candidates(
     return [acc.result() for acc in accs]
 
 
+def measured_score_hook(
+    *,
+    key: str = "std_ed",
+    n_samples: int = 20000,
+    seed: int = 0,
+    chunk: int = 16384,
+) -> Callable[[Sequence[MultiplierAssignment]], list[float]]:
+    """A ``search_assignments(score_hook=...)`` factory scoring candidates by
+    a MEASURED Monte-Carlo metric (default ``std_ed``, the error-distance
+    standard deviation) instead of the analytic |expected error| alone.
+
+    The analytic bound tracks only the error MEAN; the engine loop already
+    measures the full distribution, so re-ranking a wider analytic pool by
+    measured variance costs one fused candidate dispatch and picks designs
+    whose error is both small and tight (the ROADMAP's variance-aware
+    scoring carry-over; the per-layer policy search consumes these).
+    """
+
+    def hook(assignments: Sequence[MultiplierAssignment]) -> list[float]:
+        measured = measure_candidates(
+            [materialize(a) for a in assignments],
+            n_samples=n_samples, seed=seed, chunk=chunk)
+        return [abs(float(m[key])) for m in measured]
+
+    return hook
+
+
 def pareto_front(errs: Sequence[float], costs: Sequence[float]) -> list[bool]:
     """Non-dominated flags under joint minimization of (error, cost).
 

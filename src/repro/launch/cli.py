@@ -2,10 +2,14 @@
 
 One place defines how a numerics policy is expressed on a command line
 (``--numerics/--modes --border --rank --noise-seed --inject-impl
---pallas-interpret``) and how parsed args become an ``AMRNumerics``.
-Choices are derived from the mode REGISTRY (``repro.numerics.mode_names``)
-— adding a mode in numerics/ makes it appear in every CLI with no edits
-here, and no launcher string-matches mode names.
+--pallas-interpret``, plus ``--policy-file`` for searched per-layer
+artifacts) and how parsed args become an ``AMRNumerics`` or a
+site-resolved ``NumericsPolicy``.  Choices are derived from the mode
+REGISTRY (``repro.numerics.mode_names``) — adding a mode in numerics/
+makes it appear in every CLI with no edits here, and no launcher
+string-matches mode names.  The ``--numerics`` flags remain the uniform
+shorthand: they build one ``AMRNumerics``, which every model entry point
+still accepts directly.
 """
 from __future__ import annotations
 
@@ -13,7 +17,7 @@ import argparse
 import os
 from typing import Callable
 
-from repro.numerics import AMRNumerics, get_mode, mode_names
+from repro.numerics import AMRNumerics, get_mode, load_policy, mode_names
 
 
 def add_numerics_args(
@@ -50,6 +54,10 @@ def add_numerics_args(
                    help="injection replay implementation (auto = backend detect)")
     g.add_argument("--pallas-interpret", default=None, choices=["auto", "0", "1"],
                    help="set REPRO_PALLAS_INTERPRET before any kernel traces")
+    g.add_argument("--policy-file", default=None, metavar="JSON",
+                   help="load a (possibly per-layer) numerics policy artifact "
+                        "(numerics.save_policy / scripts/policy_search.py); "
+                        "overrides the uniform --numerics shorthand")
 
 
 def _inject_impls() -> tuple[str, ...]:
@@ -70,14 +78,21 @@ def apply_pallas_interpret(args, log: Callable[[str], None] = print,
     log(f"[{tag}] {ENV_VAR}={value} (resolved interpret={default_interpret()})")
 
 
-def numerics_from_args(args, mode: str | None = None) -> AMRNumerics | None:
-    """Parsed args -> AMRNumerics (None = keep the config's policy).
+def numerics_from_args(args, mode: str | None = None):
+    """Parsed args -> numerics policy (None = keep the config's policy).
 
-    ``mode`` overrides the parsed mode — multi-arm drivers call this once
-    per entry of ``--modes``. Validation (unknown mode, bad params) happens
-    in the ``AMRNumerics`` constructor against the registry, so the error
-    names the valid modes.
+    ``--policy-file`` (when no explicit ``mode`` is forced) loads a saved
+    policy artifact — uniform or per-layer — and wins over the uniform
+    ``--numerics`` shorthand; NOTE any ``schedule_ref`` handles inside must
+    already be registered in this process (docs/numerics.md#policy-files).
+    Otherwise builds one ``AMRNumerics``; ``mode`` overrides the parsed
+    mode — multi-arm drivers call this once per entry of ``--modes``.
+    Validation (unknown mode, bad params) happens in the ``AMRNumerics``
+    constructor against the registry, so the error names the valid modes.
     """
+    path = getattr(args, "policy_file", None)
+    if mode is None and path:
+        return load_policy(path)
     m = mode if mode is not None else getattr(args, "numerics", None)
     if m is None:
         return None
@@ -93,9 +108,18 @@ def parse_modes(args) -> list[str]:
     return [m.strip() for m in raw.split(",") if m.strip()]
 
 
-def policy_label(nm: AMRNumerics) -> str:
+def policy_label(nm) -> str:
     """Human label like ``amr_lowrank(b=8,r=16)`` — which parameters are
-    shown is driven by the registry's required_params, not by mode names."""
+    shown is driven by the registry's required_params, not by mode names.
+    Heterogeneous policies summarize via ``numerics.policy_summary``
+    (``perlayer[18l: inject b14-b22]``); a ``UniformPolicy`` labels as its
+    single design point."""
+    from repro.numerics import UniformPolicy, policy_summary
+
+    if isinstance(nm, UniformPolicy):
+        nm = nm.numerics
+    if not isinstance(nm, AMRNumerics) and hasattr(nm, "resolve"):
+        return policy_summary(nm)
     req = get_mode(nm.mode).required_params
     parts = []
     if "border" in req:

@@ -58,8 +58,10 @@ def main(argv=None) -> None:
     cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
     nm = numerics_from_args(args)
     if nm is not None:
+        from repro.launch.cli import policy_label
+
         cfg = dataclasses.replace(cfg, numerics=nm)
-        print(f"[serve] numerics policy: {cfg.numerics}")
+        print(f"[serve] numerics policy: {policy_label(nm)}")
 
     mesh = make_host_mesh()
     rng = np.random.default_rng(args.seed)

@@ -49,7 +49,10 @@ def main(argv=None) -> None:
     cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
     nm = numerics_from_args(args)
     if nm is not None:
+        from repro.launch.cli import policy_label
+
         cfg = dataclasses.replace(cfg, numerics=nm)
+        print(f"[train] numerics policy: {policy_label(nm)}")
 
     mesh = make_host_mesh(model_parallel=args.tp)
     data = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq, batch=args.batch,

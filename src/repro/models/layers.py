@@ -9,12 +9,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.numerics import AMRNumerics
+from repro.numerics import AMRNumerics, NumericsPolicy, resolve_numerics
 from repro.numerics.approx_matmul import approx_matmul
 from repro.parallel.constraints import pin
 
+Numerics = AMRNumerics | NumericsPolicy | None
 
-def dense(x: jnp.ndarray, w: jnp.ndarray, numerics: AMRNumerics | None = None,
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, numerics: Numerics = None,
           site: str | None = None) -> jnp.ndarray:
     """x: (..., K) @ w: (K, N) under the numerics policy.
 
@@ -22,7 +24,13 @@ def dense(x: jnp.ndarray, w: jnp.ndarray, numerics: AMRNumerics | None = None,
     with the ambient step/layer scope (repro.numerics.context), decorrelates
     the amr_noise PRNG stream — without it every projection in every layer
     would draw the identical noise tensor.
+
+    ``numerics`` may also be a site-resolved ``NumericsPolicy``; it resolves
+    here against ``site`` and the ambient static layer coordinate, so each
+    call site of each (statically indexed) layer can run a different
+    multiplier design (numerics/policy.py).
     """
+    numerics = resolve_numerics(numerics, site)
     if numerics is None or numerics.is_exact():
         return jnp.matmul(x, w)
     shape = x.shape
@@ -70,7 +78,7 @@ def init_mlp(key: jax.Array, d_model: int, d_ff: int, act: str, dtype) -> dict:
     }
 
 
-def mlp(params: dict, x: jnp.ndarray, act: str, numerics: AMRNumerics | None) -> jnp.ndarray:
+def mlp(params: dict, x: jnp.ndarray, act: str, numerics: Numerics) -> jnp.ndarray:
     g = pin(dense(x, params["w_gate"], numerics, site="mlp.w_gate"), "batch", None, "tp")
     u = pin(dense(x, params["w_up"], numerics, site="mlp.w_up"), "batch", None, "tp")
     if act == "geglu":

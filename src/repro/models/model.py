@@ -13,7 +13,15 @@ Caches for decode are pytrees mirroring the grouped structure: stacked
 leaves with a leading ``n_repeat`` axis, scanned in lockstep with params.
 
 Approximate numerics: every matmul in every layer routes through
-``cfg.numerics`` (repro.numerics.AMRNumerics) via layers.dense — including
+``cfg.numerics`` via layers.dense — a single ``AMRNumerics`` design point
+or a site-resolved ``NumericsPolicy`` (repro.numerics.policy).  Per-layer
+heterogeneous policies resolve at trace time against a STATIC flat layer
+index: when the policy is invariant across scanned group copies the layer
+loops keep their compact ``lax.scan`` (resolving at the group-0
+representative index — bit-for-bit the legacy trace), otherwise they
+statically unroll one body per group (``_needs_static_unroll``).  Encoder
+layers sit outside the decoder's flat index space and resolve with
+``layer=None`` (site/default entries only).  This includes
 the ``amr_kernel`` mode that dispatches to the Pallas amr_matmul kernel,
 whose interpret/compiled execution is backend-autodetected and overridable
 with ``REPRO_PALLAS_INTERPRET`` (docs/kernels.md). launch/serve.py exposes
@@ -22,6 +30,7 @@ serving path exercises the approximate multiplier end to end.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Any
 
 import jax
@@ -150,6 +159,22 @@ def group_structure(cfg: ModelConfig) -> tuple[tuple[str, ...], int]:
     return (cfg.default_mixer,), cfg.n_layers
 
 
+def _needs_static_unroll(numerics, kinds: tuple[str, ...], n_repeat: int) -> bool:
+    """True when the numerics policy varies ACROSS scanned group copies.
+
+    Per-layer design points are static (baked into the jit trace), so a
+    policy that assigns different multipliers to different group repeats
+    forces the layer loop to unroll with a concrete flat index per copy.
+    Bare ``AMRNumerics``, ``UniformPolicy`` and repeat-invariant
+    ``PerLayerPolicy`` keep the compact one-body ``lax.scan`` — bit-for-bit
+    the legacy trace.  Inside the scan the policy resolves at the
+    representative in-group flat index (group 0), which by invariance is
+    every copy's answer.
+    """
+    inv = getattr(numerics, "repeat_invariant", None)
+    return inv is not None and not inv(len(kinds), n_repeat)
+
+
 def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
     kinds, n_repeat = group_structure(cfg)
     dtype = jnp.dtype(cfg.dtype)
@@ -219,7 +244,9 @@ def _encoder_forward(cfg: ModelConfig, params, frames, numerics):
     def enc_body(carry, lp):
         x, g = carry
         # encoder layers get their own numerics-PRNG coordinate space so
-        # amr_noise draws decorrelate from the decoder stack (layer < 0)
+        # amr_noise draws decorrelate from the decoder stack (layer < 0);
+        # per-layer policies see layer=None here (no static coordinate) and
+        # resolve through their site/default entries
         with numerics_scope(layer=-1 - g):
             h = rms_norm(x, lp["ln1"], cfg.norm_eps)
             x = x + attn.attend_full(lp["attn"], h, n_heads=cfg.n_heads,
@@ -274,14 +301,18 @@ def forward(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
 
     shared = params.get("shared")
 
-    def group_body(carry, group_params):
+    def group_body(carry, group_params, g_static=None):
         # g rides in the carry so scanned group copies see distinct layer
         # indices for the numerics PRNG scope (re-established inside the
-        # body: a remat re-trace rebuilds identical noise keys)
+        # body: a remat re-trace rebuilds identical noise keys).  g_static
+        # is the STATIC group index of the unrolled per-layer-policy path
+        # (None when scanning — the policy then resolves at the group-0
+        # representative flat index, valid by repeat invariance).
         x, aux, g = carry
         for i, kind in enumerate(kinds):
             lp = group_params[i]
-            with numerics_scope(layer=g * len(kinds) + i):
+            flat = i if g_static is None else g_static * len(kinds) + i
+            with numerics_scope(layer=g * len(kinds) + i, static_layer=flat):
                 ekv = None
                 if enc_kv is not None and "xattn" in lp:
                     ekv = attn.encode_cross_kv(lp["xattn"], enc_out, n_heads=cfg.n_heads,
@@ -290,13 +321,21 @@ def forward(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
             aux = aux + a
         return (x, aux, g + 1), None
 
-    body = group_body
-    if cfg.remat == "block":
-        body = jax.checkpoint(group_body, prevent_cse=False)
-
-    (x, aux, _), _ = jax.lax.scan(
-        body, (x, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
-        params["layers"], unroll=n_repeat if cfg.unroll_layers else 1)
+    carry = (x, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32))
+    if _needs_static_unroll(numerics, kinds, n_repeat):
+        for gi in range(n_repeat):
+            body = partial(group_body, g_static=gi)
+            if cfg.remat == "block":
+                body = jax.checkpoint(body, prevent_cse=False)
+            carry, _ = body(carry, jax.tree.map(lambda l: l[gi], params["layers"]))
+        x, aux, _ = carry
+    else:
+        body = group_body
+        if cfg.remat == "block":
+            body = jax.checkpoint(group_body, prevent_cse=False)
+        (x, aux, _), _ = jax.lax.scan(
+            body, carry, params["layers"],
+            unroll=n_repeat if cfg.unroll_layers else 1)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     if last_only:
         x = x[:, -1:, :]
@@ -395,18 +434,21 @@ def decode_step(cfg: ModelConfig, params: dict, token: jnp.ndarray, cache: Any,
     x = embed(params["embed"], token)
     shared = params.get("shared")
 
-    def group_body(carry, scanned):
+    def group_body(carry, scanned, g_static=None):
         # cache rides in the CARRY (indexed by the group counter) rather than
         # as scan xs/ys: carry buffers alias in place across iterations,
         # while xs->ys caches double/triple-buffer (measured: 12.8 GB of
         # temps on a 4.3 GB qwen3 decode cache)
         x, cache_all, g = carry
         group_params, _ = scanned
-        group_cache = jax.tree.map(lambda l: l[g], cache_all)
+        gi = g if g_static is None else g_static
+        group_cache = jax.tree.map(lambda l: l[gi], cache_all)
         new_caches = []
         for i, kind in enumerate(kinds):
             lp = group_params[i]
-            with numerics_scope(step=pos, layer=g * len(kinds) + i):
+            flat = i if g_static is None else g_static * len(kinds) + i
+            with numerics_scope(step=pos, layer=g * len(kinds) + i,
+                                static_layer=flat):
                 ekv = None
                 if enc_out is not None and "xattn" in lp:
                     ekv = attn.encode_cross_kv(lp["xattn"], enc_out, n_heads=cfg.n_heads,
@@ -415,15 +457,24 @@ def decode_step(cfg: ModelConfig, params: dict, token: jnp.ndarray, cache: Any,
                                            ekv, numerics)
             new_caches.append(c)
         cache_all = jax.tree.map(
-            lambda full, new: jax.lax.dynamic_update_index_in_dim(full, new, g, 0),
+            lambda full, new: jax.lax.dynamic_update_index_in_dim(full, new, gi, 0),
             cache_all, tuple(new_caches))
         return (x, cache_all, g + 1), None
 
     kinds2, n_repeat = group_structure(cfg)
-    (x, new_cache, _), _ = jax.lax.scan(
-        group_body, (x, cache, jnp.zeros((), jnp.int32)),
-        (params["layers"], jnp.arange(n_repeat)),
-        unroll=n_repeat if cfg.unroll_layers else 1)
+    carry = (x, cache, jnp.zeros((), jnp.int32))
+    if _needs_static_unroll(numerics, kinds, n_repeat):
+        # per-layer heterogeneous policy: statically unrolled copies, still
+        # ONE jit trace per engine — serve's no-recompile property holds
+        for gi in range(n_repeat):
+            group_params = jax.tree.map(lambda l: l[gi], params["layers"])
+            carry, _ = group_body(carry, (group_params, gi), g_static=gi)
+        x, new_cache, _ = carry
+    else:
+        (x, new_cache, _), _ = jax.lax.scan(
+            group_body, carry,
+            (params["layers"], jnp.arange(n_repeat)),
+            unroll=n_repeat if cfg.unroll_layers else 1)
     if active is not None:
         new_cache = _merge_active(cache, new_cache, active)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
@@ -494,12 +545,13 @@ def prefill_with_cache(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
 
     shared = params.get("shared")
 
-    def group_body(carry, group_params):
+    def group_body(carry, group_params, g_static=None):
         x, g = carry
         caches = []
         for i, kind in enumerate(kinds):
             lp = group_params[i]
-            with numerics_scope(layer=g * len(kinds) + i):
+            flat = i if g_static is None else g_static * len(kinds) + i
+            with numerics_scope(layer=g * len(kinds) + i, static_layer=flat):
                 ekv = None
                 if enc_out is not None and "xattn" in lp:
                     ekv = attn.encode_cross_kv(lp["xattn"], enc_out, n_heads=cfg.n_heads,
@@ -509,9 +561,21 @@ def prefill_with_cache(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
             caches.append(c)
         return (x, g + 1), tuple(caches)
 
-    (x, _), cache = jax.lax.scan(group_body, (x, jnp.zeros((), jnp.int32)),
-                                 params["layers"],
-                                 unroll=n_repeat if cfg.unroll_layers else 1)
+    carry = (x, jnp.zeros((), jnp.int32))
+    if _needs_static_unroll(numerics, kinds, n_repeat):
+        per_group = []
+        for gi in range(n_repeat):
+            carry, caches = group_body(
+                carry, jax.tree.map(lambda l: l[gi], params["layers"]),
+                g_static=gi)
+            per_group.append(caches)
+        # stack the per-group cache entries into the leading n_repeat axis
+        # the scan path's ys would have produced (decode consumes either)
+        cache = jax.tree.map(lambda *ls: jnp.stack(ls), *per_group)
+        x, _ = carry
+    else:
+        (x, _), cache = jax.lax.scan(group_body, carry, params["layers"],
+                                     unroll=n_repeat if cfg.unroll_layers else 1)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps)
     head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
     logits = unembed(x[:, -1:, :], head)

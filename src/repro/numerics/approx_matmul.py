@@ -362,12 +362,18 @@ def matmul_amr_noise(a: jnp.ndarray, b: jnp.ndarray, border: int, key: jax.Array
 def approx_matmul(
     a: jnp.ndarray,
     b: jnp.ndarray,
-    numerics: AMRNumerics | None = None,
+    numerics: "AMRNumerics | None" = None,
     *,
     key: jax.Array | None = None,
     site: str | None = None,
 ) -> jnp.ndarray:
     """Dispatch a matmul under the given numerics policy (None = exact).
+
+    ``numerics`` may be a single ``AMRNumerics`` or any ``NumericsPolicy``
+    resolver (numerics/policy.py) — the latter resolves HERE, at trace
+    time, against the static ``site`` label and the ambient scope's
+    ``static_layer`` coordinate, so per-layer heterogeneous policies bake
+    into the trace with zero run-time dispatch.
 
     ``site`` is a static call-site label (e.g. ``"mlp.w_gate"``); together
     with the ambient ``numerics_scope`` (step / layer) it decorrelates the
@@ -379,21 +385,42 @@ def approx_matmul(
     policy was constructed).
 
     When the ambient scope carries an AUDIT channel
-    (``numerics_scope(audit=AuditTrace())``) and the mode registered a
-    bit-exact ``oracle``, the oracle is evaluated alongside the impl and
-    the per-site max-abs-diff recorded at run time via
-    ``jax.debug.callback`` — the conformance matrix's inject-vs-LUT
-    bit-identity proof (read the trace after ``jax.effects_barrier()``).
+    (``numerics_scope(audit=AuditTrace())``), a reference is evaluated
+    alongside the impl and the per-site (and, when a layer coordinate is in
+    scope, per-(site, layer)) diff recorded at run time via
+    ``jax.debug.callback`` — read the trace after ``jax.effects_barrier()``.
+    The default ``AuditTrace(compare="oracle")`` diffs against the mode's
+    bit-exact ``oracle`` in product-grid steps (the conformance matrix's
+    inject-vs-LUT bit-identity proof); ``AuditTrace(compare="exact")``
+    diffs against the exact float matmul and accumulates error mass (the
+    model-level policy search's sensitivity probe).
     """
+    scope = current_scope()
+    if numerics is not None and not isinstance(numerics, AMRNumerics):
+        numerics = numerics.resolve(site, scope.static_layer)
     if numerics is None or numerics.is_exact():
         return matmul_exact(a, b)
     spec = registry.get_mode(numerics.mode)
     out = spec.impl(a, b, numerics, key=key, site=site)
-    audit = current_scope().audit
-    if audit is not None and spec.oracle is not None:
-        ref = spec.oracle(a, b, numerics)
-        diff = _grid_diff(out, ref, a, b)
-        jax.debug.callback(partial(audit.record, site or "<unlabeled>"), diff)
+    audit = scope.audit
+    if audit is not None:
+        diff = mass = None
+        if getattr(audit, "compare", "oracle") == "exact":
+            err = jnp.abs(out.astype(jnp.float32)
+                          - matmul_exact(a, b).astype(jnp.float32))
+            diff, mass = jnp.max(err), jnp.sum(err)
+        elif spec.oracle is not None:
+            ref = spec.oracle(a, b, numerics)
+            diff = _grid_diff(out, ref, a, b)
+            mass = diff
+        if diff is not None:
+            cb = partial(audit.record, site or "<unlabeled>")
+            if scope.layer is not None:
+                jax.debug.callback(
+                    lambda d, m, layer: cb(d, layer=layer, mass=m),
+                    diff, mass, scope.layer)
+            else:
+                jax.debug.callback(lambda d, m: cb(d, mass=m), diff, mass)
     return out
 
 
@@ -465,6 +492,7 @@ registry.register_mode(
     lambda a, b, nm, *, key=None, site=None: matmul_amr_inject(a, b, nm),
     required_params=("border",), validate=_validate_inject,
     oracle=_inject_oracle,
+    accepts_params=("schedule_ref", "inject_impl"),
     description="on-device exact error injection (any schedule)")
 
 registry.register_mode(
@@ -473,6 +501,7 @@ registry.register_mode(
         a, b, nm.border, nm.rank),
     required_params=("border", "rank"),
     validate=partial(_validate_rank, minimum=1),
+    defaults={"rank": 4},
     description="MXU low-rank error factorization")
 
 registry.register_mode(
@@ -489,4 +518,5 @@ registry.register_mode(
         a, b, nm.border, nm.rank),
     required_params=("border", "rank"),
     validate=partial(_validate_rank, minimum=0),
+    defaults={"rank": 0},
     description="Pallas kernel path (rank 0 = full-LUT variant)")

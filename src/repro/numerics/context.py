@@ -51,21 +51,50 @@ __all__ = ["numerics_scope", "current_scope", "noise_key", "NumericsScope",
 
 
 class AuditTrace:
-    """Per-call-site record of |mode output - oracle output| maxima.
+    """Per-call-site record of |mode output - reference output| diffs.
 
     Populated at RUN time through ``jax.debug.callback`` (so it works under
     jit / scan / remat traces); read it only after the audited computation
     has executed (``jax.effects_barrier()`` flushes pending callbacks).
-    ``sites`` maps the static call-site label to ``{"calls", "max_abs_diff"}``.
+    ``sites`` maps the static call-site label to
+    ``{"calls", "max_abs_diff", "sum_abs_diff"}``.
+
+    ``compare`` selects the reference:
+      * ``"oracle"`` (default) — the mode's bit-exact ``ModeSpec.oracle``,
+        diffed in integer-product-grid steps.  The conformance matrix's
+        inject-vs-LUT bit-identity proof (a real mismatch records >= 1.0).
+      * ``"exact"`` — the exact float matmul of the same operands.  The diff
+        is the mode's raw approximation error, and ``sum_abs_diff``
+        accumulates per-call error MASS — what the model-level policy
+        search (core/dse/model_policy.py) scores per-site sensitivity with.
+
+    When the ambient scope carries a layer coordinate, per-``(site, layer)``
+    records additionally accumulate in ``coords`` (the layer value arrives
+    concrete at run time even when it is a traced scan counter).
     """
 
-    def __init__(self):
+    def __init__(self, compare: str = "oracle"):
+        if compare not in ("oracle", "exact"):
+            raise ValueError(
+                f"AuditTrace compare must be 'oracle' or 'exact', got {compare!r}")
+        self.compare = compare
         self.sites: dict[str, dict[str, Any]] = {}
+        self.coords: dict[tuple[str, int], dict[str, Any]] = {}
 
-    def record(self, site: str, diff) -> None:
-        ent = self.sites.setdefault(site, {"calls": 0, "max_abs_diff": 0.0})
+    @staticmethod
+    def _accum(ent: dict, diff: float, mass: float) -> None:
         ent["calls"] += 1
-        ent["max_abs_diff"] = max(ent["max_abs_diff"], float(diff))
+        ent["max_abs_diff"] = max(ent["max_abs_diff"], diff)
+        ent["sum_abs_diff"] += mass
+
+    def record(self, site: str, diff, layer=None, mass=None) -> None:
+        d = float(diff)
+        m = d if mass is None else float(mass)
+        zero = {"calls": 0, "max_abs_diff": 0.0, "sum_abs_diff": 0.0}
+        self._accum(self.sites.setdefault(site, dict(zero)), d, m)
+        if layer is not None:
+            self._accum(self.coords.setdefault((site, int(layer)), dict(zero)),
+                        d, m)
 
     @property
     def max_abs_diff(self) -> float:
@@ -81,12 +110,22 @@ class AuditTrace:
 
 @dataclasses.dataclass(frozen=True)
 class NumericsScope:
-    """Traced decorrelation coordinates visible to approx_matmul."""
+    """Traced decorrelation coordinates visible to approx_matmul.
+
+    ``static_layer`` is the one NON-traced coordinate: a plain Python int
+    (or None) identifying the flat layer a call site sits in *at trace
+    time*.  Per-layer policy resolution (numerics/policy.py) keys on it —
+    a traced scan counter cannot select a static ``AMRNumerics``, so the
+    model's layer loops set it to the representative in-group index when
+    scanning (policy invariant across group copies) or to the true flat
+    index when statically unrolled (models/model.py).
+    """
 
     step: Any = None   # traced int scalar (training step), or None
     layer: Any = None  # traced int scalar (flat layer index), or None
     unit: Any = None   # traced int scalar (vmapped instance, e.g. expert), or None
     audit: Any = None  # AuditTrace recording oracle diffs, or None
+    static_layer: int | None = None  # STATIC flat layer index (policy resolution)
 
 
 # Thread-local scope stack: scopes are entered/exited during Python tracing
@@ -103,16 +142,18 @@ def _stack() -> list:
 
 
 @contextlib.contextmanager
-def numerics_scope(*, step=None, layer=None, unit=None, audit=None):
+def numerics_scope(*, step=None, layer=None, unit=None, audit=None,
+                   static_layer=None):
     """Provide step/layer/unit decorrelation values (and the optional audit
-    channel) to nested approx matmuls."""
+    channel / static policy-resolution layer) to nested approx matmuls."""
     cur = current_scope()
     stack = _stack()
     stack.append(NumericsScope(
         step=step if step is not None else cur.step,
         layer=layer if layer is not None else cur.layer,
         unit=unit if unit is not None else cur.unit,
-        audit=audit if audit is not None else cur.audit))
+        audit=audit if audit is not None else cur.audit,
+        static_layer=static_layer if static_layer is not None else cur.static_layer))
     try:
         yield
     finally:

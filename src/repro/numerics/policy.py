@@ -1,0 +1,354 @@
+"""Site-resolved numerics policies: one model, many multipliers.
+
+``AMRNumerics`` is one multiplier design; real models tolerate
+approximation unevenly per layer (survey literature: error tolerance is
+application- AND site-dependent), so the model-level DSE
+(``core/dse/model_policy.py``) assigns a different design point per layer.
+This module is the API that carries such an assignment through the model:
+
+  * :class:`NumericsPolicy` — the resolver protocol.  Anything with
+    ``resolve(site, layer) -> AMRNumerics`` (and ``policies()`` for
+    validation/serialization) can sit in ``ModelConfig.numerics``.
+  * :class:`UniformPolicy` — one ``AMRNumerics`` everywhere.  Resolves to
+    the SAME policy object at every call site, so the traced computation is
+    bit-for-bit identical to passing the bare ``AMRNumerics`` (the legacy
+    shorthand, which remains supported everywhere).
+  * :class:`PerLayerPolicy` — a mapping keyed on the ``numerics_scope``
+    coordinates already threaded through the model: the flat layer index
+    (``layer_kinds()`` order) and/or the static call-site label
+    (``"mlp.w_gate"``, ``"attn.wq"``, ...).  Precedence:
+    ``(layer, site) > layer > site > default``.
+
+Resolution happens at TRACE time: ``approx_matmul`` / ``layers.dense``
+resolve the ambient ``current_scope().static_layer`` (a plain Python int
+established by the model's layer loops — never a tracer), so a policy that
+varies per layer forces the model to statically unroll its layer loop,
+while a repeat-invariant policy keeps the compact ``lax.scan`` (see
+``models/model.py``).  Serving closes the resolved policies over the single
+jitted decode step, so heterogeneous policies never retrace per request.
+
+Policies are hashable (static under jit, like ``AMRNumerics``) and
+serialize to JSON (:func:`policy_to_json` / :func:`policy_from_json`), so a
+searched assignment is a committable artifact.  ``schedule_ref`` handles
+serialize as strings; re-registering the underlying DSE schedule after a
+restart is the consumer's job (the ``FaultTolerantLoop(on_restore=...)``
+hook — docs/numerics.md#policy-files).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Protocol, runtime_checkable
+
+from .approx_matmul import AMRNumerics
+
+__all__ = [
+    "NumericsPolicy", "UniformPolicy", "PerLayerPolicy", "as_policy",
+    "resolve_numerics", "numerics_to_json", "numerics_from_json",
+    "policy_to_json", "policy_from_json", "save_policy", "load_policy",
+    "policy_summary",
+]
+
+
+@runtime_checkable
+class NumericsPolicy(Protocol):
+    """Resolver protocol: ``ModelConfig.numerics`` may hold any of these."""
+
+    def resolve(self, site: str | None = None,
+                layer: int | None = None) -> AMRNumerics:
+        """The multiplier design for one call site.  ``layer`` is the flat
+        static layer index (``cfg.layer_kinds()`` order) or None outside the
+        decoder stack (encoder layers, bare calls)."""
+        ...
+
+    def policies(self) -> tuple[AMRNumerics, ...]:
+        """Every distinct ``AMRNumerics`` this policy can resolve to
+        (validation / serialization / label surface)."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class UniformPolicy:
+    """One design point everywhere — the bit-for-bit wrapper of the legacy
+    global ``AMRNumerics`` semantics (resolves to the same object at every
+    site, so traces are identical)."""
+
+    numerics: AMRNumerics = AMRNumerics("exact")
+
+    def resolve(self, site: str | None = None,
+                layer: int | None = None) -> AMRNumerics:
+        return self.numerics
+
+    def policies(self) -> tuple[AMRNumerics, ...]:
+        return (self.numerics,)
+
+    def repeat_invariant(self, group_size: int, n_repeat: int) -> bool:
+        return True
+
+    def is_exact(self) -> bool:
+        return self.numerics.is_exact()
+
+
+def _as_items(m, n_keys: int):
+    """dict | iterable of tuples -> canonical sorted tuple-of-tuples."""
+    if m is None:
+        return ()
+    items = m.items() if isinstance(m, dict) else m
+    out = []
+    for it in items:
+        it = tuple(it) if not isinstance(it, tuple) else it
+        if len(it) == 2 and n_keys == 2 and isinstance(it[0], tuple):
+            it = (*it[0], it[1])  # {(layer, site): nm} dict form
+        if len(it) != n_keys + 1:
+            raise ValueError(f"malformed policy entry {it!r}")
+        out.append(it)
+    return tuple(sorted(out, key=lambda t: tuple(map(str, t[:-1]))))
+
+
+@dataclasses.dataclass(frozen=True)
+class PerLayerPolicy:
+    """Heterogeneous assignment keyed on the numerics_scope coordinates.
+
+    ``layers`` maps flat layer indices (``cfg.layer_kinds()`` order),
+    ``sites`` maps static call-site labels, ``layer_sites`` pins one call
+    site inside one layer.  Dicts are accepted and canonicalised to sorted
+    tuples (the policy must stay hashable — it is static under jit).
+
+    Precedence: ``(layer, site)`` > ``layer`` > ``site`` > ``default``.
+    Calls outside the decoder layer loops (encoder stack, bare
+    ``approx_matmul``) resolve with ``layer=None`` and therefore fall back
+    to ``site``/``default`` — layer-keyed entries only apply to the decoder
+    stack whose flat indices they name.
+    """
+
+    default: AMRNumerics = AMRNumerics("exact")
+    layers: Any = ()       # ((layer, AMRNumerics), ...)
+    sites: Any = ()        # ((site, AMRNumerics), ...)
+    layer_sites: Any = ()  # ((layer, site, AMRNumerics), ...)
+    # Force the statically-unrolled layer loop even when the assignment is
+    # repeat-invariant.  The model-policy sensitivity probe needs it: audit
+    # debug-callback effects are dropped inside grad-of-scan (jax
+    # partial-eval limitation), while the unrolled loop records fine.
+    static_unroll: bool = False
+
+    def __post_init__(self):
+        object.__setattr__(self, "layers", _as_items(self.layers, 1))
+        object.__setattr__(self, "sites", _as_items(self.sites, 1))
+        object.__setattr__(self, "layer_sites", _as_items(self.layer_sites, 2))
+        from . import registry
+
+        for nm in self.policies():
+            if not isinstance(nm, AMRNumerics):
+                raise ValueError(
+                    f"PerLayerPolicy entries must be AMRNumerics, got {nm!r}")
+            registry.validate_policy(nm)
+        for layer, _ in self.layers:
+            if not isinstance(layer, int):
+                raise ValueError(f"layer keys must be int, got {layer!r}")
+        for layer, site, _ in self.layer_sites:
+            if not isinstance(layer, int) or not isinstance(site, str):
+                raise ValueError(
+                    f"layer_sites keys must be (int, str), got {(layer, site)!r}")
+
+    # maps are derived (cached in __dict__, which frozen dataclasses keep)
+    @property
+    def _layer_map(self) -> dict:
+        m = self.__dict__.get("_layer_map_cache")
+        if m is None:
+            m = {k: v for k, v in self.layers}
+            self.__dict__["_layer_map_cache"] = m
+        return m
+
+    @property
+    def _site_map(self) -> dict:
+        m = self.__dict__.get("_site_map_cache")
+        if m is None:
+            m = {k: v for k, v in self.sites}
+            self.__dict__["_site_map_cache"] = m
+        return m
+
+    @property
+    def _layer_site_map(self) -> dict:
+        m = self.__dict__.get("_layer_site_map_cache")
+        if m is None:
+            m = {(layer, site): v for layer, site, v in self.layer_sites}
+            self.__dict__["_layer_site_map_cache"] = m
+        return m
+
+    def resolve(self, site: str | None = None,
+                layer: int | None = None) -> AMRNumerics:
+        if layer is not None:
+            layer = int(layer)
+            if site is not None:
+                nm = self._layer_site_map.get((layer, site))
+                if nm is not None:
+                    return nm
+            nm = self._layer_map.get(layer)
+            if nm is not None:
+                return nm
+        if site is not None:
+            nm = self._site_map.get(site)
+            if nm is not None:
+                return nm
+        return self.default
+
+    def policies(self) -> tuple[AMRNumerics, ...]:
+        seen: list[AMRNumerics] = [self.default]
+        for _, nm in self.layers:
+            if nm not in seen:
+                seen.append(nm)
+        for _, nm in self.sites:
+            if nm not in seen:
+                seen.append(nm)
+        for _, _, nm in self.layer_sites:
+            if nm not in seen:
+                seen.append(nm)
+        return tuple(seen)
+
+    def is_exact(self) -> bool:
+        return all(nm.is_exact() for nm in self.policies())
+
+    def repeat_invariant(self, group_size: int, n_repeat: int) -> bool:
+        """True when every scanned group copy resolves identically — the
+        model may then keep its compact ``lax.scan`` over layer groups (one
+        traced body) instead of statically unrolling (models/model.py)."""
+        if self.static_unroll:
+            return False
+        for i in range(group_size):
+            flats = [i + g * group_size for g in range(n_repeat)]
+            if len({self._layer_map.get(f) for f in flats}) > 1:
+                return False
+            flatset = set(flats)
+            sites = {s for (f, s) in self._layer_site_map if f in flatset}
+            for s in sites:
+                if len({self._layer_site_map.get((f, s)) for f in flats}) > 1:
+                    return False
+        return True
+
+
+def as_policy(numerics) -> NumericsPolicy | None:
+    """Wrap a bare ``AMRNumerics`` as a :class:`UniformPolicy` (None passes
+    through; policies pass through)."""
+    if numerics is None or isinstance(numerics, (UniformPolicy, PerLayerPolicy)):
+        return numerics
+    if isinstance(numerics, AMRNumerics):
+        return UniformPolicy(numerics)
+    if hasattr(numerics, "resolve"):
+        return numerics
+    raise TypeError(f"not a numerics policy: {numerics!r}")
+
+
+def resolve_numerics(numerics, site: str | None = None):
+    """Resolve a policy (or pass a bare ``AMRNumerics``/None through) at the
+    ambient static layer coordinate — the single resolution point used by
+    ``layers.dense`` and ``approx_matmul`` dispatch."""
+    if numerics is None or isinstance(numerics, AMRNumerics):
+        return numerics
+    from .context import current_scope
+
+    return numerics.resolve(site, current_scope().static_layer)
+
+
+# ------------------------------------------------------------------ JSON
+# Schema (docs/numerics.md#policy-files):
+#   numerics: {"mode": str, "border": int, "rank": int, "noise_seed": int,
+#              "schedule_ref": str|null, "inject_impl": str|null}
+#   uniform:  {"kind": "uniform", "numerics": {...}}
+#   per_layer:{"kind": "per_layer", "default": {...},
+#              "layers": {"<flat index>": {...}},
+#              "sites": {"<site label>": {...}},
+#              "layer_sites": [[layer, site, {...}], ...],
+#              "meta": {...}}        # optional, preserved opaque
+
+_NUMERICS_FIELDS = ("mode", "border", "rank", "noise_seed", "schedule_ref",
+                    "inject_impl")
+
+
+def numerics_to_json(nm: AMRNumerics) -> dict:
+    return {f: getattr(nm, f) for f in _NUMERICS_FIELDS}
+
+
+def numerics_from_json(d: dict) -> AMRNumerics:
+    unknown = set(d) - set(_NUMERICS_FIELDS)
+    if unknown:
+        raise ValueError(
+            f"unknown AMRNumerics fields in policy JSON: {sorted(unknown)}; "
+            f"valid fields: {_NUMERICS_FIELDS}")
+    return AMRNumerics(**d)
+
+
+def policy_to_json(policy) -> dict:
+    policy = as_policy(policy)
+    if isinstance(policy, UniformPolicy):
+        return {"kind": "uniform", "numerics": numerics_to_json(policy.numerics)}
+    if isinstance(policy, PerLayerPolicy):
+        return {
+            "kind": "per_layer",
+            "default": numerics_to_json(policy.default),
+            "layers": {str(k): numerics_to_json(v) for k, v in policy.layers},
+            "sites": {s: numerics_to_json(v) for s, v in policy.sites},
+            "layer_sites": [[k, s, numerics_to_json(v)]
+                            for k, s, v in policy.layer_sites],
+        }
+    raise TypeError(f"cannot serialize policy of type {type(policy).__name__}")
+
+
+def policy_from_json(obj: dict) -> NumericsPolicy:
+    kind = obj.get("kind")
+    if kind == "uniform":
+        return UniformPolicy(numerics_from_json(obj["numerics"]))
+    if kind == "per_layer":
+        return PerLayerPolicy(
+            default=numerics_from_json(obj.get("default", {"mode": "exact"})),
+            layers=tuple((int(k), numerics_from_json(v))
+                         for k, v in obj.get("layers", {}).items()),
+            sites=tuple((s, numerics_from_json(v))
+                        for s, v in obj.get("sites", {}).items()),
+            layer_sites=tuple((int(k), s, numerics_from_json(v))
+                              for k, s, v in obj.get("layer_sites", [])),
+        )
+    raise ValueError(
+        f"unknown policy kind {kind!r}; expected 'uniform' or 'per_layer'")
+
+
+def save_policy(policy, path, *, meta: dict | None = None) -> None:
+    obj = policy_to_json(policy)
+    if meta:
+        obj["meta"] = meta
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def load_policy(path) -> NumericsPolicy:
+    """Load a policy JSON artifact.  NOTE: ``schedule_ref`` handles must
+    already be registered in this process (``injection.register_schedule``
+    or the ``FaultTolerantLoop`` ``on_restore`` hook) — construction
+    validates each entry against the mode registry."""
+    with open(path) as f:
+        obj = json.load(f)
+    return policy_from_json(obj)
+
+
+def policy_summary(policy) -> str:
+    """Short human label for a (possibly heterogeneous) policy, e.g.
+    ``perlayer[3l+1s: inject b6-b10]`` — launch/cli.policy_label dispatches
+    here for non-uniform policies."""
+    policy = as_policy(policy)
+    if policy is None or isinstance(policy, UniformPolicy):
+        raise ValueError("policy_summary is for heterogeneous policies")
+    modes: dict[str, list[int]] = {}
+    for nm in policy.policies():
+        modes.setdefault(nm.mode, []).append(nm.border)
+    parts = []
+    for mode, borders in modes.items():
+        if mode == "exact":
+            parts.append("exact")
+            continue
+        short = mode.removeprefix("amr_")
+        lo, hi = min(borders), max(borders)
+        parts.append(f"{short} b{lo}" + (f"-b{hi}" if hi != lo else ""))
+    n_l = len(policy.layers) + len({k for k, _, _ in policy.layer_sites})
+    n_s = len(policy.sites)
+    cov = f"{n_l}l" + (f"+{n_s}s" if n_s else "")
+    return f"perlayer[{cov}: {'; '.join(parts)}]"

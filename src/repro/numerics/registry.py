@@ -27,7 +27,7 @@ import dataclasses
 from typing import Any, Callable
 
 __all__ = ["ModeSpec", "register_mode", "unregister_mode", "get_mode",
-           "mode_names", "validate_policy"]
+           "mode_names", "validate_policy", "default_policy"]
 
 Impl = Callable[..., Any]
 
@@ -46,6 +46,14 @@ class ModeSpec:
     evaluates it alongside ``impl`` at every call site and records the
     per-site max-abs-diff (the conformance matrix's inject-vs-LUT
     bit-identity proof rides on this hook).
+
+    ``defaults`` are mode-declared default parameter values (field -> value)
+    applied by :func:`default_policy` — how generic consumers (the
+    conformance matrix, benches) construct a representative policy for ANY
+    registered mode without string-matching mode names.  ``accepts_params``
+    names the AMRNumerics fields the mode meaningfully consumes beyond its
+    required ones; :func:`default_policy` silently drops overrides for
+    fields a mode ignores, so one caller-side kwargs dict serves every mode.
     """
 
     name: str
@@ -54,6 +62,8 @@ class ModeSpec:
     description: str = ""
     validate: Callable[[Any], None] | None = None
     oracle: Impl | None = None
+    defaults: tuple[tuple[str, Any], ...] = ()
+    accepts_params: tuple[str, ...] = ()
 
 
 # Registration order is preserved — it defines the canonical MODES order
@@ -69,6 +79,8 @@ def register_mode(
     description: str = "",
     validate: Callable[[Any], None] | None = None,
     oracle: Impl | None = None,
+    defaults: dict[str, Any] | None = None,
+    accepts_params: tuple[str, ...] = (),
 ) -> ModeSpec:
     """Register a numerics mode. Names are unique — re-registration is an
     error (use :func:`unregister_mode` first if a test needs to replace
@@ -80,7 +92,9 @@ def register_mode(
             f"numerics mode {name!r} is already registered; "
             f"unregister_mode({name!r}) first to replace it")
     spec = ModeSpec(name=name, impl=impl, required_params=tuple(required_params),
-                    description=description, validate=validate, oracle=oracle)
+                    description=description, validate=validate, oracle=oracle,
+                    defaults=tuple(sorted((defaults or {}).items())),
+                    accepts_params=tuple(accepts_params))
     _REGISTRY[name] = spec
     return spec
 
@@ -104,17 +118,45 @@ def get_mode(name: str) -> ModeSpec:
 
 
 def validate_policy(numerics: Any) -> None:
-    """Validate an ``AMRNumerics`` policy against its mode's registry entry.
+    """Validate a numerics policy against the registry.
 
-    Called from ``AMRNumerics.__post_init__`` so an invalid policy fails at
-    construction with a message naming the valid modes / the offending
-    parameter — not deep inside a jit trace.
+    Accepts a single ``AMRNumerics`` (called from its ``__post_init__`` so
+    an invalid policy fails at construction with a message naming the valid
+    modes / the offending parameter — not deep inside a jit trace) OR any
+    :class:`~repro.numerics.policy.NumericsPolicy` resolver, in which case
+    EVERY distinct entry it can resolve to (``policies()``) is validated.
     """
-    spec = get_mode(numerics.mode)
-    for p in spec.required_params:
-        if getattr(numerics, p, None) is None:
-            raise ValueError(
-                f"numerics mode {numerics.mode!r} requires parameter {p!r} "
-                f"(got None); required params: {spec.required_params}")
-    if spec.validate is not None:
-        spec.validate(numerics)
+    entries = numerics.policies() if hasattr(numerics, "policies") else (numerics,)
+    for nm in entries:
+        spec = get_mode(nm.mode)
+        for p in spec.required_params:
+            if getattr(nm, p, None) is None:
+                raise ValueError(
+                    f"numerics mode {nm.mode!r} requires parameter {p!r} "
+                    f"(got None); required params: {spec.required_params}")
+        if spec.validate is not None:
+            spec.validate(nm)
+
+
+def default_policy(mode: str, **overrides: Any) -> Any:
+    """Construct a representative ``AMRNumerics`` for ``mode`` from its
+    registry-declared defaults — the registry-driven replacement for the
+    mode-name ``if/elif`` ladders generic consumers (conformance matrix,
+    benches) used to hand-maintain.
+
+    ``overrides`` may name ANY parameter a caller passes for other modes;
+    fields the mode neither requires, defaults, nor declares in
+    ``accepts_params`` are silently dropped (a custom registered mode then
+    flows through such callers with no caller edits), and ``None`` values
+    are dropped too (mode defaults win over an unset caller slot).
+    """
+    from .approx_matmul import AMRNumerics  # lazy: registry loads first
+
+    spec = get_mode(mode)
+    kwargs: dict[str, Any] = dict(spec.defaults)
+    accepted = set(spec.required_params) | set(spec.accepts_params) | set(
+        k for k, _ in spec.defaults)
+    for k, v in overrides.items():
+        if k in accepted and v is not None:
+            kwargs[k] = v
+    return AMRNumerics(mode=mode, **kwargs)

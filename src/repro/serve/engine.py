@@ -12,7 +12,11 @@ Compile behaviour (the whole point of the design):
 
   * the decode step is traced ONCE per engine shape — the active mask and
     per-slot positions are traced operands, so slots finishing, joining,
-    or wrapping never retrace;
+    or wrapping never retrace; heterogeneous ``NumericsPolicy`` configs
+    (per-layer searched policies, docs/numerics.md#policy-files) resolve
+    per call site AT TRACE TIME inside that single step, so they add no
+    compiles either (gated: tests/test_policy.py asserts
+    ``_cache_size() == 1`` under a per-layer policy);
   * prefill compiles once per distinct prompt *length* (documented cost;
     callers pad/bucket prompts if they care);
   * the slot insert is one trace total (the slot index is a traced scalar).

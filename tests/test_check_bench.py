@@ -111,6 +111,26 @@ MATRIX = {
 }
 
 
+POLICY = {
+    "schema": "BENCH_policy/v1", "engine": "jax", "quick": True,
+    "samples": 4000,
+    "results": [
+        {"kind": "uniform_parity", "mode": "exact", "bit_exact": True,
+         "tokens_match": True, "max_abs_diff": 0.0},
+        {"kind": "uniform_parity", "mode": "amr_inject", "bit_exact": True,
+         "tokens_match": True, "max_abs_diff": 0.0},
+        {"kind": "frontier", "label": "dse:b8.0", "energy_per_mac": 1609.0,
+         "err": 0.1074},
+        {"kind": "uniform", "label": "dse:b8.0", "energy": 2.2e8,
+         "feasible": True, "fidelity": 0.31, "loss": 5.4},
+        {"kind": "searched", "label": "searched",
+         "policy": "perlayer[4l: exact; inject b4-b7]", "energy": 2.5e8,
+         "fidelity": 0.048, "moves": 2, "dominates_best_uniform": True},
+    ],
+    "wall_clock_s": 250.0,
+}
+
+
 def _errors(fresh, baseline):
     errs, _ = check_bench.compare_artifacts(fresh, baseline, "t.json")
     return errs
@@ -331,6 +351,68 @@ class TestMatrixArtifact:
         assert any("missing" in e for e in _errors(bad, MATRIX))
 
 
+class TestPolicyArtifact:
+    def test_identical_passes(self):
+        assert _errors(copy.deepcopy(POLICY), POLICY) == []
+
+    def test_uniform_parity_flip_is_caught(self):
+        """UniformPolicy drifting off the bare AMRNumerics trace — even one
+        ulp — must fail, per mode."""
+        for i in (0, 1):
+            bad = copy.deepcopy(POLICY)
+            bad["results"][i]["bit_exact"] = False
+            bad["results"][i]["max_abs_diff"] = 1e-7
+            errs = _errors(bad, POLICY)
+            assert any("bit_exact" in e for e in errs), i
+            assert any("max_abs_diff" in e for e in errs), i
+
+    def test_token_stream_mismatch_is_caught(self):
+        bad = copy.deepcopy(POLICY)
+        bad["results"][1]["tokens_match"] = False
+        assert any("tokens_match" in e for e in _errors(bad, POLICY))
+
+    def test_frontier_drift_is_caught(self):
+        """Frontier energies are literal cell counts and errs come from a
+        seeded integer-replay MC: both are deterministic, gated exactly."""
+        for field in ("energy_per_mac", "err"):
+            bad = copy.deepcopy(POLICY)
+            bad["results"][2][field] *= 1 + 1e-3
+            assert any(field in e for e in _errors(bad, POLICY)), field
+
+    def test_uniform_energy_and_feasibility_are_gated(self):
+        bad = copy.deepcopy(POLICY)
+        bad["results"][3]["energy"] *= 2
+        bad["results"][3]["feasible"] = False
+        errs = _errors(bad, POLICY)
+        assert any("energy" in e for e in errs)
+        assert any("feasible" in e for e in errs)
+
+    def test_searched_domination_flip_is_caught(self):
+        """The headline claim: the searched policy strictly dominates the
+        best uniform one. Losing it fails the gate."""
+        bad = copy.deepcopy(POLICY)
+        bad["results"][4]["dominates_best_uniform"] = False
+        assert any("dominates_best_uniform" in e for e in _errors(bad, POLICY))
+
+    def test_fidelity_loss_and_moves_drift_are_advisory(self):
+        """Float training fidelity and the accepted move set may vary across
+        platforms; they inform, they don't gate."""
+        drift = copy.deepcopy(POLICY)
+        drift["results"][3]["fidelity"] *= 2
+        drift["results"][3]["loss"] *= 1.5
+        drift["results"][4]["moves"] += 3
+        errs, advisories = check_bench.compare_artifacts(drift, POLICY, "t")
+        assert errs == []
+        assert any("fidelity" in a for a in advisories)
+        assert any("loss" in a for a in advisories)
+        assert any("moves" in a for a in advisories)
+
+    def test_missing_searched_row_is_caught(self):
+        bad = copy.deepcopy(POLICY)
+        del bad["results"][4]
+        assert any("missing" in e for e in _errors(bad, POLICY))
+
+
 class TestMain:
     @pytest.fixture()
     def dirs(self, tmp_path):
@@ -345,6 +427,7 @@ class TestMain:
             (d / "BENCH_inject.json").write_text(json.dumps(INJECT))
             (d / "BENCH_serve.json").write_text(json.dumps(SERVE))
             (d / "BENCH_matrix.json").write_text(json.dumps(MATRIX))
+            (d / "BENCH_policy.json").write_text(json.dumps(POLICY))
         return fresh, base
 
     def test_main_clean(self, dirs):
@@ -373,5 +456,6 @@ class TestMain:
             art = json.loads(p.read_text())
             assert art["schema"].startswith(
                 ("BENCH_kernel/", "BENCH_dse/", "BENCH_train/",
-                 "BENCH_inject/", "BENCH_serve/", "BENCH_matrix/"))
+                 "BENCH_inject/", "BENCH_serve/", "BENCH_matrix/",
+                 "BENCH_policy/"))
             assert art["results"], f"{name} baseline has no rows"

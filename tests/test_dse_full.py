@@ -76,6 +76,38 @@ class TestSearch:
             assert sched.expected_error == a.expected_error
             assert sched.border == a.border and sched.n_digits == a.n_digits
 
+    def test_score_hook_reranks_from_a_wider_pool(self):
+        """A score_hook sees the analytic pool (>= 3k) and its ranking —
+        not the analytic |E| order — decides the returned k."""
+        seen = {}
+
+        def hook(assignments):
+            seen["n"] = len(assignments)
+            # invert the analytic preference: worst |E| scores best
+            return [-abs(a.expected_error) for a in assignments]
+
+        plain = dse.search_assignments(2, 7, k=2, **FAST_SEARCH)
+        res = dse.search_assignments(2, 7, k=2, score_hook=hook, **FAST_SEARCH)
+        assert len(res) == 2 and seen["n"] >= 6  # pool default 3 * k
+        # the hook's best is the pool's analytically-worst candidate
+        assert abs(res[0].expected_error) >= abs(plain[0].expected_error)
+
+    def test_score_hook_length_mismatch_rejected(self):
+        with pytest.raises(ValueError, match="score_hook"):
+            dse.search_assignments(2, 7, k=2, score_hook=lambda a: [0.0],
+                                   **FAST_SEARCH)
+
+    def test_measured_score_hook_matches_engine_std(self):
+        """pareto.measured_score_hook scores by Monte-Carlo std_ed through
+        the fused engine dispatch — deterministic for a fixed seed."""
+        from repro.core.dse.pareto import measured_score_hook
+
+        cands = dse.search_assignments(2, 7, k=3, **FAST_SEARCH)
+        hook = measured_score_hook(n_samples=2000, seed=3)
+        s1, s2 = list(hook(cands)), list(hook(cands))
+        assert s1 == s2 and len(s1) == len(cands)
+        assert all(np.isfinite(s) and s >= 0 for s in s1)
+
     def test_materialize_rejects_desynced_assignment(self):
         a = dse.greedy_assignment(2, 8)
         bad_first = dse.ColumnChoice(

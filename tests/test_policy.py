@@ -1,0 +1,248 @@
+"""Site-resolved numerics policies (numerics/policy.py): UniformPolicy is
+bit-for-bit the legacy global AMRNumerics in both train and serve,
+PerLayerPolicy resolves exactly the (site, layer) coordinates it names,
+policy JSON artifacts round-trip (including schedule_ref re-registration
+across a simulated process restart), and heterogeneous policies add zero
+decode recompiles in the serve engine."""
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import reduction
+from repro.launch.cli import policy_label
+from repro.models import forward, init_params
+from repro.numerics import (AMRNumerics, AuditTrace, PerLayerPolicy,
+                            UniformPolicy, as_policy, injection, load_policy,
+                            numerics_scope, policy_from_json, policy_summary,
+                            policy_to_json, resolve_numerics, save_policy,
+                            validate_policy)
+from repro.serve import Request, ServeEngine
+from repro.train.steps import loss_fn
+
+CAP = 24
+PROMPTS = [(5, 9, 2, 7), (3, 11, 4, 1, 8, 6), (13, 2)]
+
+# every registered mode, at serve-test-sized parameters
+ALL_MODES = [
+    AMRNumerics("exact"),
+    AMRNumerics("amr_lut", border=2),
+    AMRNumerics("amr_inject", border=2),
+    AMRNumerics("amr_lowrank", border=2, rank=2),
+    AMRNumerics("amr_noise", border=2, noise_seed=3),
+    AMRNumerics("amr_kernel", border=2, rank=0),
+]
+
+
+def tiny_cfg(numerics):
+    return ModelConfig(
+        name="policy-test", family="dense", vocab=61, d_model=32, n_layers=2,
+        n_heads=4, n_kv_heads=2, head_dim=8, d_ff=64, numerics=numerics)
+
+
+def _tokens(cfg, batch=2, seq=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, cfg.vocab, (batch, seq)), jnp.int32)
+
+
+def _train_logits(nm):
+    """(loss, float32 logits) through the real training loss."""
+    cfg = tiny_cfg(nm)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    toks = _tokens(cfg)
+    loss, (_, logits) = loss_fn(cfg, params, toks[:, :-1], toks[:, 1:],
+                                step=jnp.zeros((), jnp.int32),
+                                with_logits=True)
+    return float(loss), np.asarray(logits, np.float32)
+
+
+def _serve_run(nm, *, n_slots=2):
+    cfg = tiny_cfg(nm)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, n_slots=n_slots, capacity=CAP,
+                      record_logits=True)
+    for p in PROMPTS:
+        eng.submit(Request(prompt=p, max_new_tokens=3))
+    return eng, eng.run()
+
+
+# ------------------------------------------------------- uniform bit-parity
+@pytest.mark.parametrize("nm", ALL_MODES, ids=lambda nm: nm.mode)
+def test_uniform_policy_train_bit_identical_to_legacy(nm):
+    """UniformPolicy(nm) and the bare AMRNumerics trace the SAME training
+    computation: loss and float32 logits are bitwise equal."""
+    loss_bare, logits_bare = _train_logits(nm)
+    loss_pol, logits_pol = _train_logits(UniformPolicy(nm))
+    assert loss_pol == loss_bare
+    assert np.array_equal(logits_pol, logits_bare)
+
+
+@pytest.mark.parametrize("nm", ALL_MODES, ids=lambda nm: nm.mode)
+def test_uniform_policy_serve_bit_identical_to_legacy(nm):
+    """Same engine, same requests: token streams AND recorded logits under
+    UniformPolicy(nm) match the bare AMRNumerics bit for bit."""
+    _, done_bare = _serve_run(nm)
+    _, done_pol = _serve_run(UniformPolicy(nm))
+    for b, p in zip(done_bare, done_pol):
+        assert b.tokens == p.tokens
+        for lb, lp in zip(b.logits, p.logits):
+            assert float(np.max(np.abs(np.asarray(lb) - np.asarray(lp)))) == 0.0
+
+
+# -------------------------------------------------------------- resolution
+class TestResolution:
+    NM_A = AMRNumerics("amr_lut", border=2)
+    NM_B = AMRNumerics("amr_lowrank", border=3, rank=2)
+    NM_C = AMRNumerics("amr_inject", border=4)
+
+    def test_precedence_layer_site_over_layer_over_site(self):
+        pol = PerLayerPolicy(default=AMRNumerics("exact"),
+                             layers={1: self.NM_A},
+                             sites={"mlp.w_down": self.NM_B},
+                             layer_sites={(1, "mlp.w_down"): self.NM_C})
+        assert pol.resolve("mlp.w_down", 1) == self.NM_C   # (layer, site)
+        assert pol.resolve("attn.wq", 1) == self.NM_A      # layer
+        assert pol.resolve("mlp.w_down", 0) == self.NM_B   # site
+        assert pol.resolve("attn.wq", 0) == pol.default    # default
+        # outside the decoder stack: layer=None falls back to site/default
+        assert pol.resolve("mlp.w_down", None) == self.NM_B
+        assert pol.resolve(None, None) == pol.default
+
+    def test_resolve_numerics_uses_ambient_static_layer(self):
+        pol = PerLayerPolicy(default=AMRNumerics("exact"),
+                             layer_sites={(1, "attn.wq"): self.NM_A})
+        with numerics_scope(static_layer=1):
+            assert resolve_numerics(pol, "attn.wq") == self.NM_A
+        with numerics_scope(static_layer=0):
+            assert resolve_numerics(pol, "attn.wq") == pol.default
+        # bare AMRNumerics passes through untouched
+        assert resolve_numerics(self.NM_B, "attn.wq") is self.NM_B
+
+    def test_model_audit_hits_exactly_the_assigned_coords(self):
+        """Through the REAL model: an exact-compare audit records error mass
+        only at the (site, layer) coordinates the policy approximates."""
+        pol = PerLayerPolicy(default=AMRNumerics("exact"),
+                             layer_sites={(0, "mlp.w_down"): self.NM_C,
+                                          (1, "attn.wq"): self.NM_C},
+                             static_unroll=True)
+        cfg = tiny_cfg(pol)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        trace = AuditTrace(compare="exact")
+        with numerics_scope(audit=trace):
+            logits, _ = forward(cfg, params, _tokens(cfg), None)
+            jax.block_until_ready(logits)
+            jax.effects_barrier()
+        hit = {k for k, v in trace.coords.items() if v["calls"]}
+        assert hit == {("mlp.w_down", 0), ("attn.wq", 1)}
+
+    def test_validate_policy_checks_every_entry(self):
+        validate_policy(PerLayerPolicy(default=AMRNumerics("exact"),
+                                       layers={0: self.NM_A}))
+        with pytest.raises(ValueError, match="border"):
+            PerLayerPolicy(default=AMRNumerics("exact"),
+                           layers={0: AMRNumerics("amr_lut", border=None)})
+
+    def test_repeat_invariant_gates_the_scan(self):
+        uni = PerLayerPolicy(default=self.NM_A, sites={"mlp.w_down": self.NM_B})
+        assert uni.repeat_invariant(2, 3)  # site-keyed: same in every copy
+        per = PerLayerPolicy(default=self.NM_A, layers={1: self.NM_B})
+        assert not per.repeat_invariant(2, 3)  # group copies differ
+        forced = PerLayerPolicy(default=self.NM_A, static_unroll=True)
+        assert not forced.repeat_invariant(2, 3)
+
+
+# ------------------------------------------------------------ JSON artifact
+class TestJsonRoundTrip:
+    def test_uniform_round_trip(self):
+        pol = UniformPolicy(AMRNumerics("amr_lowrank", border=6, rank=4))
+        assert policy_from_json(json.loads(json.dumps(policy_to_json(pol)))) == pol
+
+    def test_per_layer_round_trip_with_schedule_ref(self):
+        handle = injection.register_schedule(reduction.get_schedule(2, 6),
+                                             name="test:policy-rt")
+        pol = PerLayerPolicy(
+            default=AMRNumerics("exact"),
+            layers={1: AMRNumerics("amr_lut", border=2)},
+            sites={"attn.wq": AMRNumerics("amr_lowrank", border=3, rank=2)},
+            layer_sites={(0, "mlp.w_down"):
+                         AMRNumerics("amr_inject", border=6,
+                                     schedule_ref=handle)})
+        again = policy_from_json(json.loads(json.dumps(policy_to_json(pol))))
+        assert again == pol
+
+    def test_save_load_preserves_meta_opaquely(self, tmp_path):
+        pol = PerLayerPolicy(default=AMRNumerics("exact"),
+                             layers={0: AMRNumerics("amr_lut", border=2)})
+        path = tmp_path / "policy.json"
+        save_policy(pol, path, meta={"energy": 1.5, "history": []})
+        assert load_policy(path) == pol
+        assert json.loads(path.read_text())["meta"]["energy"] == 1.5
+
+    def test_unknown_kind_and_fields_rejected(self):
+        with pytest.raises(ValueError, match="kind"):
+            policy_from_json({"kind": "per_tensor"})
+        with pytest.raises(ValueError, match="unknown AMRNumerics fields"):
+            policy_from_json({"kind": "uniform",
+                              "numerics": {"mode": "exact", "bits": 8}})
+
+    def test_schedule_ref_reregistration_across_restart(self, tmp_path):
+        """The restart story for searched policies: the JSON artifact names
+        a schedule handle; after a process death the consumer's on_restore
+        hook re-registers the schedule under the SAME handle and the policy
+        resumes bit-identically (docs/numerics.md#policy-files)."""
+        sched = reduction.get_schedule(2, 6)
+        handle = injection.register_schedule(sched, name="test:policy-restart")
+        pol = PerLayerPolicy(
+            default=AMRNumerics("exact"),
+            sites={"mlp.w_down": AMRNumerics("amr_inject", border=6,
+                                             schedule_ref=handle)})
+        cfg = tiny_cfg(pol)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        toks = _tokens(cfg)
+        before = np.asarray(forward(cfg, params, toks, None)[0], np.float32)
+
+        path = tmp_path / "policy.json"
+        save_policy(pol, path)
+        injection._SCHEDULES.pop(handle)  # the process "dies"
+
+        def on_restore(state=None, step=None):
+            # what FaultTolerantLoop(on_restore=...) runs in the new life
+            injection.register_schedule(sched, name=handle)
+
+        on_restore()
+        loaded = load_policy(path)
+        assert loaded == pol
+        cfg2 = tiny_cfg(loaded)
+        after = np.asarray(forward(cfg2, params, toks, None)[0], np.float32)
+        assert np.array_equal(before, after)
+
+
+# ----------------------------------------------------------------- serving
+def test_serve_no_recompile_under_heterogeneous_policy():
+    """A per-layer policy resolves at trace time INSIDE the single masked
+    decode step — slots joining/finishing still never retrace."""
+    pol = PerLayerPolicy(default=AMRNumerics("exact"),
+                         layer_sites={(0, "mlp.w_down"):
+                                      AMRNumerics("amr_lut", border=2)})
+    eng, done = _serve_run(pol, n_slots=2)
+    assert len(done) == len(PROMPTS)
+    cache_size = getattr(eng._decode, "_cache_size", None)
+    if cache_size is not None:
+        assert cache_size() == 1
+
+
+# ------------------------------------------------------------------ labels
+def test_policy_labels():
+    assert policy_label(UniformPolicy(AMRNumerics("amr_lut", border=8))) \
+        == "amr_lut(b=8)"
+    pol = PerLayerPolicy(default=AMRNumerics("exact"),
+                         layers={0: AMRNumerics("amr_inject", border=5),
+                                 1: AMRNumerics("amr_inject", border=7)},
+                         sites={"attn.wq": AMRNumerics("amr_lut", border=6)})
+    lbl = policy_label(pol)
+    assert lbl == policy_summary(pol) == "perlayer[2l+1s: exact; inject b5-b7; lut b6]"
+    assert as_policy(AMRNumerics("exact")) == UniformPolicy(AMRNumerics("exact"))
