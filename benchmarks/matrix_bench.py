@@ -54,7 +54,7 @@ QUICK_TRAIN_MODES = ("exact", "amr_inject")
 
 def _arms(quick: bool):
     from repro.conformance import REPRESENTATIVE, arch_mode_arms
-    from repro.numerics import mode_names
+    from repro.numerics import is_exact_mode, mode_names
 
     reps = list(REPRESENTATIVE.values())
     modes = list(mode_names())
@@ -64,7 +64,7 @@ def _arms(quick: bool):
         dense = REPRESENTATIVE["dense"]
         train += [(dense, m) for m in modes if m not in QUICK_TRAIN_MODES]
         parity = [(a, "exact") for a in reps] + \
-                 [(dense, m) for m in modes if m != "exact"]
+                 [(dense, m) for m in modes if not is_exact_mode(m)]
         audit = reps
         noise = [dense]
     else:

@@ -50,10 +50,12 @@ BORDERS = (4, 5, 6, 7, 8, 9, 10)
 
 
 def _parity_modes():
+    # registry defaults supply each mode's rank (lowrank=4, kernel=0) — no
+    # mode-name matching here (lint rule RPL001); parity compares each nm
+    # against UniformPolicy(nm), so the exact design point is irrelevant.
     from repro.numerics import default_policy, mode_names
 
-    return [default_policy(m, border=2, rank=2 if m == "amr_lowrank" else 0)
-            for m in mode_names()]
+    return [default_policy(m, border=2) for m in mode_names()]
 
 
 def _tiny_cfg(numerics):

@@ -1,0 +1,22 @@
+#!/usr/bin/env python
+"""Thin wrapper over the numerics-invariant lint pass (repro.analysis.lint).
+
+Exists so the pass runs without an installed package or PYTHONPATH:
+
+  python scripts/lint_repro.py [paths...] [--rules RPL002,RPL006]
+
+Equivalent to ``PYTHONPATH=src python -m repro.analysis`` and to the
+``repro-lint`` console script of an installed checkout.  docs/analysis.md
+has the rule catalog and allowlist format.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.analysis.lint import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,30 @@
+"""Static analysis for the repo's numerics invariants.
+
+Two engines (docs/analysis.md):
+
+  * ``lint`` — AST-level rules with stable IDs (RPL001..RPL006) enforcing
+    the invariants that previously lived only as runtime guards or reviewer
+    lore: no mode-name string matching outside ``numerics/``, no raw
+    ``jax.random.PRNGKey`` outside ``numerics/context.py``, no unlabeled
+    dense/approx-matmul call sites, no array constants captured in Pallas
+    kernel bodies, no ``lru_cache`` over array-taking functions, no
+    non-atomic persistent writes bypassing the ``.tmp``+rename protocol.
+    Deliberate exceptions go in the committed ``.analysis-allowlist``.
+  * ``trace_contract`` — traces the REAL jitted train / prefill / serve
+    decode steps per config family x numerics mode and statically checks
+    the closed jaxprs: retrace stability (the ``_cache_size() == 1``
+    serving property, proven structurally), PRNG provenance (every random
+    primitive derives from a ``numerics_scope``-folded key), decode-cache
+    donation actually aliased in the lowering, and the int32-saturation
+    proof over every registered schedule.
+
+Run ``python -m repro.analysis`` (lint) / ``python -m repro.analysis trace``
+— both are wired into the CI ``analysis`` job and exit non-zero on any
+finding.
+"""
+from .lint import Finding, Rule, load_allowlist, run_lint
+from .trace_contract import (ContractFinding, run_trace_contracts,
+                             saturation_report)
+
+__all__ = ["Finding", "Rule", "run_lint", "load_allowlist",
+           "ContractFinding", "run_trace_contracts", "saturation_report"]

@@ -1,0 +1,27 @@
+"""``python -m repro.analysis`` — lint by default, ``trace`` subcommand.
+
+  python -m repro.analysis                # lint pass (RPL001..), stdlib-only
+  python -m repro.analysis lint [...]     # same, explicit
+  python -m repro.analysis trace [...]    # jaxpr trace contracts (imports jax)
+
+Arguments after the subcommand go to that engine's own argparse
+(``--allowlist``/``--rules`` for lint, ``--full``/``--out`` for trace).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] == "trace":
+        from .trace_contract import main as trace_main
+        return trace_main(argv[1:])
+    if argv and argv[0] == "lint":
+        argv = argv[1:]
+    from .lint import main as lint_main
+    return lint_main(argv)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,526 @@
+"""Numerics-invariant lint pass: AST rules with stable IDs (RPL001..).
+
+Each rule encodes one invariant the repo used to enforce only at runtime
+or by review (docs/analysis.md has the full catalog with rationale):
+
+  RPL001  mode-name string matching outside ``numerics/`` — dispatch and
+          sweep construction must go through the mode registry
+          (``mode_names`` / ``is_exact_mode`` / ``default_policy``).
+  RPL002  raw ``jax.random.PRNGKey`` outside ``numerics/context.py`` — the
+          PR 4 PRNG-reuse bug class; keys derive from ``root_key`` /
+          ``noise_key`` so step/layer/site folding can't be bypassed.
+  RPL003  ``dense``/``approx_matmul`` call sites without a ``site=`` label —
+          unlabeled sites are invisible to audit traces, per-site policy
+          resolution and the PRNG decorrelation fold.
+  RPL004  array constants captured by a Pallas kernel body's closure —
+          Pallas lowers captured arrays as baked constants; they must
+          arrive as refs (whole-block inputs) instead.
+  RPL005  ``functools.lru_cache`` on a function taking array arguments —
+          the PR 2 tracer-caching bug class (tracers hash by object
+          identity; caching them leaks traces across jaxpr scopes).
+  RPL006  persistent writes bypassing the ``.tmp``+rename protocol — a
+          crash mid-write must never leave a torn artifact at the real
+          path (``ckpt/checkpoint.py`` is the reference implementation).
+
+Pure stdlib (no jax import): the pass parses, never executes.  Deliberate
+exceptions live in the committed ``.analysis-allowlist``, keyed on
+``(rule, path, enclosing qualname)`` — line-number free so entries survive
+unrelated churn.  Run as ``python -m repro.analysis`` /
+``scripts/lint_repro.py`` / the ``repro-lint`` console script.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import dataclasses
+import sys
+from pathlib import Path
+from typing import Iterable, Iterator
+
+__all__ = ["Finding", "Rule", "RULES", "run_lint", "load_allowlist", "main"]
+
+# Directories scanned relative to the repo root (tests/ is excluded: rule
+# fixtures and runtime-guard pokes live there on purpose).
+SCAN_DIRS = ("src", "benchmarks", "scripts", "examples")
+
+# Names whose presence as an lru_cache'd parameter marks the function as
+# array-taking (exact match, conventional jax/numpy operand names).
+_ARRAYISH_PARAMS = frozenset({
+    "a", "b", "x", "y", "xs", "ys", "arr", "array", "ia", "ib", "qa", "qb",
+    "tokens", "batch", "params", "weights", "operands", "grads",
+})
+_ARRAYISH_ANNOTATIONS = ("ndarray", "jax.Array", "jnp.", "ArrayLike",
+                         "DeviceArray")
+
+# Array-constructor attributes on numpy/jax.numpy roots (RPL004).
+_ARRAY_CTORS = frozenset({
+    "array", "asarray", "zeros", "ones", "full", "arange", "linspace", "eye",
+    "empty", "zeros_like", "ones_like", "full_like",
+})
+_ARRAY_ROOTS = frozenset({"np", "numpy", "jnp"})
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str       # stable rule ID, e.g. "RPL002"
+    path: str       # repo-relative posix path
+    line: int
+    col: int
+    qualname: str   # enclosing def/class qualname, or "<module>"
+    message: str
+
+    def key(self) -> tuple[str, str, str]:
+        """The allowlist key: line-number free so entries survive edits
+        elsewhere in the file."""
+        return (self.rule, self.path, self.qualname)
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: {self.rule} "
+                f"[{self.qualname}] {self.message}")
+
+
+class _FileContext:
+    """Parsed file + parent links and qualname resolution for rule checks."""
+
+    def __init__(self, rel: str, source: str, tree: ast.Module):
+        self.rel = rel
+        self.source = source
+        self.tree = tree
+        self.parents: dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(tree):
+            for child in ast.iter_child_nodes(node):
+                self.parents[child] = node
+
+    def qualname(self, node: ast.AST) -> str:
+        parts: list[str] = []
+        cur: ast.AST | None = node
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.ClassDef)):
+                parts.append(cur.name)
+            cur = self.parents.get(cur)
+        return ".".join(reversed(parts)) or "<module>"
+
+    def enclosing_scopes(self, node: ast.AST) -> list[ast.AST]:
+        """Function scopes enclosing ``node`` (innermost first), then the
+        module — the chain a closure resolves free names against."""
+        scopes: list[ast.AST] = []
+        cur = self.parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Module)):
+                scopes.append(cur)
+            cur = self.parents.get(cur)
+        return scopes
+
+    def finding(self, rule: "Rule", node: ast.AST, message: str) -> Finding:
+        return Finding(rule.id, self.rel, getattr(node, "lineno", 0),
+                       getattr(node, "col_offset", 0), self.qualname(node),
+                       message)
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """``jax.random.PRNGKey``-style dotted name of a Name/Attribute chain."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class Rule:
+    """One lint rule: stable ID, path scope, and a per-file check."""
+
+    id: str = "RPL000"
+    title: str = ""
+    include: tuple[str, ...] = ("src/",)
+    exclude: tuple[str, ...] = ()
+
+    def applies_to(self, rel: str) -> bool:
+        return (any(rel.startswith(p) for p in self.include)
+                and not any(rel.startswith(p) for p in self.exclude))
+
+    def check(self, ctx: _FileContext) -> Iterator[Finding]:
+        raise NotImplementedError
+
+
+class ModeStringRule(Rule):
+    """RPL001: mode-name string literals in comparisons outside numerics/."""
+
+    id = "RPL001"
+    title = "mode-name string matching outside numerics/"
+    include = ("src/", "benchmarks/", "scripts/", "examples/")
+    exclude = ("src/repro/numerics/",)
+
+    @staticmethod
+    def _mode_ident(node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            low = node.id.lower()
+            return low in ("m", "modes") or "mode" in low
+        if isinstance(node, ast.Attribute):
+            return "mode" in node.attr.lower()
+        return False
+
+    @classmethod
+    def _literals(cls, node: ast.AST) -> Iterator[str]:
+        if isinstance(node, ast.Constant) and isinstance(node.value, str):
+            yield node.value
+        elif isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            for elt in node.elts:
+                yield from cls._literals(elt)
+
+    def check(self, ctx: _FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Compare):
+                continue
+            if not any(isinstance(op, (ast.Eq, ast.NotEq, ast.In, ast.NotIn))
+                       for op in node.ops):
+                continue
+            operands = [node.left, *node.comparators]
+            lits = [s for op in operands for s in self._literals(op)]
+            amr = [s for s in lits if s.startswith("amr_")]
+            exact = "exact" in lits and any(self._mode_ident(op)
+                                            for op in operands)
+            if amr or exact:
+                what = amr[0] if amr else "exact"
+                yield ctx.finding(
+                    self, node,
+                    f"comparison against mode name {what!r}: dispatch on the "
+                    f"registry instead (mode_names / is_exact_mode / "
+                    f"default_policy)")
+
+
+class RawPrngRule(Rule):
+    """RPL002: raw jax.random.PRNGKey outside numerics/context.py."""
+
+    id = "RPL002"
+    title = "raw jax.random.PRNGKey outside numerics/context.py"
+    include = ("src/",)
+    exclude = ("src/repro/numerics/context.py",)
+
+    def check(self, ctx: _FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = _dotted(node.func)
+            if dotted and (dotted == "PRNGKey"
+                           or dotted.endswith("random.PRNGKey")):
+                yield ctx.finding(
+                    self, node,
+                    "raw PRNGKey creation: derive keys from "
+                    "numerics.context.root_key (or noise_key) so step/layer/"
+                    "site folding cannot be bypassed")
+
+
+class UnlabeledSiteRule(Rule):
+    """RPL003: dense/approx_matmul call sites without a site label."""
+
+    id = "RPL003"
+    title = "dense/approx_matmul call without site= label"
+    include = ("src/",)
+    exclude = ("src/repro/numerics/",)
+
+    def check(self, ctx: _FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = _dotted(node.func)
+            name = dotted.rsplit(".", 1)[-1] if dotted else None
+            if name not in ("dense", "approx_matmul"):
+                continue
+            if any(kw.arg == "site" for kw in node.keywords):
+                continue
+            if name == "dense" and len(node.args) >= 4:  # positional site
+                continue
+            yield ctx.finding(
+                self, node,
+                f"{name} call without site=: unlabeled sites are invisible "
+                f"to audit traces, per-site policies and the PRNG "
+                f"decorrelation fold")
+
+
+class PallasCapturedConstRule(Rule):
+    """RPL004: array constants captured by a Pallas kernel body closure."""
+
+    id = "RPL004"
+    title = "array constant captured in a Pallas kernel body"
+    include = ("src/",)
+
+    @staticmethod
+    def _is_kernel_def(node: ast.AST) -> bool:
+        if not isinstance(node, ast.FunctionDef):
+            return False
+        refs = [a for a in node.args.args if a.arg.endswith("_ref")]
+        return len(refs) >= 2
+
+    @staticmethod
+    def _local_names(fn: ast.FunctionDef) -> set[str]:
+        names = {a.arg for a in (fn.args.posonlyargs + fn.args.args
+                                 + fn.args.kwonlyargs)}
+        for extra in (fn.args.vararg, fn.args.kwarg):
+            if extra is not None:
+                names.add(extra.arg)
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+                names.add(node.id)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.ClassDef)) and node is not fn:
+                names.add(node.name)
+            elif isinstance(node, (ast.Import, ast.ImportFrom)):
+                for alias in node.names:
+                    names.add((alias.asname or alias.name).split(".")[0])
+        return names
+
+    @staticmethod
+    def _array_ctor_call(node: ast.AST) -> bool:
+        if not isinstance(node, ast.Call):
+            return False
+        dotted = _dotted(node.func)
+        if not dotted or "." not in dotted:
+            return False
+        root, attr = dotted.split(".", 1)
+        return root in _ARRAY_ROOTS and attr.rsplit(".", 1)[-1] in _ARRAY_CTORS
+
+    def check(self, ctx: _FileContext) -> Iterator[Finding]:
+        if "pallas" not in ctx.source:
+            return
+        for node in ast.walk(ctx.tree):
+            if not self._is_kernel_def(node):
+                continue
+            local = self._local_names(node)
+            free = {n.id for n in ast.walk(node)
+                    if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)
+                    and n.id not in local}
+            for scope in ctx.enclosing_scopes(node):
+                for stmt in ast.walk(scope):
+                    if not isinstance(stmt, ast.Assign):
+                        continue
+                    targets = [t.id for t in stmt.targets
+                               if isinstance(t, ast.Name)]
+                    hits = [t for t in targets if t in free]
+                    if hits and self._array_ctor_call(stmt.value):
+                        yield ctx.finding(
+                            self, node,
+                            f"kernel body {node.name!r} closes over array "
+                            f"constant {hits[0]!r} (bound at line "
+                            f"{stmt.lineno}): Pallas bakes captured arrays "
+                            f"into the lowering — pass it as a whole-block "
+                            f"ref input instead")
+
+
+class LruCacheArrayRule(Rule):
+    """RPL005: functools.lru_cache on functions taking array arguments."""
+
+    id = "RPL005"
+    title = "lru_cache on an array-taking function"
+    include = ("src/",)
+
+    @staticmethod
+    def _is_cache_decorator(dec: ast.AST) -> bool:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        dotted = _dotted(target) or ""
+        return dotted.rsplit(".", 1)[-1] in ("lru_cache", "cache")
+
+    def check(self, ctx: _FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not any(self._is_cache_decorator(d) for d in node.decorator_list):
+                continue
+            for arg in (node.args.posonlyargs + node.args.args
+                        + node.args.kwonlyargs):
+                ann = ast.unparse(arg.annotation) if arg.annotation else ""
+                if (arg.arg in _ARRAYISH_PARAMS
+                        or any(m in ann for m in _ARRAYISH_ANNOTATIONS)):
+                    yield ctx.finding(
+                        self, node,
+                        f"lru_cache on {node.name!r} whose parameter "
+                        f"{arg.arg!r} looks array-valued: tracers hash by "
+                        f"identity and caching them leaks traces across "
+                        f"jaxpr scopes (the PR 2 bug class); key on static "
+                        f"metadata instead")
+                    break
+
+
+class NonAtomicWriteRule(Rule):
+    """RPL006: persistent writes bypassing the .tmp+rename protocol."""
+
+    id = "RPL006"
+    title = "non-atomic persistent write"
+    include = ("src/",)
+    exclude = ("src/repro/ckpt/checkpoint.py",)  # the protocol itself
+
+    _WRITE_ATTRS = ("write_text", "write_bytes")
+    _SAVE_FNS = ("save", "savez", "savez_compressed")
+
+    def _path_expr(self, node: ast.Call) -> ast.AST | None:
+        dotted = _dotted(node.func)
+        if isinstance(node.func, ast.Attribute):
+            if node.func.attr in self._WRITE_ATTRS:
+                return node.func.value
+            if (dotted and dotted.split(".", 1)[0] in ("np", "numpy")
+                    and node.func.attr in self._SAVE_FNS and node.args):
+                return node.args[0]
+        if dotted == "open" and node.args:
+            mode = None
+            if len(node.args) >= 2:
+                mode = node.args[1]
+            for kw in node.keywords:
+                if kw.arg == "mode":
+                    mode = kw.value
+            if (isinstance(mode, ast.Constant) and isinstance(mode.value, str)
+                    and mode.value[:1] in ("w", "a", "x")):
+                return node.args[0]
+        return None
+
+    def check(self, ctx: _FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            path_expr = self._path_expr(node)
+            if path_expr is None:
+                continue
+            if "tmp" in ast.unparse(path_expr).lower():
+                continue  # the .tmp half of a tmp+rename pair
+            yield ctx.finding(
+                self, node,
+                "persistent write without the .tmp+rename protocol: a crash "
+                "mid-write leaves a torn artifact at the real path — write "
+                "to '<path>.tmp' then os.replace (see ckpt/checkpoint.py)")
+
+
+RULES: tuple[Rule, ...] = (
+    ModeStringRule(), RawPrngRule(), UnlabeledSiteRule(),
+    PallasCapturedConstRule(), LruCacheArrayRule(), NonAtomicWriteRule(),
+)
+
+
+def _iter_files(root: Path, paths: Iterable[str] | None) -> Iterator[Path]:
+    if paths:
+        for p in paths:
+            p = Path(p)
+            if p.is_dir():
+                yield from sorted(p.rglob("*.py"))
+            else:
+                yield p
+        return
+    for d in SCAN_DIRS:
+        base = root / d
+        if base.is_dir():
+            yield from sorted(base.rglob("*.py"))
+
+
+def load_allowlist(path: Path) -> dict[tuple[str, str, str], str]:
+    """Parse the allowlist: ``RULE path qualname`` per line, ``#`` comments.
+
+    Returns entry -> its source line (for stale-entry reporting)."""
+    entries: dict[tuple[str, str, str], str] = {}
+    if not path.is_file():
+        return entries
+    for raw in path.read_text().splitlines():
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        parts = line.split()
+        if len(parts) != 3:
+            raise ValueError(
+                f"{path}: malformed allowlist line {raw!r} — expected "
+                f"'RULE_ID path qualname'")
+        entries[(parts[0], parts[1], parts[2])] = line
+    return entries
+
+
+def run_lint(root: Path, paths: Iterable[str] | None = None,
+             allowlist: dict | None = None,
+             rules: Iterable[str] | None = None,
+             ) -> tuple[list[Finding], list[Finding], list[str]]:
+    """Run the pass. Returns (findings, suppressed, stale_allowlist_lines)."""
+    root = Path(root)
+    allowlist = allowlist or {}
+    wanted = set(rules) if rules else None
+    active = [r for r in RULES if wanted is None or r.id in wanted]
+    findings: list[Finding] = []
+    suppressed: list[Finding] = []
+    used: set[tuple[str, str, str]] = set()
+    for file in _iter_files(root, paths):
+        try:
+            rel = file.resolve().relative_to(root.resolve()).as_posix()
+        except ValueError:
+            rel = file.as_posix()
+        if "__pycache__" in rel:
+            continue
+        source = file.read_text()
+        try:
+            tree = ast.parse(source, filename=str(file))
+        except SyntaxError as e:
+            findings.append(Finding("RPL000", rel, e.lineno or 0, 0,
+                                    "<module>", f"syntax error: {e.msg}"))
+            continue
+        ctx = _FileContext(rel, source, tree)
+        for rule in active:
+            if not rule.applies_to(rel):
+                continue
+            for f in rule.check(ctx):
+                if f.key() in allowlist:
+                    used.add(f.key())
+                    suppressed.append(f)
+                else:
+                    findings.append(f)
+    stale = [line for key, line in allowlist.items() if key not in used]
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings, suppressed, stale
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-lint", description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*",
+                    help="files/dirs to scan (default: src benchmarks "
+                         "scripts examples under --root)")
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: nearest parent of cwd with a "
+                         "pyproject.toml)")
+    ap.add_argument("--allowlist", default=None,
+                    help="allowlist file (default: <root>/.analysis-allowlist)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule IDs to run (default: all)")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in RULES:
+            print(f"{r.id}  {r.title}")
+        return 0
+
+    root = Path(args.root) if args.root else _find_root()
+    allow_path = (Path(args.allowlist) if args.allowlist
+                  else root / ".analysis-allowlist")
+    allowlist = load_allowlist(allow_path)
+    rules = args.rules.split(",") if args.rules else None
+    findings, suppressed, stale = run_lint(root, args.paths or None,
+                                           allowlist, rules)
+    for f in findings:
+        print(f.render())
+    for line in stale:
+        print(f"{allow_path}: stale allowlist entry (matches nothing): {line}")
+    n_files = "scanned"
+    print(f"repro-lint: {len(findings)} finding(s), "
+          f"{len(suppressed)} allowlisted, {len(stale)} stale "
+          f"allowlist entr(y/ies) [{n_files}: "
+          f"{', '.join(args.paths) if args.paths else ', '.join(SCAN_DIRS)}]")
+    return 1 if (findings or stale) else 0
+
+
+def _find_root() -> Path:
+    cur = Path.cwd()
+    for cand in (cur, *cur.parents):
+        if (cand / "pyproject.toml").is_file():
+            return cand
+    return cur
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,500 @@
+"""jaxpr trace-contract analyzer: structural proofs over the real steps.
+
+Traces the ACTUAL jitted computations — ``make_train_step``,
+``make_prefill_step``, ``make_serve_step`` from ``train.steps`` on the
+conformance representatives (``conformance.matrix``) — and checks the
+closed jaxprs statically, no compile or execution:
+
+  * retrace stability — tracing the step twice with DIFFERENT operand
+    values (params/state/cache abstract via ``jax.eval_shape``, inputs
+    concrete) must yield byte-identical jaxprs with value-identical
+    consts.  Baked operand data shows up as a differing const; a captured
+    Python scalar shows up as differing jaxpr text.  This is the
+    structural form of the serving engine's ``_cache_size() == 1``
+    property: if the jaxpr is invariant to operand VALUES, no
+    admit/evict/token pattern can force a retrace.
+  * PRNG provenance — every random primitive in the jaxpr must carry a
+    traceback frame through ``numerics/context.py`` (``root_key`` /
+    ``noise_key`` / the scope fold) — i.e. no key material enters a step
+    except through the blessed derivation chain (lint RPL002's dynamic
+    dual).
+  * donation — the serve decode step lowered with ``donate_argnums=(1,)``
+    must actually alias the cache buffers (``tf.aliasing_output`` in the
+    StableHLO), not silently drop the donation.
+  * int32-saturation proof — for every registered injection schedule
+    (default borders + every ``register_schedule`` handle), bound
+    ``max|product|`` symbolically from the lowered replay's bit weights,
+    cross-check against the exact ``max_abs_product``, and verify every
+    dense call site's contraction length K (collected trace-time via the
+    ``NumericsScope.shape_probe`` channel, under ``jax.eval_shape``)
+    against the ``check_accumulation_bound`` guard.  docs/analysis.md
+    derives the math.
+
+Run ``python -m repro.analysis trace [--full] [--out report.json]``.
+Everything heavier than stdlib imports lazily so ``python -m
+repro.analysis`` (the lint half) stays jax-free.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from typing import Any, Iterator
+
+__all__ = ["ContractFinding", "iter_eqns", "check_retrace_stability",
+           "check_prng_provenance", "check_donation",
+           "run_trace_contracts", "saturation_report", "main"]
+
+# Files a random primitive's traceback must pass through: the root/noise key
+# derivation (context.py) or the in-scope fold at the matmul site.
+BLESSED_PRNG_FILES = ("repro/numerics/context.py",
+                      "repro/numerics/approx_matmul.py")
+
+# Default-schedule borders the saturation proof covers.
+QUICK_BORDERS = (8,)                      # the conformance BORDER
+FULL_BORDERS = (4, 5, 6, 7, 8, 9, 10)     # the DSE sweep range
+
+INT32_LIMIT = 2**31
+
+
+@dataclasses.dataclass(frozen=True)
+class ContractFinding:
+    contract: str   # "retrace" | "prng" | "donation" | "saturation"
+    where: str      # e.g. "gemma3-1b/amr_noise/train"
+    message: str
+
+    def render(self) -> str:
+        return f"{self.where}: [{self.contract}] {self.message}"
+
+
+# --------------------------------------------------------------------------
+# jaxpr plumbing
+# --------------------------------------------------------------------------
+
+def _sub_jaxprs(eqn) -> Iterator[Any]:
+    for val in eqn.params.values():
+        vals = val if isinstance(val, (tuple, list)) else (val,)
+        for v in vals:
+            inner = getattr(v, "jaxpr", None)  # ClosedJaxpr
+            if inner is not None and hasattr(inner, "eqns"):
+                yield inner
+            elif hasattr(v, "eqns"):           # bare Jaxpr
+                yield v
+
+
+def iter_eqns(jaxpr) -> Iterator[Any]:
+    """All equations of a (Closed)Jaxpr, recursing into scan/cond/pjit/
+    while bodies via params."""
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for sub in _sub_jaxprs(eqn):
+            yield from iter_eqns(sub)
+
+
+def _is_random_prim(eqn) -> bool:
+    name = eqn.primitive.name
+    return name.startswith("random_") or name.startswith("threefry")
+
+
+def _frame_files(eqn) -> list[str]:
+    tb = getattr(eqn.source_info, "traceback", None)
+    if tb is None:
+        return []
+    return [f.file_name.replace("\\", "/") for f in tb.frames]
+
+
+# --------------------------------------------------------------------------
+# contracts
+# --------------------------------------------------------------------------
+
+def _normalized(jaxpr) -> str:
+    """jaxpr text with object addresses scrubbed.
+
+    ``custom_vjp_call_jaxpr`` params repr their bwd thunks as
+    ``<function ... at 0x...>`` — fresh objects per trace, so raw text
+    comparison would flag every custom-vjp mode as unstable.  Addresses
+    never encode operand values; scrubbing them cannot mask a real leak.
+    """
+    import re
+
+    return re.sub(r"0x[0-9a-fA-F]+", "0x", str(jaxpr))
+
+
+def check_retrace_stability(fn, args_a, args_b, where: str,
+                            ) -> list[ContractFinding]:
+    """Trace ``fn`` under two operand bindings; the jaxprs must be
+    structurally identical AND their consts value-identical.
+
+    ``args_a``/``args_b`` share every shape/dtype and differ only in
+    VALUES (abstract leaves may be ``jax.ShapeDtypeStruct``).  A text diff
+    means a Python scalar / control-flow decision leaked into the trace; a
+    const diff means operand DATA was baked in (the classic
+    ``np.asarray(python_list)`` closure) — either one forces a recompile
+    per distinct value at runtime.
+    """
+    import jax
+    import numpy as np
+
+    # A fresh wrapper per trace: jax caches traces on (callable, avals) and
+    # the two bindings share avals by construction, so tracing ``fn``
+    # directly would return the FIRST jaxpr twice and prove nothing.
+    ja = jax.make_jaxpr(lambda *a: fn(*a))(*args_a)
+    jb = jax.make_jaxpr(lambda *a: fn(*a))(*args_b)
+    findings: list[ContractFinding] = []
+    if _normalized(ja) != _normalized(jb):
+        findings.append(ContractFinding(
+            "retrace", where,
+            "jaxpr structure differs across operand bindings — a Python "
+            "value (scalar, shape, branch) from the operands is baked into "
+            "the trace; every distinct value will recompile"))
+        return findings  # const lists are not comparable across structures
+    ca, cb = ja.consts, jb.consts
+    if len(ca) != len(cb):
+        findings.append(ContractFinding(
+            "retrace", where,
+            f"const count differs across bindings ({len(ca)} vs {len(cb)})"))
+        return findings
+    for i, (a, b) in enumerate(zip(ca, cb)):
+        a, b = np.asarray(a), np.asarray(b)
+        if a.dtype != b.dtype or a.shape != b.shape or not np.array_equal(a, b):
+            findings.append(ContractFinding(
+                "retrace", where,
+                f"baked operand data: const #{i} (shape {a.shape}, "
+                f"{a.dtype}) differs across operand bindings — an input "
+                f"value was captured as a trace constant instead of being "
+                f"passed as an argument"))
+    return findings
+
+
+def check_prng_provenance(jaxpr, where: str, *, require_random: bool = False,
+                          ) -> list[ContractFinding]:
+    """Every random primitive must trace back through the blessed key
+    derivation (``numerics/context.py`` / the scope fold in
+    ``approx_matmul``); with ``require_random`` the jaxpr must contain at
+    least one (a noise arm that traced no PRNG is silently exact)."""
+    findings: list[ContractFinding] = []
+    n_random = 0
+    for eqn in iter_eqns(jaxpr):
+        if not _is_random_prim(eqn):
+            continue
+        n_random += 1
+        files = _frame_files(eqn)
+        if not files:
+            findings.append(ContractFinding(
+                "prng", where,
+                f"random primitive {eqn.primitive.name!r} carries no "
+                f"traceback — provenance unverifiable"))
+        elif not any(f.endswith(BLESSED_PRNG_FILES) for f in files):
+            origin = next((f for f in files if "/repro/" in f), files[-1])
+            findings.append(ContractFinding(
+                "prng", where,
+                f"random primitive {eqn.primitive.name!r} does not derive "
+                f"from the numerics key chain (deepest repro frame: "
+                f"{origin}) — keys must come from root_key/noise_key so "
+                f"step/layer/site folding applies"))
+    if require_random and n_random == 0:
+        findings.append(ContractFinding(
+            "prng", where,
+            "expected PRNG primitives in this arm but the jaxpr has none — "
+            "the noise path traced as exact"))
+    return findings
+
+
+def count_random_prims(jaxpr) -> int:
+    return sum(1 for e in iter_eqns(jaxpr) if _is_random_prim(e))
+
+
+def check_donation(fn, donate_argnums, args, where: str,
+                   ) -> list[ContractFinding]:
+    """Lower ``fn`` with the given donation and verify the StableHLO
+    actually aliases at least one input buffer to an output
+    (``tf.aliasing_output``) — jit silently drops undonatable args."""
+    import jax
+
+    text = jax.jit(fn, donate_argnums=donate_argnums).lower(*args).as_text()
+    if "tf.aliasing_output" not in text:
+        return [ContractFinding(
+            "donation", where,
+            f"donate_argnums={donate_argnums} produced no aliased output "
+            f"buffer in the lowering — the donation is being dropped and "
+            f"the decode cache is double-buffered")]
+    return []
+
+
+# --------------------------------------------------------------------------
+# the arm driver: real steps on the conformance representatives
+# --------------------------------------------------------------------------
+
+def _trace_arms(quick: bool) -> list[tuple[str, str]]:
+    """(arch, mode) grid: quick = every mode on the dense representative +
+    the load-bearing approximate mode on every other representative; full =
+    the whole representative x mode grid (nightly)."""
+    from repro.conformance.matrix import REPRESENTATIVE
+    from repro.numerics import mode_names
+
+    reps = list(REPRESENTATIVE.values())
+    dense = REPRESENTATIVE["dense"]
+    if quick:
+        arms = [(dense, m) for m in mode_names()]
+        arms += [(a, "amr_inject") for a in reps if a != dense]
+        return arms
+    return [(a, m) for a in reps for m in mode_names()]
+
+
+def _serve_binding(cfg, batch_size: int, capacity: int, seed: int):
+    """(cache_sds, batch) for one decode step, mirroring ServeEngine:
+    per-slot cache, token + active-mask operands (concrete, seed-varied)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.models import init_cache
+
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, batch_size, capacity, per_slot=True))
+    rng = np.random.default_rng(seed)
+    batch: dict[str, Any] = {
+        "token": jnp.asarray(
+            rng.integers(0, cfg.vocab, (batch_size, 1)), jnp.int32),
+        "active": jnp.asarray(rng.integers(0, 2, (batch_size,)) > 0),
+    }
+    if cfg.encoder_layers:
+        batch["enc_out"] = jax.ShapeDtypeStruct(
+            (batch_size, cfg.encoder_frames, cfg.d_model),
+            jnp.dtype(cfg.dtype))
+    return cache, batch
+
+
+def _strip_targets(batch: dict) -> dict:
+    return {k: v for k, v in batch.items() if k != "targets"}
+
+
+def run_arm(arch: str, mode: str, *, batch: int = 2, seq: int = 8,
+            capacity: int = 16) -> tuple[list[ContractFinding], dict]:
+    """All trace contracts for one (arch, mode) arm. Returns
+    (findings, record) — the record goes into the JSON report."""
+    import jax
+
+    from repro.conformance.matrix import make_inputs, tiny_config
+    from repro.launch.specs import abstract_params, abstract_train_state
+    from repro.train.steps import (make_prefill_step, make_serve_step,
+                                   make_train_step)
+
+    cfg = tiny_config(arch, mode)
+    findings: list[ContractFinding] = []
+    where = f"{arch}/{mode}"
+
+    # --- train step: abstract state, concrete batches from two seeds
+    state = abstract_train_state(cfg)
+    train_step = make_train_step(cfg, total_steps=4)
+    b0, b1 = make_inputs(cfg, batch, seq, 0), make_inputs(cfg, batch, seq, 1)
+    findings += check_retrace_stability(
+        train_step, (state, b0), (state, b1), f"{where}/train")
+    train_jaxpr = jax.make_jaxpr(train_step)(state, b0)
+    findings += check_prng_provenance(train_jaxpr, f"{where}/train")
+
+    # --- prefill step
+    params = abstract_params(cfg)
+    prefill_step = make_prefill_step(cfg)
+    findings += check_retrace_stability(
+        prefill_step, (params, _strip_targets(b0)),
+        (params, _strip_targets(b1)), f"{where}/prefill")
+
+    # --- serve decode step: stability + provenance + donation
+    serve_step = make_serve_step(cfg)
+    cache, sb0 = _serve_binding(cfg, batch, capacity, 0)
+    _, sb1 = _serve_binding(cfg, batch, capacity, 1)
+    findings += check_retrace_stability(
+        serve_step, (params, cache, sb0), (params, cache, sb1),
+        f"{where}/serve")
+    serve_jaxpr = jax.make_jaxpr(serve_step)(params, cache, sb0)
+    findings += check_prng_provenance(serve_jaxpr, f"{where}/serve")
+    findings += check_donation(serve_step, (1,), (params, cache, sb0),
+                               f"{where}/serve")
+
+    record = {
+        "arch": arch, "mode": mode,
+        "train_eqns": sum(1 for _ in iter_eqns(train_jaxpr)),
+        "serve_eqns": sum(1 for _ in iter_eqns(serve_jaxpr)),
+        "train_random_prims": count_random_prims(train_jaxpr),
+        "serve_random_prims": count_random_prims(serve_jaxpr),
+        "findings": [f.render() for f in findings],
+    }
+    return findings, record
+
+
+# --------------------------------------------------------------------------
+# int32-saturation proof
+# --------------------------------------------------------------------------
+
+def _symbolic_bound(inj) -> int:
+    """Bound max|product| from the lowered replay's bit weights alone.
+
+    A replayed value is ``sum(bits * bit_weights) - offset_total`` with
+    ``bits in {0, 1}``, so it lies in ``[-offset_total,
+    sum(bit_weights) - offset_total]`` and ``max|value| <=
+    max(|offset_total|, |sum(bit_weights) - offset_total|)`` — no product
+    enumeration needed.  Conservative (docs/analysis.md quantifies the
+    slack vs the exact ``max_abs_product``); soundness (symbolic >= exact)
+    is itself checked per schedule.
+    """
+    bw_sum = int(inj.lowered.bit_weights.sum())
+    ot = int(inj.lowered.offset_total)
+    return max(abs(ot), abs(bw_sum - ot))
+
+
+def collect_site_ks(archs, *, batch: int = 2, seq: int = 8,
+                    capacity: int = 16) -> dict[str, int]:
+    """Max contraction length K per dense call site across the given
+    archs' train/prefill/serve computations — collected trace-time via the
+    ``NumericsScope.shape_probe`` channel under ``jax.eval_shape`` (no
+    compile, no execution)."""
+    import jax
+
+    from repro.conformance.matrix import make_inputs, tiny_config
+    from repro.launch.specs import abstract_params, abstract_train_state
+    from repro.numerics import numerics_scope
+    from repro.train.steps import (make_prefill_step, make_serve_step,
+                                   make_train_step)
+
+    probe: list[dict] = []
+    for arch in archs:
+        cfg = tiny_config(arch, "amr_inject")
+        b0 = make_inputs(cfg, batch, seq, 0)
+        cache, sb0 = _serve_binding(cfg, batch, capacity, 0)
+        with numerics_scope(shape_probe=probe):
+            jax.eval_shape(make_train_step(cfg, total_steps=4),
+                           abstract_train_state(cfg), b0)
+            params = abstract_params(cfg)
+            jax.eval_shape(make_prefill_step(cfg), params, _strip_targets(b0))
+            jax.eval_shape(make_serve_step(cfg), params, cache, sb0)
+    ks: dict[str, int] = {}
+    for rec in probe:
+        ks[rec["site"]] = max(ks.get(rec["site"], 0), rec["k"])
+    return ks
+
+
+def saturation_report(archs, *, borders=QUICK_BORDERS,
+                      ) -> tuple[list[ContractFinding], dict]:
+    """Per-schedule int32-saturation proof over every default-border design
+    point in ``borders`` AND every ``register_schedule`` handle live in
+    this process (100% registry coverage by construction)."""
+    from repro.core import engine
+    from repro.numerics import injection
+
+    site_ks = collect_site_ks(archs)
+    max_site_k = max(site_ks.values(), default=0)
+    entries: list[tuple[str, Any]] = []
+    for b in borders:
+        inj = engine.get_injector(2, b)
+        entries.append((injection.schedule_label(inj), inj))
+    registered = sorted(injection._SCHEDULES)
+    for handle in registered:
+        shim = type("_Ref", (), {"schedule_ref": handle, "border": None})()
+        entries.append((handle, injection.get_injector(shim)))
+
+    findings: list[ContractFinding] = []
+    rows = []
+    for handle, inj in entries:
+        sym = _symbolic_bound(inj)
+        exact = int(inj.max_abs_product)
+        max_safe_k = (INT32_LIMIT - 1) // exact
+        proved = max_site_k * exact < INT32_LIMIT
+        rows.append({
+            "schedule": handle,
+            "symbolic_bound": sym,
+            "exact_bound": exact,
+            "symbolic_slack": round(sym / exact, 2) if exact else None,
+            "max_safe_k_exact": max_safe_k,
+            "max_safe_k_symbolic": (INT32_LIMIT - 1) // sym if sym else None,
+            "max_site_k": max_site_k,
+            "proved": proved,
+        })
+        if sym < exact:
+            findings.append(ContractFinding(
+                "saturation", handle,
+                f"symbolic bound {sym} < exact max|product| {exact} — the "
+                f"bit-weight bound is unsound for this schedule"))
+        if not proved:
+            findings.append(ContractFinding(
+                "saturation", handle,
+                f"max site K={max_site_k} x max|product|={exact} = "
+                f"{max_site_k * exact} >= 2**31: the runtime guard "
+                f"(check_accumulation_bound) WILL reject this schedule at "
+                f"K={max_site_k}; keep K <= {max_safe_k}"))
+    report = {
+        "sites": dict(sorted(site_ks.items())),
+        "max_site_k": max_site_k,
+        "schedules": rows,
+        "registered_handles": registered,
+        "default_borders": list(borders),
+        "all_proved": all(r["proved"] for r in rows),
+    }
+    return findings, report
+
+
+# --------------------------------------------------------------------------
+# driver
+# --------------------------------------------------------------------------
+
+def run_trace_contracts(*, quick: bool = True,
+                        ) -> tuple[list[ContractFinding], dict]:
+    """The full analyzer: all arms + the saturation proof. Returns
+    (findings, report)."""
+    from repro.conformance.matrix import REPRESENTATIVE
+
+    findings: list[ContractFinding] = []
+    records = []
+    for arch, mode in _trace_arms(quick):
+        f, rec = run_arm(arch, mode)
+        findings += f
+        records.append(rec)
+
+    dense = REPRESENTATIVE["dense"]
+    archs = [dense] if quick else list(REPRESENTATIVE.values())
+    sat_findings, sat = saturation_report(
+        archs, borders=QUICK_BORDERS if quick else FULL_BORDERS)
+    findings += sat_findings
+
+    report = {
+        "schema": "analysis_trace/v1",
+        "quick": quick,
+        "arms": records,
+        "saturation": sat,
+        "n_findings": len(findings),
+        "findings": [f.render() for f in findings],
+    }
+    return findings, report
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis trace",
+        description=__doc__.splitlines()[0])
+    ap.add_argument("--full", action="store_true",
+                    help="full representative x mode grid + the DSE border "
+                         "sweep (nightly); default is the quick CI arm set")
+    ap.add_argument("--out", default=None,
+                    help="write the JSON report here (artifact-friendly)")
+    args = ap.parse_args(argv)
+
+    findings, report = run_trace_contracts(quick=not args.full)
+    for f in findings:
+        print(f.render())
+    if args.out:
+        with open(args.out + ".tmp", "w") as fh:
+            json.dump(report, fh, indent=1)
+        import os
+        os.replace(args.out + ".tmp", args.out)
+        print(f"report: {args.out}")
+    n_arms = len(report["arms"])
+    print(f"trace-contract: {n_arms} arm(s), "
+          f"{len(report['saturation']['schedules'])} schedule(s) in the "
+          f"saturation proof, {len(findings)} finding(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -45,6 +45,7 @@ from repro.numerics import (
     AuditTrace,
     mode_names,
     numerics_scope,
+    root_key,
 )
 from repro.train.steps import loss_fn, make_train_state, make_train_step
 
@@ -140,7 +141,7 @@ def run_train_arm(arch: str, mode: str, *, steps: int = 2, batch: int = 2,
                   seq: int = 8, seed: int = 0, **policy_kw: Any) -> dict:
     """A few real optimizer steps; finiteness + non-degeneracy invariants."""
     cfg = tiny_config(arch, mode, **policy_kw)
-    state = make_train_state(cfg, jax.random.PRNGKey(seed))
+    state = make_train_state(cfg, root_key(seed))
     train_step = jax.jit(make_train_step(cfg, total_steps=max(steps, 2)))
     batch0 = make_inputs(cfg, batch, seq, seed)
 
@@ -178,7 +179,7 @@ def run_inject_audit(arch: str, *, schedule_ref: str | None = None,
     """amr_inject forward under the audit scope: every dense call site's
     output compared against the LUT-gather oracle (grid-step units)."""
     cfg = tiny_config(arch, "amr_inject", schedule_ref=schedule_ref)
-    params = init_params(cfg, jax.random.PRNGKey(seed))
+    params = init_params(cfg, root_key(seed))
     inputs = make_inputs(cfg, batch, seq, seed)
     trace = AuditTrace()
 
@@ -209,7 +210,7 @@ def run_decode_parity(arch: str, mode: str, *, seq: int = 12, batch: int = 2,
         return {"kind": "decode_parity", "arch": arch, "mode": mode,
                 "applicable": False, "within_tol": True, "parity_diff": 0.0}
     cfg = tiny_config(arch, mode, **policy_kw)
-    params = init_params(cfg, jax.random.PRNGKey(seed))
+    params = init_params(cfg, root_key(seed))
     inputs = make_inputs(cfg, batch, seq, seed)
     toks, extra = inputs["tokens"], inputs.get("extra")
     enc_out = encode(cfg, params, extra) if cfg.encoder_layers else None
@@ -232,7 +233,7 @@ def run_noise_decorrelation(arch: str, *, batch: int = 2, seq: int = 8,
     """amr_noise must differ across step coordinates and reproduce within
     one — the scope fold is doing its job at model scale."""
     cfg = tiny_config(arch, "amr_noise")
-    params = init_params(cfg, jax.random.PRNGKey(seed))
+    params = init_params(cfg, root_key(seed))
     inputs = make_inputs(cfg, batch, seq, seed)
 
     @jax.jit
@@ -280,7 +281,7 @@ def _build_loop(cfg: ModelConfig, ckpt_dir, data: SyntheticLM, losses: list,
 
     loop = FaultTolerantLoop(
         ckpt_dir=ckpt_dir,
-        make_state=lambda: make_train_state(cfg, jax.random.PRNGKey(0)),
+        make_state=lambda: make_train_state(cfg, root_key(0)),
         step_fn=step_fn,
         batch_at=lambda i: {k: jnp.asarray(v) for k, v in data.batch_at(i).items()},
         ckpt_every=ckpt_every,

@@ -30,7 +30,7 @@ def inject_replay_matmul(inj: CompiledInjector, ia, ib, *,
                          bm: int | None = None, bn: int | None = None,
                          bk: int | None = None,
                          interpret: bool | None = None,
-                         packed_ib=None):
+                         packed_ib=None, schedule: str | None = None):
     """Exact integer AMR matmul on the Pallas replay kernel.
 
     ``ia``: (..., M, K) and ``ib``: (K, N) int32 operand indices
@@ -46,7 +46,7 @@ def inject_replay_matmul(inj: CompiledInjector, ia, ib, *,
 
     *lead, m, k = ia.shape
     n = ib.shape[-1]
-    check_accumulation_bound(inj, k)
+    check_accumulation_bound(inj, k, schedule=schedule)
     if bn is not None and bn % _LANE_BITS:
         # word-alignment first: clearer than pick_tiles' divisor error
         # against the padded width for a bn that divides the user's N

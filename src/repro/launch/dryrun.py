@@ -321,7 +321,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
             rec.update(status="error", error=f"{type(e).__name__}: {e}",
                        traceback=traceback.format_exc()[-2000:])
     out_dir.mkdir(parents=True, exist_ok=True)
-    (out_dir / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+    # tmp + rename: dry-run artifacts are read by sweep aggregators that may
+    # run while cells are still being written (RPL006)
+    dst = out_dir / f"{tag}.json"
+    tmp = out_dir / f"{tag}.json.tmp"
+    tmp.write_text(json.dumps(rec, indent=1))
+    os.replace(tmp, dst)
     print(f"[dryrun] {tag}: {rec['status']}"
           + (f" compile={rec.get('compile_s')}s/{rec.get('cost_compile_s', 0)}s"
              if rec.get("compile_s") else "")

@@ -30,6 +30,7 @@ from repro.configs.registry import get_config, get_reduced_config
 from repro.launch.cli import add_numerics_args, apply_pallas_interpret, numerics_from_args
 from repro.launch.mesh import make_host_mesh, mesh_context
 from repro.models import init_params
+from repro.numerics import root_key
 from repro.runtime import Heartbeat
 from repro.serve import Request, ServeEngine
 
@@ -71,7 +72,7 @@ def main(argv=None) -> None:
     hb = Heartbeat(Path(args.heartbeat)) if args.heartbeat else None
 
     with mesh_context(mesh):
-        params = init_params(cfg, jax.random.PRNGKey(args.seed))
+        params = init_params(cfg, root_key(args.seed))
         engine = ServeEngine(cfg, params, n_slots=args.slots, capacity=capacity,
                              heartbeat=hb, log=print)
         if args.warmup:

@@ -52,12 +52,14 @@ def decode_specs(cfg: ModelConfig, shape: ShapeConfig) -> tuple[Any, dict]:
 
 def abstract_params(cfg: ModelConfig) -> Any:
     from repro.models import init_params
-    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    from repro.numerics import root_key
+    return jax.eval_shape(lambda: init_params(cfg, root_key(0)))
 
 
 def abstract_train_state(cfg: ModelConfig) -> Any:
+    from repro.numerics import root_key
     from repro.train.steps import make_train_state
-    return jax.eval_shape(lambda: make_train_state(cfg, jax.random.PRNGKey(0)))
+    return jax.eval_shape(lambda: make_train_state(cfg, root_key(0)))
 
 
 def param_count(cfg: ModelConfig) -> int:

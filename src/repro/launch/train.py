@@ -23,6 +23,7 @@ from repro.configs.registry import get_config, get_reduced_config
 from repro.data import SyntheticLM
 from repro.launch.cli import add_numerics_args, apply_pallas_interpret, numerics_from_args
 from repro.launch.mesh import make_host_mesh, mesh_context
+from repro.numerics import root_key
 from repro.parallel import sharding as shard_lib
 from repro.runtime import FaultTolerantLoop, Heartbeat
 from repro.train.steps import make_train_state, make_train_step
@@ -63,7 +64,7 @@ def main(argv=None) -> None:
 
     def make_state():
         with mesh_context(mesh):
-            state = make_train_state(cfg, jax.random.PRNGKey(args.seed))
+            state = make_train_state(cfg, root_key(args.seed))
             specs = shard_lib.param_specs(mesh, state, cfg)
             sh = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                               is_leaf=lambda x: isinstance(x, P))

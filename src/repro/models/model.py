@@ -291,7 +291,8 @@ def forward(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
     numerics = cfg.numerics
     x = pin(embed(params["embed"], tokens), "batch", None, None)
     if cfg.vision_prefix and extra_embeddings is not None:
-        vis = dense(extra_embeddings, params["vision_proj"], None)
+        vis = dense(extra_embeddings, params["vision_proj"], None,
+                    site="vision.proj")
         x = jnp.concatenate([vis.astype(x.dtype), x], axis=1)
 
     enc_kv = None
@@ -536,7 +537,8 @@ def prefill_with_cache(cfg: ModelConfig, params: dict, tokens: jnp.ndarray,
     numerics = cfg.numerics
     x = pin(embed(params["embed"], tokens), "batch", None, None)
     if cfg.vision_prefix and extra_embeddings is not None:
-        vis = dense(extra_embeddings, params["vision_proj"], None)
+        vis = dense(extra_embeddings, params["vision_proj"], None,
+                    site="vision.proj")
         x = jnp.concatenate([vis.astype(x.dtype), x], axis=1)
 
     enc_out = None

@@ -12,21 +12,22 @@ assigns different design points per flat layer index / call-site label —
 the carrier for the model-level DSE (``core/dse/model_policy.py``).
 """
 from .approx_matmul import AMRNumerics, approx_matmul
-from .context import AuditTrace, current_scope, noise_key, numerics_scope
+from .context import (AuditTrace, current_scope, noise_key, numerics_scope,
+                      root_key)
 from .policy import (NumericsPolicy, PerLayerPolicy, UniformPolicy, as_policy,
                      load_policy, policy_from_json, policy_summary,
                      policy_to_json, resolve_numerics, save_policy)
 from .quant import dequantize, quantize_int8
-from .registry import (ModeSpec, default_policy, get_mode, mode_names,
-                       register_mode, validate_policy)
+from .registry import (ModeSpec, default_policy, get_mode, is_exact_mode,
+                       mode_names, register_mode, validate_policy)
 
 __all__ = ["AMRNumerics", "MODES", "approx_matmul", "quantize_int8",
            "dequantize", "numerics_scope", "current_scope", "noise_key",
-           "AuditTrace", "ModeSpec", "register_mode", "get_mode", "mode_names",
-           "validate_policy", "default_policy", "NumericsPolicy",
-           "UniformPolicy", "PerLayerPolicy", "as_policy", "resolve_numerics",
-           "policy_to_json", "policy_from_json", "save_policy", "load_policy",
-           "policy_summary"]
+           "root_key", "AuditTrace", "ModeSpec", "register_mode", "get_mode",
+           "mode_names", "is_exact_mode", "validate_policy", "default_policy",
+           "NumericsPolicy", "UniformPolicy", "PerLayerPolicy", "as_policy",
+           "resolve_numerics", "policy_to_json", "policy_from_json",
+           "save_policy", "load_policy", "policy_summary"]
 
 
 def __getattr__(name: str):

@@ -252,12 +252,14 @@ def _inject_fwd(a, b, numerics):
     qb, sb = quantize_int8_ste(b, axis=0)
     ia = jax.lax.stop_gradient(qa).astype(jnp.int32) + 128  # (..., M, K)
     ib = jax.lax.stop_gradient(qb).astype(jnp.int32) + 128  # (K, N)
+    handle = numerics.schedule_ref  # None = default design point (self-labels)
     if resolve_inject_impl(numerics.inject_impl) == "pallas":
         from repro.kernels.inject_replay import inject_replay_matmul
 
-        acc = inject_replay_matmul(inj, ia, ib)             # int32, exact
+        acc = inject_replay_matmul(inj, ia, ib, schedule=handle)  # int32, exact
     else:
-        acc = injection.injected_matmul_int(inj, ia, ib)    # int32, exact
+        acc = injection.injected_matmul_int(inj, ia, ib,
+                                            schedule=handle)      # int32, exact
     return acc.astype(jnp.float32) * sa * sb, (a, b)
 
 
@@ -398,6 +400,15 @@ def approx_matmul(
     scope = current_scope()
     if numerics is not None and not isinstance(numerics, AMRNumerics):
         numerics = numerics.resolve(site, scope.static_layer)
+    if scope.shape_probe is not None:
+        # static trace-time record (works under jax.eval_shape): the
+        # saturation proof in repro.analysis collects every site's K here
+        scope.shape_probe.append({
+            "site": site or "<unlabeled>",
+            "k": int(a.shape[-1]),
+            "mode": "exact" if numerics is None else numerics.mode,
+            "schedule": getattr(numerics, "schedule_ref", None),
+        })
     if numerics is None or numerics.is_exact():
         return matmul_exact(a, b)
     spec = registry.get_mode(numerics.mode)
@@ -479,7 +490,7 @@ def _validate_inject(nm) -> None:
 
 _EXACT_SPEC = registry.register_mode(
     "exact", lambda a, b, nm, *, key=None, site=None: matmul_exact(a, b),
-    description="jnp.einsum in the requested dtype (baseline)")
+    description="jnp.einsum in the requested dtype (baseline)", exact=True)
 
 registry.register_mode(
     "amr_lut",

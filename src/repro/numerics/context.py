@@ -46,8 +46,8 @@ import threading
 import zlib
 from typing import Any
 
-__all__ = ["numerics_scope", "current_scope", "noise_key", "NumericsScope",
-           "AuditTrace"]
+__all__ = ["numerics_scope", "current_scope", "noise_key", "root_key",
+           "NumericsScope", "AuditTrace"]
 
 
 class AuditTrace:
@@ -126,6 +126,14 @@ class NumericsScope:
     unit: Any = None   # traced int scalar (vmapped instance, e.g. expert), or None
     audit: Any = None  # AuditTrace recording oracle diffs, or None
     static_layer: int | None = None  # STATIC flat layer index (policy resolution)
+    # Trace-time call-site shape channel: a mutable list that, while in
+    # scope, receives one record per approx_matmul dispatch —
+    # {"site", "k", "mode", "schedule"} with the STATIC contraction length
+    # K.  Populated during Python tracing (works under jax.eval_shape, no
+    # compile or execution needed); the static-analysis saturation proof
+    # (repro.analysis.trace_contract) collects every call site's K this way
+    # and checks it against each schedule's accumulator bound.
+    shape_probe: Any = None
 
 
 # Thread-local scope stack: scopes are entered/exited during Python tracing
@@ -143,9 +151,10 @@ def _stack() -> list:
 
 @contextlib.contextmanager
 def numerics_scope(*, step=None, layer=None, unit=None, audit=None,
-                   static_layer=None):
+                   static_layer=None, shape_probe=None):
     """Provide step/layer/unit decorrelation values (and the optional audit
-    channel / static policy-resolution layer) to nested approx matmuls."""
+    channel / static policy-resolution layer / analysis shape probe) to
+    nested approx matmuls."""
     cur = current_scope()
     stack = _stack()
     stack.append(NumericsScope(
@@ -153,7 +162,8 @@ def numerics_scope(*, step=None, layer=None, unit=None, audit=None,
         layer=layer if layer is not None else cur.layer,
         unit=unit if unit is not None else cur.unit,
         audit=audit if audit is not None else cur.audit,
-        static_layer=static_layer if static_layer is not None else cur.static_layer))
+        static_layer=static_layer if static_layer is not None else cur.static_layer,
+        shape_probe=shape_probe if shape_probe is not None else cur.shape_probe))
     try:
         yield
     finally:
@@ -168,6 +178,22 @@ def current_scope() -> NumericsScope:
 def _site_id(site: str) -> int:
     """Static 31-bit id of a call-site label (stable across processes)."""
     return zlib.crc32(site.encode()) & 0x7FFFFFFF
+
+
+def root_key(seed: int):
+    """The blessed PRNG root: every key chain in the repo starts here.
+
+    ``jax.random.PRNGKey`` appears exactly once in ``src/`` — here — so
+    every key is derived (``split``/``fold_in``) from a root created in
+    this module.  That is what makes the PR 4 PRNG-reuse
+    bug class statically checkable: ``repro.analysis`` lint rule RPL002
+    flags any other ``jax.random.PRNGKey`` call site in ``src/``, and the
+    trace-contract analyzer requires every PRNG primitive in a step jaxpr
+    to trace back through this module.
+    """
+    import jax
+
+    return jax.random.PRNGKey(seed)
 
 
 def noise_key(seed: int, site: str | None = None):
@@ -186,7 +212,7 @@ def noise_key(seed: int, site: str | None = None):
     """
     import jax
 
-    key = jax.random.PRNGKey(seed)
+    key = root_key(seed)
     if site:
         key = jax.random.fold_in(key, _site_id(site))
     scope = current_scope()

@@ -44,7 +44,7 @@ from repro.core import engine, reduction
 
 __all__ = ["register_schedule", "resolve_schedule", "get_injector",
            "injected_matmul_int", "plan_chunks", "check_accumulation_bound",
-           "packed_weights"]
+           "schedule_label", "packed_weights"]
 
 # Registered custom schedules (DSE candidates etc.), keyed by handle.
 # Default design points (schedule_ref=None) are NOT cached here — they go
@@ -111,18 +111,38 @@ def get_injector(numerics) -> engine.CompiledInjector:
     return inj
 
 
-def check_accumulation_bound(inj: engine.CompiledInjector, k: int) -> None:
+def schedule_label(inj: engine.CompiledInjector,
+                   schedule: str | None = None) -> str:
+    """Human handle of the schedule an injector replays.
+
+    The registered handle when the caller has one (``schedule_ref``), else
+    the design-point label derived from the compiled schedule itself — the
+    SAME string the static saturation proof (repro.analysis.trace_contract)
+    keys its per-schedule report on, so runtime guard errors and analyzer
+    rows correlate directly.
+    """
+    if schedule is not None:
+        return schedule
+    s = inj.schedule
+    return f"default(n_digits={s.n_digits}, border={s.border})"
+
+
+def check_accumulation_bound(inj: engine.CompiledInjector, k: int, *,
+                             schedule: str | None = None) -> None:
     """Trace-time guard: K products must fit the int32 accumulator.
 
     The injected matmul accumulates K exact products per output element in
     int32; ``inj.max_abs_product`` is the exact max |product| over the
     int8 x int8 domain (computed once at injector compile time), so the
-    worst-case partial sum is ``K * max|product|``.
+    worst-case partial sum is ``K * max|product|``.  ``schedule`` names the
+    registered-schedule handle in the error (``schedule_label``), matching
+    the analyzer's saturation-report rows.
     """
     worst = k * inj.max_abs_product
     if worst >= 2**31:
         raise ValueError(
-            f"amr_inject int32 accumulator can saturate: K={k} with "
+            f"amr_inject int32 accumulator can saturate: schedule "
+            f"{schedule_label(inj, schedule)}: K={k} with "
             f"max|product|={inj.max_abs_product} gives K*max|product| = "
             f"{worst} >= 2**31 = {2**31}; keep K <= "
             f"{(2**31 - 1) // inj.max_abs_product} for this schedule "
@@ -208,7 +228,7 @@ def packed_weights(inj: engine.CompiledInjector, ib):
 
 def injected_matmul_int(inj: engine.CompiledInjector, ia, ib,
                         max_pairs: int = MAX_PAIRS_PER_CHUNK, *,
-                        packed_ib=None):
+                        packed_ib=None, schedule: str | None = None):
     """Exact integer AMR matmul: ``out[.., m, n] = sum_k AMR(ia[.., m, k], ib[k, n])``.
 
     ``ia``: (..., M, K) and ``ib``: (K, N) traced int32 operand indices
@@ -228,7 +248,7 @@ def injected_matmul_int(inj: engine.CompiledInjector, ia, ib,
 
     *lead, M, K = ia.shape
     N = ib.shape[-1]
-    check_accumulation_bound(inj, K)
+    check_accumulation_bound(inj, K, schedule=schedule)
     rows = int(np.prod(lead, dtype=np.int64)) * M if lead else M
     ia2 = ia.reshape(rows, K)
     yw = packed_ib if packed_ib is not None else packed_weights(inj, ib)
@@ -260,7 +280,8 @@ def injected_matmul_int(inj: engine.CompiledInjector, ia, ib,
 
 
 def _injected_matmul_pairs(inj: engine.CompiledInjector, ia, ib,
-                           max_pairs: int = MAX_PAIRS_PER_CHUNK):
+                           max_pairs: int = MAX_PAIRS_PER_CHUNK, *,
+                           schedule: str | None = None):
     """The PR 4 pairwise replay path, kept as a reference implementation.
 
     Broadcasts every ``(row, k, col)`` operand pair and replays them
@@ -275,7 +296,7 @@ def _injected_matmul_pairs(inj: engine.CompiledInjector, ia, ib,
 
     *lead, M, K = ia.shape
     N = ib.shape[-1]
-    check_accumulation_bound(inj, K)
+    check_accumulation_bound(inj, K, schedule=schedule)
     rows = int(np.prod(lead, dtype=np.int64)) * M if lead else M
     ia2 = ia.reshape(rows, K)
     kc = max(1, min(K, max_pairs // max(rows * N, 1)))

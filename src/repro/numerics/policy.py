@@ -38,6 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 from typing import Any, Protocol, runtime_checkable
 
 from .approx_matmul import AMRNumerics
@@ -315,9 +316,14 @@ def save_policy(policy, path, *, meta: dict | None = None) -> None:
     obj = policy_to_json(policy)
     if meta:
         obj["meta"] = meta
-    with open(path, "w") as f:
+    # tmp + rename (the ckpt/ protocol): a policy artifact is consumed by
+    # other processes (--policy-file, restart re-registration) — a crash
+    # mid-write must never leave a torn JSON at the real path (RPL006)
+    tmp = os.fspath(path) + ".tmp"
+    with open(tmp, "w") as f:
         json.dump(obj, f, indent=2, sort_keys=True)
         f.write("\n")
+    os.replace(tmp, path)
 
 
 def load_policy(path) -> NumericsPolicy:

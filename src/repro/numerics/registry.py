@@ -27,7 +27,7 @@ import dataclasses
 from typing import Any, Callable
 
 __all__ = ["ModeSpec", "register_mode", "unregister_mode", "get_mode",
-           "mode_names", "validate_policy", "default_policy"]
+           "mode_names", "is_exact_mode", "validate_policy", "default_policy"]
 
 Impl = Callable[..., Any]
 
@@ -64,6 +64,10 @@ class ModeSpec:
     oracle: Impl | None = None
     defaults: tuple[tuple[str, Any], ...] = ()
     accepts_params: tuple[str, ...] = ()
+    # True for modes whose impl IS the exact float matmul (no approximation).
+    # Generic consumers branch on this property via :func:`is_exact_mode`
+    # instead of string-matching the mode name (lint rule RPL001).
+    exact: bool = False
 
 
 # Registration order is preserved — it defines the canonical MODES order
@@ -81,6 +85,7 @@ def register_mode(
     oracle: Impl | None = None,
     defaults: dict[str, Any] | None = None,
     accepts_params: tuple[str, ...] = (),
+    exact: bool = False,
 ) -> ModeSpec:
     """Register a numerics mode. Names are unique — re-registration is an
     error (use :func:`unregister_mode` first if a test needs to replace
@@ -94,7 +99,7 @@ def register_mode(
     spec = ModeSpec(name=name, impl=impl, required_params=tuple(required_params),
                     description=description, validate=validate, oracle=oracle,
                     defaults=tuple(sorted((defaults or {}).items())),
-                    accepts_params=tuple(accepts_params))
+                    accepts_params=tuple(accepts_params), exact=exact)
     _REGISTRY[name] = spec
     return spec
 
@@ -107,6 +112,15 @@ def unregister_mode(name: str) -> None:
 def mode_names() -> tuple[str, ...]:
     """Valid mode names, in registration (canonical) order."""
     return tuple(_REGISTRY)
+
+
+def is_exact_mode(name: str) -> bool:
+    """Whether a registered mode's impl is the exact float matmul.
+
+    The registry-driven replacement for ``mode != "exact"`` comparisons in
+    generic consumers (benches, sweep builders) — mode-name string matching
+    outside ``numerics/`` is a lint violation (RPL001)."""
+    return get_mode(name).exact
 
 
 def get_mode(name: str) -> ModeSpec:

@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import os
 import signal
 import threading
 import time
@@ -50,7 +51,11 @@ class Heartbeat:
         self._thread.start()
 
     def beat(self) -> None:
-        self.path.write_text(json.dumps({"t": time.time(), **self.payload}))
+        # tmp + rename: watchdogs poll this file concurrently — a reader
+        # must never see a half-written JSON payload (lint rule RPL006)
+        tmp = self.path.with_name(self.path.name + ".tmp")
+        tmp.write_text(json.dumps({"t": time.time(), **self.payload}))
+        os.replace(tmp, self.path)
 
     def stop(self) -> None:
         self._stop.set()

@@ -1,0 +1,29 @@
+"""Shared trace-count helpers for single-trace (no-recompile) assertions.
+
+The serving engine's core compile property — the masked decode step traces
+ONCE no matter which slots are live or which per-layer policy resolves
+inside it — is asserted from several test modules.  The probe lives here so
+the `_cache_size` attribute poke (a private jax jit API that may be absent
+on some versions) is written exactly once.
+
+The STRUCTURAL form of the same property (jaxpr identical across operand
+bindings, proven without running the engine) lives in
+``repro.analysis.trace_contract``; this helper is the cheap empirical check
+tests use after driving a real engine.
+"""
+from __future__ import annotations
+
+
+def trace_count(jitted) -> int | None:
+    """Number of traces a ``jax.jit`` callable has accumulated, or None when
+    this jax version does not expose ``_cache_size``."""
+    probe = getattr(jitted, "_cache_size", None)
+    return None if probe is None else probe()
+
+
+def assert_single_trace(jitted, what: str = "jitted callable") -> None:
+    """Assert the callable was traced exactly once (skip silently when the
+    jax version has no cache-size probe)."""
+    n = trace_count(jitted)
+    if n is not None:
+        assert n == 1, f"{what}: expected exactly one trace, got {n}"

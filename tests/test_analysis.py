@@ -1,0 +1,319 @@
+"""repro.analysis: lint rules (fixture per rule), allowlist semantics, the
+committed tree linting clean, and the jaxpr trace contracts on both a
+retrace-hazardous toy step (flagged) and the real serve decode step
+(passes), plus the int32-saturation proof's registry coverage."""
+import numpy as np
+import pytest
+
+from repro.analysis.lint import Finding, load_allowlist, run_lint
+from repro.analysis.trace_contract import (
+    check_donation,
+    check_prng_provenance,
+    check_retrace_stability,
+    count_random_prims,
+    saturation_report,
+)
+
+REPO_ROOT = __import__("pathlib").Path(__file__).resolve().parents[1]
+
+
+# --------------------------------------------------------------------------
+# lint: one fixture per rule, asserting the stable ID and the span
+# --------------------------------------------------------------------------
+
+def _lint(tmp_path, rel, source):
+    f = tmp_path / rel
+    f.parent.mkdir(parents=True, exist_ok=True)
+    f.write_text(source)
+    findings, _, _ = run_lint(tmp_path)
+    # fixtures from earlier calls in the same tmp root stay on disk —
+    # report only the file just written
+    return [x for x in findings if x.path == rel.replace("\\", "/")]
+
+
+def test_rpl001_mode_string_comparison(tmp_path):
+    src = (
+        "def pick(mode):\n"
+        "    if mode == 'amr_inject':\n"
+        "        return 1\n"
+        "    return mode in ('exact', 'amr_lut')\n"
+    )
+    found = _lint(tmp_path, "src/repro/launch/pick.py", src)
+    assert [(f.rule, f.line) for f in found] == [("RPL001", 2), ("RPL001", 4)]
+    assert found[0].qualname == "pick"
+    # the registry module itself is allowed to name its modes
+    assert not _lint(tmp_path, "src/repro/numerics/reg.py", src)
+
+
+def test_rpl001_exact_needs_mode_ident(tmp_path):
+    # 'exact' against a non-mode identifier is not a mode comparison
+    src = "def f(variant):\n    return variant == 'exact'\n"
+    assert not _lint(tmp_path, "src/repro/launch/v.py", src)
+
+
+def test_rpl002_raw_prngkey(tmp_path):
+    src = ("import jax\n\n"
+           "def mk(seed):\n"
+           "    return jax.random.PRNGKey(seed)\n")
+    found = _lint(tmp_path, "src/repro/serve/keys.py", src)
+    assert [(f.rule, f.line, f.qualname) for f in found] == \
+        [("RPL002", 4, "mk")]
+    # the blessed chokepoint is exempt; split/fold_in derivation is fine
+    assert not _lint(tmp_path, "src/repro/numerics/context.py", src)
+    assert not _lint(tmp_path, "src/repro/serve/derive.py",
+                     "import jax\n\ndef d(k):\n"
+                     "    return jax.random.fold_in(k, 3)\n")
+
+
+def test_rpl003_unlabeled_site(tmp_path):
+    src = ("from repro.numerics import approx_matmul, dense\n\n"
+           "def f(p, x, nm):\n"
+           "    h = dense(x, p['w'], nm)\n"
+           "    h = dense(h, p['o'], nm, 'mlp.out')\n"
+           "    return approx_matmul(h, p['v'], nm, site='head')\n")
+    found = _lint(tmp_path, "src/repro/models/blk.py", src)
+    assert [(f.rule, f.line) for f in found] == [("RPL003", 4)]
+
+
+def test_rpl004_pallas_captured_const(tmp_path):
+    src = ("import jax.numpy as jnp\n"
+           "from jax.experimental import pallas as pl\n\n"
+           "LUT = jnp.arange(16)\n\n"
+           "def make_kernel():\n"
+           "    def kernel(x_ref, o_ref):\n"
+           "        o_ref[...] = LUT[x_ref[...]]\n"
+           "    return kernel\n")
+    found = _lint(tmp_path, "src/repro/kernels/lutk.py", src)
+    assert [(f.rule, f.line) for f in found] == [("RPL004", 7)]
+    assert "LUT" in found[0].message
+    # same shape with the table passed as a ref: clean
+    ok = ("from jax.experimental import pallas as pl\n\n"
+          "def make_kernel():\n"
+          "    def kernel(x_ref, lut_ref, o_ref):\n"
+          "        o_ref[...] = lut_ref[x_ref[...]]\n"
+          "    return kernel\n")
+    assert not _lint(tmp_path, "src/repro/kernels/okk.py", ok)
+
+
+def test_rpl005_lru_cache_on_arrays(tmp_path):
+    src = ("import functools\n\n"
+           "@functools.lru_cache(maxsize=8)\n"
+           "def pack(a, n: int):\n"
+           "    return a * n\n")
+    found = _lint(tmp_path, "src/repro/numerics/pack.py", src)
+    # the finding anchors at the def line (decorators sit above it)
+    assert [(f.rule, f.line, f.qualname) for f in found] == \
+        [("RPL005", 4, "pack")]
+    # static-metadata caching (ints / registry handles) is the sanctioned use
+    ok = ("import functools\n\n"
+          "@functools.lru_cache\n"
+          "def injector(n_digits: int, border: int):\n"
+          "    return n_digits + border\n")
+    assert not _lint(tmp_path, "src/repro/numerics/okcache.py", ok)
+
+
+def test_rpl006_nonatomic_write(tmp_path):
+    src = ("import json\n\n"
+           "def save(path, obj):\n"
+           "    with open(path, 'w') as f:\n"
+           "        json.dump(obj, f)\n")
+    found = _lint(tmp_path, "src/repro/runtime/bad_save.py", src)
+    assert [(f.rule, f.line, f.qualname) for f in found] == \
+        [("RPL006", 4, "save")]
+    ok = ("import json, os\n\n"
+          "def save(path, obj):\n"
+          "    with open(str(path) + '.tmp', 'w') as f:\n"
+          "        json.dump(obj, f)\n"
+          "    os.replace(str(path) + '.tmp', path)\n")
+    assert not _lint(tmp_path, "src/repro/runtime/ok_save.py", ok)
+    # the checkpoint module IS the protocol — exempt
+    assert not _lint(tmp_path, "src/repro/ckpt/checkpoint.py", src)
+
+
+def test_tests_dir_never_scanned(tmp_path):
+    src = "def f(mode):\n    return mode == 'amr_inject'\n"
+    assert not _lint(tmp_path, "tests/test_x.py", src)
+
+
+# --------------------------------------------------------------------------
+# allowlist semantics
+# --------------------------------------------------------------------------
+
+def test_allowlist_suppresses_and_goes_stale(tmp_path):
+    f = tmp_path / "src/repro/serve/keys.py"
+    f.parent.mkdir(parents=True)
+    f.write_text("import jax\n\ndef mk(s):\n"
+                 "    return jax.random.PRNGKey(s)\n")
+    allow = tmp_path / ".analysis-allowlist"
+    allow.write_text("# reviewed exception\n"
+                     "RPL002 src/repro/serve/keys.py mk\n"
+                     "RPL006 src/repro/gone.py save\n")
+    entries = load_allowlist(allow)
+    findings, suppressed, stale = run_lint(tmp_path, allowlist=entries)
+    assert not findings
+    assert [s.key() for s in suppressed] == \
+        [("RPL002", "src/repro/serve/keys.py", "mk")]
+    assert stale == ["RPL006 src/repro/gone.py save"]
+
+
+def test_allowlist_rejects_malformed(tmp_path):
+    bad = tmp_path / "al"
+    bad.write_text("RPL002 only-two-fields\n")
+    with pytest.raises(ValueError, match="malformed"):
+        load_allowlist(bad)
+
+
+def test_committed_tree_lints_clean():
+    """The acceptance gate: the repo's own sources produce zero findings
+    with the committed (empty) allowlist — what CI's analysis job runs."""
+    entries = load_allowlist(REPO_ROOT / ".analysis-allowlist")
+    findings, _, stale = run_lint(REPO_ROOT, allowlist=entries)
+    assert not findings, "\n".join(f.render() for f in findings)
+    assert not stale
+
+
+# --------------------------------------------------------------------------
+# trace contracts: toy hazard flagged, the real decode step passes
+# --------------------------------------------------------------------------
+
+class _RebuiltTable:
+    """Toy retrace hazard: rebuilds its gather table at every trace — the
+    fresh numpy data is baked into the jaxpr as a const, so each distinct
+    build recompiles (the rebuilt-lookup-table bug class)."""
+
+    def __init__(self):
+        self.version = 0
+
+    def __call__(self, x):
+        import jax.numpy as jnp
+        self.version += 1
+        table = np.arange(4, dtype=np.float32) * self.version
+        return x + jnp.asarray(table)
+
+
+def test_toy_retrace_hazard_flagged():
+    import jax.numpy as jnp
+
+    x = jnp.zeros((4,), jnp.float32)
+    found = check_retrace_stability(_RebuiltTable(), (x,), (x,), "toy")
+    assert len(found) == 1
+    assert found[0].contract == "retrace"
+    assert "const" in found[0].message
+
+
+def test_well_behaved_step_passes():
+    import jax.numpy as jnp
+
+    def step(x, y):
+        return x * 2.0 + y
+
+    a = (jnp.ones((4,)), jnp.zeros((4,)))
+    b = (jnp.full((4,), 7.0), jnp.full((4,), 3.0))
+    assert check_retrace_stability(step, a, b, "ok") == []
+
+
+def _serve_pieces(mode):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.conformance.matrix import tiny_config
+    from repro.launch.specs import abstract_params
+    from repro.models import init_cache
+    from repro.train.steps import make_serve_step
+
+    cfg = tiny_config("gemma3-1b", mode)
+    params = abstract_params(cfg)
+    cache = jax.eval_shape(lambda: init_cache(cfg, 2, 16, per_slot=True))
+
+    def batch(seed):
+        rng = np.random.default_rng(seed)
+        return {"token": jnp.asarray(rng.integers(0, cfg.vocab, (2, 1)),
+                                     jnp.int32),
+                "active": jnp.asarray(rng.integers(0, 2, (2,)) > 0)}
+
+    return make_serve_step(cfg), params, cache, batch
+
+
+def test_real_serve_decode_contracts():
+    """The real serve decode step: jaxpr invariant to token/mask values
+    (the structural _cache_size()==1 property) and the cache donation
+    actually aliased in the lowering."""
+    step, params, cache, batch = _serve_pieces("exact")
+    assert check_retrace_stability(
+        step, (params, cache, batch(0)), (params, cache, batch(1)),
+        "serve") == []
+    assert check_donation(step, (1,), (params, cache, batch(0)), "serve") == []
+
+
+def test_prng_provenance_amr_noise():
+    """The noise mode's decode step must draw PRNG bits AND every draw
+    must derive through the blessed numerics key chain."""
+    import jax
+
+    step, params, cache, batch = _serve_pieces("amr_noise")
+    jaxpr = jax.make_jaxpr(step)(params, cache, batch(0))
+    assert count_random_prims(jaxpr) > 0
+    assert check_prng_provenance(jaxpr, "serve", require_random=True) == []
+
+
+def test_prng_provenance_flags_foreign_key():
+    """A step drawing from a key made outside the numerics chain is
+    caught: no blessed frame in the primitive's traceback."""
+    import jax
+
+    def rogue(x):
+        key = jax.random.PRNGKey(0)  # test-only: the pattern under test
+        return x + jax.random.normal(key, x.shape)
+
+    jaxpr = jax.make_jaxpr(rogue)(np.zeros((3,), np.float32))
+    found = check_prng_provenance(jaxpr, "rogue")
+    assert found and all(f.contract == "prng" for f in found)
+
+
+# --------------------------------------------------------------------------
+# saturation proof: registry coverage, soundness, guard agreement
+# --------------------------------------------------------------------------
+
+def test_saturation_report_covers_registry():
+    from repro.core import reduction
+    from repro.numerics import injection
+
+    handle = injection.register_schedule(reduction.get_schedule(2, 6),
+                                         name="analysis-test:b6")
+    try:
+        findings, report = saturation_report(["gemma3-1b"], borders=(8,))
+    finally:
+        injection._SCHEDULES.pop(handle, None)
+        injection._INJECTORS.pop(handle, None)
+    assert findings == []
+    assert handle in report["registered_handles"]
+    labels = [r["schedule"] for r in report["schedules"]]
+    assert handle in labels
+    assert "default(n_digits=2, border=8)" in labels
+    assert report["max_site_k"] > 0 and report["sites"]
+    for row in report["schedules"]:
+        # soundness: the bit-weight bound dominates the exact bound, and
+        # the proof agrees with the runtime guard's threshold
+        assert row["symbolic_bound"] >= row["exact_bound"]
+        assert row["max_safe_k_exact"] == (2**31 - 1) // row["exact_bound"]
+        assert row["proved"] == (
+            report["max_site_k"] * row["exact_bound"] < 2**31)
+    assert report["all_proved"]
+
+
+def test_saturation_guard_message_names_schedule():
+    """The runtime guard and the analyzer key their reports on the SAME
+    schedule label (satellite: error message names the schedule handle)."""
+    from repro.core import engine
+    from repro.numerics.injection import check_accumulation_bound, schedule_label
+
+    inj = engine.get_injector(2, 8)
+    label = schedule_label(inj)
+    assert label == "default(n_digits=2, border=8)"
+    k_bad = (2**31 - 1) // inj.max_abs_product + 1
+    with pytest.raises(ValueError, match="saturate") as ei:
+        check_accumulation_bound(inj, k_bad)
+    assert label in str(ei.value)
+    with pytest.raises(ValueError) as ei:
+        check_accumulation_bound(inj, k_bad, schedule="custom:demo")
+    assert "custom:demo" in str(ei.value)

@@ -12,6 +12,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from _trace_utils import assert_single_trace
 from repro.configs.base import ModelConfig
 from repro.core import reduction
 from repro.launch.cli import policy_label
@@ -230,9 +231,7 @@ def test_serve_no_recompile_under_heterogeneous_policy():
                                       AMRNumerics("amr_lut", border=2)})
     eng, done = _serve_run(pol, n_slots=2)
     assert len(done) == len(PROMPTS)
-    cache_size = getattr(eng._decode, "_cache_size", None)
-    if cache_size is not None:
-        assert cache_size() == 1
+    assert_single_trace(eng._decode, "masked decode step")
 
 
 # ------------------------------------------------------------------ labels

@@ -10,6 +10,7 @@ import pytest
 import jax
 
 from _hyp import given, settings, st
+from _trace_utils import assert_single_trace
 from repro.configs.base import ModelConfig
 from repro.models import decode_step, init_params, prefill_with_cache
 from repro.numerics import AMRNumerics
@@ -162,9 +163,7 @@ class TestServeEngine:
         for i, p in enumerate(PROMPTS * 2):  # staggered finishes + readmits
             eng.submit(Request(prompt=p, max_new_tokens=1 + i % 4))
         eng.run()
-        cache_size = getattr(eng._decode, "_cache_size", None)
-        if cache_size is not None:
-            assert cache_size() == 1
+        assert_single_trace(eng._decode, "masked decode step")
 
     def test_heartbeat_and_straggler_wiring(self, exact_setup, tmp_path):
         cfg, params = exact_setup
