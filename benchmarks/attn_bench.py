@@ -1,0 +1,124 @@
+"""Fused-attention kernel bench: fused Pallas call vs the unfused seam.
+
+Times ``kernels.attn_fused.fused_attention`` (LUT gather / injection
+replay inside one kernel with the masked softmax) against the jitted
+unfused composition (``fused_attention_reference`` — literally the
+models/attention.py seam chain on pre-folded operands), and records the
+bit-identity the kernel promises: both methods must agree with the seam
+EXACTLY (``max_abs_diff == 0.0``) on every backend, interpret or
+compiled.  Shapes cover the decode-style ragged mask plus word-ragged
+T/P (the injection path's lane-padding edge).
+
+  PYTHONPATH=src python -m benchmarks.attn_bench --quick --out BENCH_attn.json
+
+JSON schema (``BENCH_attn.json``)::
+
+  {"schema": "BENCH_attn/v1", "backend": str, "interpret": bool,
+   "results": [{"method": "lut|inject", "border": int,
+                "g": int, "m": int, "d": int, "t": int, "p": int,
+                "bm": int, "us_per_call": float, "ref_us_per_call": float,
+                "max_abs_diff": float, "bit_exact": bool}]}
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.amr_matmul.tiling import pick_attn_tile
+from repro.kernels.attn_fused import fused_attention, fused_attention_reference
+from repro.kernels.pallas_config import backend_kind, default_interpret
+
+# (G, M, D, T, P): grouped heads, query rows, head_dim, attended length,
+# value head_dim.  The (2, 8, 8, 40, 24) point keeps T and P off the
+# 32-column lane-word grid on purpose.
+QUICK_SHAPES = [(2, 8, 8, 32, 16), (2, 8, 8, 40, 24)]
+FULL_SHAPES = QUICK_SHAPES + [(4, 16, 16, 64, 16)]
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / reps * 1e6
+
+
+def _case(g, m, d, t, p, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (g, m, d), jnp.float32)
+    kt = jax.random.normal(ks[1], (g, d, t), jnp.float32)
+    v = jax.random.normal(ks[2], (g, t, p), jnp.float32)
+    lengths = jax.random.randint(ks[3], (g, m), 1, t + 1)
+    mask = jnp.arange(t)[None, None, :] < lengths[:, :, None]
+    return q, kt, v, mask
+
+
+def _sweep_point(method: str, border: int, shape) -> dict:
+    g, m, d, t, p = shape
+    ops = _case(*shape)
+    fused = jax.jit(lambda q, kt, v, mask: fused_attention(
+        q, kt, v, mask, method=method, border=border))
+    ref = jax.jit(lambda q, kt, v, mask: fused_attention_reference(
+        q, kt, v, mask, method=method, border=border))
+    got = np.asarray(fused(*ops)).astype(np.float64)
+    want = np.asarray(ref(*ops)).astype(np.float64)
+    diff = float(np.abs(got - want).max())
+    return {
+        "method": method, "border": border,
+        "g": g, "m": m, "d": d, "t": t, "p": p,
+        "bm": pick_attn_tile(m, d),
+        "us_per_call": round(_time(fused, *ops), 1),
+        "ref_us_per_call": round(_time(ref, *ops), 1),
+        "max_abs_diff": diff,
+        "bit_exact": bool(diff == 0.0),
+    }
+
+
+def run(quick: bool = False, out: str | None = None) -> list[str]:
+    rows = []
+    shapes = QUICK_SHAPES if quick else FULL_SHAPES
+    borders = (8,) if quick else (4, 8)
+    results = []
+    for shape in shapes:
+        for border in borders:
+            for method in ("lut", "inject"):
+                r = _sweep_point(method, border, shape)
+                results.append(r)
+                g, m, d, t, p = shape
+                rows.append(
+                    f"attn_fused_{method}_g{g}m{m}d{d}t{t}p{p}_b{border},"
+                    f"{r['us_per_call']:.0f},"
+                    f"ref={r['ref_us_per_call']:.0f}us;"
+                    f"max_abs_diff={r['max_abs_diff']:.3g};"
+                    f"bit_exact={r['bit_exact']}")
+
+    artifact = {
+        "schema": "BENCH_attn/v1",
+        "backend": backend_kind(),
+        "interpret": default_interpret(),
+        "results": results,
+    }
+    out = out or os.environ.get("REPRO_BENCH_OUT", "BENCH_attn.json")
+    with open(out, "w") as f:
+        json.dump(artifact, f, indent=1)
+    rows.append(f"attn_bench_artifact,0,{out}:{len(results)}_results")
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None, help="artifact path (BENCH_attn.json)")
+    args = ap.parse_args(argv)
+    for row in run(quick=args.quick, out=args.out):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

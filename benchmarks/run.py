@@ -16,10 +16,10 @@ import sys
 import time
 import traceback
 
-from . import (dryrun_summary, dse_bench, fig4_comparison, fig5_fa_usage,
-               fig6_error_dist, inject_bench, kernel_bench, lowrank_fidelity,
-               matrix_bench, policy_bench, serve_bench, table1_accuracy,
-               table2_energy, train_numerics_bench)
+from . import (attn_bench, dryrun_summary, dse_bench, fig4_comparison,
+               fig5_fa_usage, fig6_error_dist, inject_bench, kernel_bench,
+               lowrank_fidelity, matrix_bench, policy_bench, serve_bench,
+               table1_accuracy, table2_energy, train_numerics_bench)
 
 MODULES = {
     "table1": table1_accuracy,
@@ -29,6 +29,7 @@ MODULES = {
     "fig6": fig6_error_dist,
     "lowrank": lowrank_fidelity,
     "kernels": kernel_bench,
+    "attn": attn_bench,
     "dse": dse_bench,
     "train": train_numerics_bench,
     "inject": inject_bench,

@@ -33,6 +33,10 @@ produced ``BENCH_kernel.json`` / ``BENCH_dse.json`` / ``BENCH_train.json``
     batched decode must equal solo decode bitwise) or of ``complete`` /
     ``requests`` / ``tokens`` on the throughput rows; serve latency and
     tokens/s are advisory,
+  * for the attn artifact (fused-attention kernel): any flip of
+    ``bit_exact`` / ``max_abs_diff`` on any (method, shape, border) row —
+    the fused Pallas kernel replays the SAME quantized operands the
+    unfused seam sees, so fused-vs-seam agreement must stay exactly 0.0,
   * for the policy artifact (model-level numerics-policy search): any flip
     of a ``uniform_parity`` row (``UniformPolicy`` must trace bit-for-bit
     what the bare ``AMRNumerics`` traces), any drift of the frontier tiers
@@ -62,7 +66,8 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parent.parent
 DEFAULT_ARTIFACTS = ("BENCH_kernel.json", "BENCH_dse.json", "BENCH_train.json",
                      "BENCH_inject.json", "BENCH_serve.json",
-                     "BENCH_matrix.json", "BENCH_policy.json")
+                     "BENCH_matrix.json", "BENCH_policy.json",
+                     "BENCH_attn.json")
 FLOAT_RTOL = 1e-6  # float-path (non-bit-exact) kernel error rows only
 
 
@@ -84,6 +89,9 @@ def _row_key(schema: str, row: dict) -> tuple:
                 row.get("schedule"))
     if schema.startswith("BENCH_policy/"):
         return (row["kind"], row.get("mode") or row.get("label"))
+    if schema.startswith("BENCH_attn/"):
+        return (row["method"], row["border"],
+                row["g"], row["m"], row["d"], row["t"], row["p"])
     raise ValueError(f"unknown artifact schema {schema!r}")
 
 
@@ -142,6 +150,11 @@ def _gated_fields(schema: str, row: dict) -> list[tuple[str, bool]]:
         # (fidelity evals ride on float matmuls) but it must always beat the
         # best feasible uniform point on fidelity at no more energy
         return [("dominates_best_uniform", True)]
+    if schema.startswith("BENCH_attn/"):
+        # fused-kernel-vs-seam agreement is integer/bit-derived (the fused
+        # kernel replays the SAME quantized operands the seam sees): the
+        # diff must stay EXACTLY 0.0 on every backend
+        return [("bit_exact", True), ("max_abs_diff", True)]
     return [("expected_error", True), ("mred", True), ("mared", True),
             ("nmed", True), ("replay_match", True), ("frontier", True),
             ("complete", True)]
@@ -161,6 +174,8 @@ def _advisory_fields(schema: str) -> list[str]:
         return ["first_loss", "final_loss", "parity_diff"]
     if schema.startswith("BENCH_policy/"):
         return ["fidelity", "loss", "moves"]
+    if schema.startswith("BENCH_attn/"):
+        return ["us_per_call", "ref_us_per_call"]
     return ["energy_pj", "nodes"]
 
 

@@ -11,7 +11,14 @@ or by review (docs/analysis.md has the full catalog with rationale):
           ``noise_key`` so step/layer/site folding can't be bypassed.
   RPL003  ``dense``/``approx_matmul`` call sites without a ``site=`` label —
           unlabeled sites are invisible to audit traces, per-site policy
-          resolution and the PRNG decorrelation fold.
+          resolution and the PRNG decorrelation fold.  Under
+          ``src/repro/models/`` the rule also flags RAW matmuls
+          (``jnp.einsum``/``matmul``/``dot``/``tensordot``/
+          ``lax.dot_general``): model-layer contractions bypass the seam
+          entirely unless they go through ``dense``/``approx_matmul``, so
+          every deliberate-exact einsum (router logits, intra-chunk SSD
+          quadratic form, exact-mode branches) carries an allowlist entry
+          naming it as reviewed.
   RPL004  array constants captured by a Pallas kernel body's closure —
           Pallas lowers captured arrays as baked constants; they must
           arrive as refs (whole-block inputs) instead.
@@ -216,30 +223,54 @@ class RawPrngRule(Rule):
 
 
 class UnlabeledSiteRule(Rule):
-    """RPL003: dense/approx_matmul call sites without a site label."""
+    """RPL003: seam calls without a site label; raw matmuls in models/.
+
+    Two findings share the ID (both are "this contraction is invisible to
+    the numerics policy machinery"):
+
+    * a ``dense``/``approx_matmul`` call without ``site=`` — on the seam
+      but unaddressable by audits, per-site policies and the PRNG fold;
+    * a raw ``jnp.einsum``/``matmul``/``dot``/``tensordot``/
+      ``lax.dot_general`` under ``src/repro/models/`` — bypasses the seam
+      entirely.  Deliberate-exact contractions (router logits, the
+      intra-chunk SSD quadratic form whose masked-decay weighting has no
+      plain matmul form, exact-mode fallback branches) are reviewed
+      exceptions carried in ``.analysis-allowlist``.
+    """
 
     id = "RPL003"
     title = "dense/approx_matmul call without site= label"
     include = ("src/",)
     exclude = ("src/repro/numerics/",)
 
+    _RAW_MATMULS = ("einsum", "matmul", "dot", "dot_general", "tensordot")
+    _MODELS_PREFIX = "src/repro/models/"
+
     def check(self, ctx: _FileContext) -> Iterator[Finding]:
+        in_models = ctx.rel.startswith(self._MODELS_PREFIX)
         for node in ast.walk(ctx.tree):
             if not isinstance(node, ast.Call):
                 continue
             dotted = _dotted(node.func)
             name = dotted.rsplit(".", 1)[-1] if dotted else None
-            if name not in ("dense", "approx_matmul"):
-                continue
-            if any(kw.arg == "site" for kw in node.keywords):
-                continue
-            if name == "dense" and len(node.args) >= 4:  # positional site
-                continue
-            yield ctx.finding(
-                self, node,
-                f"{name} call without site=: unlabeled sites are invisible "
-                f"to audit traces, per-site policies and the PRNG "
-                f"decorrelation fold")
+            if name in ("dense", "approx_matmul"):
+                if any(kw.arg == "site" for kw in node.keywords):
+                    continue
+                if name == "dense" and len(node.args) >= 4:  # positional site
+                    continue
+                yield ctx.finding(
+                    self, node,
+                    f"{name} call without site=: unlabeled sites are "
+                    f"invisible to audit traces, per-site policies and the "
+                    f"PRNG decorrelation fold")
+            elif in_models and name in self._RAW_MATMULS and dotted and (
+                    "." in dotted):
+                yield ctx.finding(
+                    self, node,
+                    f"raw {dotted} in models/: the contraction bypasses the "
+                    f"numerics seam — route it through dense/approx_matmul "
+                    f"with a site label, or allowlist it as a reviewed "
+                    f"deliberate-exact site")
 
 
 class PallasCapturedConstRule(Rule):

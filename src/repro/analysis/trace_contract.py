@@ -381,11 +381,21 @@ def saturation_report(archs, *, borders=QUICK_BORDERS,
     """Per-schedule int32-saturation proof over every default-border design
     point in ``borders`` AND every ``register_schedule`` handle live in
     this process (100% registry coverage by construction)."""
+    from repro.conformance.matrix import ACTIVATION_SITES
     from repro.core import engine
     from repro.numerics import injection
 
     site_ks = collect_site_ks(archs)
     max_site_k = max(site_ks.values(), default=0)
+    # Activation×activation sites get their own breakout: their K is a
+    # RUNTIME quantity (attn.pv / ssm.scan contract over the attended
+    # length, moe.expert.* over the expert token bucket), so unlike the
+    # weight sites — whose K is fixed by the config — the probed value
+    # only witnesses the traced shapes.  ``max_safe_k_exact`` on each
+    # schedule row is therefore also the serve-time CONTEXT bound the
+    # deployment must respect for these sites.
+    act_union = set().union(*ACTIVATION_SITES.values())
+    activation_ks = {s: k for s, k in site_ks.items() if s in act_union}
     entries: list[tuple[str, Any]] = []
     for b in borders:
         inj = engine.get_injector(2, b)
@@ -426,6 +436,8 @@ def saturation_report(archs, *, borders=QUICK_BORDERS,
                 f"K={max_site_k}; keep K <= {max_safe_k}"))
     report = {
         "sites": dict(sorted(site_ks.items())),
+        "activation_sites": dict(sorted(activation_ks.items())),
+        "max_activation_k": max(activation_ks.values(), default=0),
         "max_site_k": max_site_k,
         "schedules": rows,
         "registered_handles": registered,

@@ -8,6 +8,7 @@ docs/testing.md.  ``tests/conformance/`` parametrizes over it for pytest;
 gated by ``scripts/check_bench.py``.
 """
 from .matrix import (
+    ACTIVATION_SITES,
     PARITY_TOL,
     REPRESENTATIVE,
     arch_mode_arms,
@@ -21,6 +22,7 @@ from .matrix import (
     tiny_config,
 )
 
-__all__ = ["REPRESENTATIVE", "PARITY_TOL", "arch_mode_arms", "policy_for",
+__all__ = ["REPRESENTATIVE", "PARITY_TOL", "ACTIVATION_SITES",
+           "arch_mode_arms", "policy_for",
            "tiny_config", "make_inputs", "run_train_arm", "run_inject_audit",
            "run_decode_parity", "run_noise_decorrelation", "run_restart_arm"]

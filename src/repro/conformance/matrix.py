@@ -49,9 +49,9 @@ from repro.numerics import (
 )
 from repro.train.steps import loss_fn, make_train_state, make_train_step
 
-__all__ = ["REPRESENTATIVE", "PARITY_TOL", "BORDER", "arch_mode_arms",
-           "policy_for", "tiny_config", "make_inputs", "run_train_arm",
-           "run_inject_audit", "run_decode_parity",
+__all__ = ["REPRESENTATIVE", "PARITY_TOL", "BORDER", "ACTIVATION_SITES",
+           "arch_mode_arms", "policy_for", "tiny_config", "make_inputs",
+           "run_train_arm", "run_inject_audit", "run_decode_parity",
            "run_noise_decorrelation", "run_restart_arm"]
 
 # The paper's default approximate border for all conformance arms.
@@ -81,6 +81,24 @@ PARITY_TOL: dict[str, float | None] = {
     "amr_lowrank": 0.75,
     "amr_noise": None,
     "amr_kernel": 0.75,
+}
+
+
+# Activation×activation seam sites each family's forward MUST route under
+# a non-exact policy — the QK^T/PV score chain, the MoE grouped expert
+# matmuls and the SSD scan readout are the serving hot path the paper's
+# energy claim turns on (docs/paper_mapping.md).  ``run_inject_audit``'s
+# per-site diffs are checked against this map per representative arch, so
+# a call-site regression that silently drops a site back to plain einsum
+# fails conformance, not just lint.
+ACTIVATION_SITES: dict[str, set[str]] = {
+    "dense": {"attn.qk", "attn.pv"},
+    "ssm": {"ssm.scan"},
+    "hybrid": {"attn.qk", "attn.pv", "ssm.scan"},
+    "moe": {"attn.qk", "attn.pv", "moe.expert.w_gate", "moe.expert.w_up",
+            "moe.expert.w_down"},
+    "audio": {"attn.qk", "attn.pv"},   # cross-attn shares the seam sites
+    "vlm": {"attn.qk", "attn.pv"},
 }
 
 

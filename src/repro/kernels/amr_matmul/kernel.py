@@ -116,17 +116,9 @@ def amr_matmul_int8(a: jnp.ndarray, b: jnp.ndarray, u: jnp.ndarray, v: jnp.ndarr
                                 interpret=resolve_interpret(interpret))
 
 
-def _amr_matmul_lut_kernel(a_ref, b_ref, lut_ref, out_ref, acc_ref, *, n_k: int):
-    """Full-table variant: per-K-step (bm, bn) gather from the flat LUT."""
-    k_idx = pl.program_id(2)
-
-    @pl.when(k_idx == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    a = a_ref[...]                                  # (bm, bk) int8
-    b = b_ref[...]                                  # (bk, bn) int8
-    flat = lut_ref[...].reshape(-1)                 # (65536,) int32
+def _lut_gather_accum(a, b, flat, acc):
+    """acc + sum_k LUT[a_k, b_k] outer products — the shared gather sweep
+    of the full-table variants (flat, grouped, and fused-attention)."""
     bm, bk = a.shape
     bn = b.shape[1]
     ia = a.astype(jnp.int32) + 128
@@ -139,7 +131,19 @@ def _amr_matmul_lut_kernel(a_ref, b_ref, lut_ref, out_ref, acc_ref, *, n_k: int)
         idx = iak * 256 + ibk                                              # (bm, bn)
         return acc + jnp.take(flat, idx.reshape(-1), axis=0).reshape(bm, bn)
 
-    acc_ref[...] = jax.lax.fori_loop(0, bk, body, acc_ref[...])
+    return jax.lax.fori_loop(0, bk, body, acc)
+
+
+def _amr_matmul_lut_kernel(a_ref, b_ref, lut_ref, out_ref, acc_ref, *, n_k: int):
+    """Full-table variant: per-K-step (bm, bn) gather from the flat LUT."""
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    flat = lut_ref[...].reshape(-1)                 # (65536,) int32
+    acc_ref[...] = _lut_gather_accum(a_ref[...], b_ref[...], flat, acc_ref[...])
 
     @pl.when(k_idx == n_k - 1)
     def _store():
@@ -163,6 +167,50 @@ def _amr_matmul_int8_lut_jit(a, b, table, *, bm, bn, bk, interpret):
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(a, b, table)
+
+
+def _amr_matmul_lut_grouped_kernel(a_ref, b_ref, lut_ref, out_ref, acc_ref,
+                                   *, n_k: int):
+    """Grouped full-LUT variant: independent (M, K) @ (K, N) per group.
+
+    Grid ``(G, M/bm, N/bn, K/bk)`` — one leading grid axis per group (the
+    MoE expert buffers / flattened attention batch·head groups), K still
+    innermost so the int32 accumulator scratch carries across the K sweep.
+    """
+    k_idx = pl.program_id(3)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    flat = lut_ref[...].reshape(-1)                 # (65536,) int32
+    acc_ref[...] = _lut_gather_accum(a_ref[0], b_ref[0], flat, acc_ref[...])
+
+    @pl.when(k_idx == n_k - 1)
+    def _store():
+        out_ref[0] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def _amr_matmul_int8_lut_grouped_jit(a, b, table, *, bm, bn, bk, interpret):
+    G, M, K = a.shape
+    N = b.shape[2]
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (G, M, N, K, bm, bn, bk)
+    n_k = K // bk
+    grid = (G, M // bm, N // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_amr_matmul_lut_grouped_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda g, i, j, k: (g, i, k)),
+            pl.BlockSpec((1, bk, bn), lambda g, i, j, k: (g, k, j)),
+            pl.BlockSpec(table.shape, lambda g, i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda g, i, j, k: (g, i, j)),
+        out_shape=jax.ShapeDtypeStruct((G, M, N), jnp.int32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
     )(a, b, table)

@@ -30,7 +30,8 @@ from repro.core import lut as lut_lib
 from repro.kernels.pallas_config import resolve_interpret
 from repro.numerics.quant import quantize_int8
 
-from .kernel import _amr_matmul_int8_jit, _amr_matmul_int8_lut_jit
+from .kernel import (_amr_matmul_int8_jit, _amr_matmul_int8_lut_grouped_jit,
+                     _amr_matmul_int8_lut_jit)
 from .tiling import pick_tiles
 
 
@@ -77,3 +78,39 @@ def amr_matmul(a: jnp.ndarray, b: jnp.ndarray, *, border: int | None = 8,
     return _amr_matmul_jit(a, b, border=border, rank=rank, method=method,
                            bm=tiles.bm, bn=tiles.bn, bk=tiles.bk,
                            interpret=resolve_interpret(interpret))
+
+
+@partial(jax.jit, static_argnames=("border", "bm", "bn", "bk", "interpret"))
+def _amr_matmul_grouped_jit(a, b, *, border, bm, bn, bk, interpret):
+    qa, sa = quantize_int8(a, axis=-1)               # per-row scale (G, M, 1)
+    qb, sb = quantize_int8(b, axis=-2)               # per-col scale (G, 1, N)
+    table = lut_lib.table_array(border)
+    out = _amr_matmul_int8_lut_grouped_jit(qa, qb, table, bm=bm, bn=bn, bk=bk,
+                                           interpret=interpret)
+    return out.astype(jnp.float32) * sa * sb
+
+
+def amr_matmul_grouped(a: jnp.ndarray, b: jnp.ndarray, *,
+                       border: int | None = 8,
+                       bm: int | None = None, bn: int | None = None,
+                       bk: int | None = None,
+                       interpret: bool | None = None) -> jnp.ndarray:
+    """Grouped float (G, M, K) @ (G, K, N) under bit-exact full-LUT AMR
+    numerics — the activation×activation kernel form (MoE expert capacity
+    buffers, attention score/value contractions after the batch·head
+    leading dims are flattened to one group axis).
+
+    Quantization follows the seam convention (per-row of A, per-column of
+    B), so the output is bit-identical to stacking per-group
+    ``amr_matmul(..., method="lut")`` calls.  Tiles come from the shared
+    autotune table (variant ``lut_grouped``) clamped to shape divisors.
+    """
+    if a.ndim != 3 or b.ndim != 3 or a.shape[0] != b.shape[0]:
+        raise ValueError(
+            f"amr_matmul_grouped takes (G, M, K) @ (G, K, N) with matching "
+            f"group counts, got {a.shape} @ {b.shape}")
+    tiles = pick_tiles(a.shape[1], b.shape[2], a.shape[2],
+                       variant="lut_grouped", bm=bm, bn=bn, bk=bk)
+    return _amr_matmul_grouped_jit(a, b, border=border, bm=tiles.bm,
+                                   bn=tiles.bn, bk=tiles.bk,
+                                   interpret=resolve_interpret(interpret))

@@ -44,16 +44,45 @@ class TileConfig:
 AUTOTUNE: dict[tuple[str, str], TileConfig] = {
     ("tpu", "lowrank"): TileConfig(128, 128, 128),
     ("tpu", "lut"): TileConfig(128, 128, 32),
+    ("tpu", "lut_grouped"): TileConfig(128, 128, 32),
     ("tpu", "inject_replay"): TileConfig(32, 128, 8),
     ("gpu", "lowrank"): TileConfig(64, 128, 64),
     ("gpu", "lut"): TileConfig(64, 128, 32),
+    ("gpu", "lut_grouped"): TileConfig(64, 128, 32),
     ("gpu", "inject_replay"): TileConfig(32, 128, 8),
     ("cpu", "lowrank"): TileConfig(128, 128, 128),
     ("cpu", "lut"): TileConfig(128, 128, 128),
+    ("cpu", "lut_grouped"): TileConfig(128, 128, 128),
     ("cpu", "inject_replay"): TileConfig(64, 256, 16),
 }
 
-VARIANTS = ("lowrank", "lut", "inject_replay")
+VARIANTS = ("lowrank", "lut", "lut_grouped", "inject_replay")
+
+# Fused-attention query-row tiles (kernels/attn_fused), keyed on the
+# backend and a HEAD-DIM BUCKET: the kernel holds a whole (bm, T) score
+# block plus the (T, D)/(T, P) operand panels in VMEM — larger head dims
+# mean proportionally larger panels, so the preferred query tile shrinks
+# as head_dim grows.  T/D/P are never tiled (full-T masked softmax).
+ATTN_AUTOTUNE: dict[tuple[str, int], int] = {
+    ("tpu", 64): 256, ("tpu", 128): 128, ("tpu", 256): 64,
+    ("gpu", 64): 128, ("gpu", 128): 64, ("gpu", 256): 32,
+    ("cpu", 64): 128, ("cpu", 128): 128, ("cpu", 256): 64,
+}
+
+
+def head_dim_bucket(head_dim: int) -> int:
+    """Bucket a head dim to the next power of two in [64, 256] — the key
+    granularity of ``ATTN_AUTOTUNE`` (sub-64 head dims share the 64 row)."""
+    return min(max(64, 1 << max(head_dim - 1, 1).bit_length()), 256)
+
+
+def pick_attn_tile(m: int, head_dim: int, *, backend: str | None = None,
+                   bm: int | None = None) -> int:
+    """Query-row tile for the fused-attention kernel: explicit ``bm`` wins
+    (validated as a divisor of the row count), else the head-dim-bucketed
+    autotune preference clamped to the largest divisor of ``m``."""
+    pref = ATTN_AUTOTUNE[(backend or backend_kind(), head_dim_bucket(head_dim))]
+    return _resolve_dim("bm", "m", m, bm, pref)
 
 
 def _largest_divisor_leq(n: int, cap: int) -> int:

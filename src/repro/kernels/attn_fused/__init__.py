@@ -1,0 +1,3 @@
+from .ops import METHODS, fused_attention, fused_attention_reference
+
+__all__ = ["METHODS", "fused_attention", "fused_attention_reference"]

@@ -1,0 +1,156 @@
+"""Public fused-attention op: the AMR attention step as one Pallas call.
+
+``fused_attention`` consumes the seam's pre-folded operand layout — the
+(G, M, D) query rows, (G, D, T) transposed keys and (G, T, P) values that
+``models/attention._seam_scores`` / ``_seam_combine`` build by folding the
+GQA group into the row dim and flattening (batch, kv head) to one group
+axis — plus an explicit (G, M, T) validity mask.  It returns bit for bit
+what the unfused seam composition returns (``fused_attention_reference``,
+the assertion target of tests/test_attn_fused.py and the ``bit_exact``
+gate of benchmarks/attn_bench.py).
+
+Quantization happens HERE, outside the kernel, with the exact seam front
+ends (``quantize_int8`` for the lut method, ``quantize_int8_ste`` for
+inject — identical scales and integer indices), so the kernel only ever
+sees integer operands and f32 scales; the in-kernel softmax-probability
+re-quantization replicates the same functions (kernel._quantize_probs).
+
+Tiling: only the query-row dim tiles (``tiling.pick_attn_tile``, head-dim
+bucketed); T/D/P stay whole per block — full-T masked softmax, no online
+rescaling (see kernel.py for why that is load-bearing for bit-identity).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lut as lut_lib
+from repro.core.engine import _LANE_BITS
+from repro.kernels.amr_matmul.tiling import pick_attn_tile
+from repro.kernels.pallas_config import resolve_interpret
+from repro.numerics.quant import quantize_int8, quantize_int8_ste
+
+from .kernel import NEG_INF, _attn_fused_inject_jit, _attn_fused_lut_jit
+
+METHODS = ("lut", "inject")
+
+
+def _check_shapes(q, kt, v, mask):
+    if q.ndim != 3 or kt.ndim != 3 or v.ndim != 3 or mask.ndim != 3:
+        raise ValueError(
+            f"fused_attention wants q (G,M,D), kt (G,D,T), v (G,T,P), mask "
+            f"(G,M,T); got {q.shape} / {kt.shape} / {v.shape} / {mask.shape}")
+    G, M, D = q.shape
+    T = kt.shape[-1]
+    P = v.shape[-1]
+    if kt.shape[:2] != (G, D) or v.shape[:2] != (G, T) \
+            or mask.shape != (G, M, T):
+        raise ValueError(
+            f"fused_attention operand shapes disagree: q {q.shape}, "
+            f"kt {kt.shape}, v {v.shape}, mask {mask.shape} (want matching "
+            f"G and D/T/P contractions)")
+    return G, M, D, T, P
+
+
+def fused_attention(q, kt, v, mask, *, border: int = 8, method: str = "lut",
+                    schedule_ref: str | None = None,
+                    scale: float | None = None, bm: int | None = None,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """Fused QK^T -> masked softmax -> PV under AMR product semantics.
+
+    ``q``: (G, M, D) f32 query rows, ``kt``: (G, D, T) transposed keys,
+    ``v``: (G, T, P) values, ``mask``: (G, M, T) bool/int validity (invalid
+    columns take NEG_INF before the softmax).  ``scale`` divides the scores
+    (default sqrt(D), the seam's convention).  ``method="lut"`` gathers the
+    default design point's product table; ``method="inject"`` replays the
+    reduction circuit — any registered schedule via ``schedule_ref``
+    (None = the paper's default for ``border``).  Returns (G, M, P) f32,
+    bit-identical to ``fused_attention_reference`` with the same arguments.
+    """
+    if method not in METHODS:
+        raise ValueError(f"method must be one of {METHODS}, got {method!r}")
+    G, M, D, T, P = _check_shapes(q, kt, v, mask)
+    scale = float(D) ** 0.5 if scale is None else float(scale)
+    bm = pick_attn_tile(M, D, bm=bm)
+    interpret = resolve_interpret(interpret)
+    mask = mask.astype(jnp.int32)
+
+    if method == "lut":
+        if schedule_ref is not None:
+            raise ValueError(
+                "schedule_ref is an inject-method knob (the lut method "
+                "tabulates the default design point for `border`); use "
+                "method='inject' to run a registered schedule")
+        max_abs = lut_lib.table_max_abs(border)
+        for k_len, what in ((D, "QK^T"), (T, "PV")):
+            if k_len * max_abs >= 2**31:
+                raise ValueError(
+                    f"fused_attention {what} int32 accumulator can saturate: "
+                    f"K={k_len} with max|product|={max_abs} gives "
+                    f"{k_len * max_abs} >= 2**31; keep K <= "
+                    f"{(2**31 - 1) // max_abs}")
+        qq, sq = quantize_int8(q, axis=-1)
+        qk, sk = quantize_int8(kt, axis=-2)
+        qv, sv = quantize_int8(v, axis=-2)
+        return _attn_fused_lut_jit(qq, qk, qv, sq, sk, sv, mask,
+                                   lut_lib.table_array(border), bm=bm,
+                                   scale=scale, interpret=interpret)
+
+    # inject: lane-pack K and V per group, in-trace (traced activations —
+    # the WEIGHT_PACKS identity cache is structurally invalid here)
+    from repro.numerics import injection  # lazy: kernels <-> numerics cycle
+    from repro.numerics.approx_matmul import AMRNumerics
+
+    nm = AMRNumerics(mode="amr_inject", border=border,
+                     schedule_ref=schedule_ref)
+    inj = injection.get_injector(nm)
+    for k_len in (D, T):
+        injection.check_accumulation_bound(inj, k_len, schedule=schedule_ref)
+    qf, sq = quantize_int8_ste(q, axis=-1)
+    kf, sk = quantize_int8_ste(kt, axis=-2)
+    vf, sv = quantize_int8_ste(v, axis=-2)
+    iq = jax.lax.stop_gradient(qf).astype(jnp.int32) + 128
+    ik = jax.lax.stop_gradient(kf).astype(jnp.int32) + 128
+    iv = jax.lax.stop_gradient(vf).astype(jnp.int32) + 128
+    kw = jax.vmap(inj.pack_weights)(ik)            # (G, D, nb, Tw)
+    vw = jax.vmap(inj.pack_weights)(iv)            # (G, T, nb, Pw)
+    npad = vw.shape[-1] * _LANE_BITS
+    # pad the value scales to whole words; pad columns are sliced off below
+    sv_pad = jnp.pad(sv, ((0, 0), (0, 0), (0, npad - P)), constant_values=1.0)
+    out = _attn_fused_inject_jit(iq, kw, vw, inj._value_masks, sq, sk, sv_pad,
+                                 mask, lowered=inj.lowered, bm=bm,
+                                 scale=scale, interpret=interpret)
+    return out[:, :, :P]
+
+
+def fused_attention_reference(q, kt, v, mask, *, border: int = 8,
+                              method: str = "lut",
+                              schedule_ref: str | None = None,
+                              scale: float | None = None) -> jnp.ndarray:
+    """The unfused seam composition the kernel must match bit for bit.
+
+    Literally the models/attention.py chain on pre-folded operands: a
+    grouped ``approx_matmul`` at site ``attn.qk``, the sqrt(D) rescale,
+    NEG_INF masking, ``jax.nn.softmax``, and a grouped ``approx_matmul``
+    at site ``attn.pv`` — under ``amr_lut`` (method "lut") or
+    ``amr_inject`` (method "inject") numerics.  Compare under jit on the
+    same backend: eager-vs-jit comparisons see XLA's usual 1-ulp rescale
+    fusion noise, which is not a numerics difference.
+    """
+    if method not in METHODS:
+        raise ValueError(f"method must be one of {METHODS}, got {method!r}")
+    from repro.numerics.approx_matmul import AMRNumerics, approx_matmul
+
+    D = q.shape[-1]
+    scale = float(D) ** 0.5 if scale is None else float(scale)
+    if method == "lut":
+        if schedule_ref is not None:
+            raise ValueError("schedule_ref requires method='inject'")
+        nm = AMRNumerics(mode="amr_lut", border=border)
+    else:
+        nm = AMRNumerics(mode="amr_inject", border=border,
+                         schedule_ref=schedule_ref)
+    scores = approx_matmul(q, kt, nm, site="attn.qk") / scale
+    scores = jnp.where(mask != 0, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return approx_matmul(probs, v, nm, site="attn.pv")

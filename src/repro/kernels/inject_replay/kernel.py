@@ -78,6 +78,64 @@ def _replay_inputs(lowered: LoweredReplay):
     return consts, tuple(bounds)
 
 
+def _replay_block(ia, yw, masks, gm, xi, yi, in3_all, sm_all, cm_all,
+                  perm_all, fin, bw, *, stage_bounds, n_final: int,
+                  offset: int):
+    """Exact AMR products of one replay block, summed over its K axis.
+
+    ``ia``: (bm, bk) int32 operand indices, ``yw``: (bk, n_opbits, bnw)
+    lane-packed weight words, ``masks``: the (256, n_opbits) value->mask
+    table; the remaining arrays are the ``_replay_inputs`` lowering consts.
+    Returns (bm, bnw * 32) int32 = sum_k of the per-pair products.  Shared
+    by the matmul-shaped replay kernel below (one call per K grid step)
+    and the fused-attention kernel (``kernels/attn_fused``), which replays
+    the QK^T and PV contractions back to back inside one grid block.
+    """
+    bm, bk = ia.shape
+    bnw = yw.shape[-1]
+    nb = masks.shape[-1]
+    xm = jnp.take(masks, ia.reshape(-1), axis=0).reshape(bm, bk, nb)
+    xw = xm.transpose(2, 0, 1)[:, :, :, None]   # (n_opbits, bm, bk, 1)
+    ywt = yw.transpose(1, 0, 2)[:, None, :, :]  # (n_opbits, 1, bk, bnw)
+
+    def bc(m):  # (rows,) -> (rows, 1, 1, 1): lift over the batch dims
+        return m.reshape(m.shape[0], 1, 1, 1)
+
+    # PP gates: x masks broadcast against packed y words
+    x = jnp.take(xw, xi, axis=0)
+    y = jnp.take(ywt, yi, axis=0)
+    nx, ny = ~x, ~y
+    vals = ((bc(gm[:, 0]) & (nx & ny)) | (bc(gm[:, 1]) & (nx & y))
+            | (bc(gm[:, 2]) & (x & ny)) | (bc(gm[:, 3]) & (x & y)))
+    # stage loop: cell tensors sliced at static per-stage offsets
+    for c0, c1 in stage_bounds:
+        ins = jnp.take(vals, in3_all[c0:c1].reshape(-1), axis=0)
+        ins = ins.reshape(c1 - c0, 3, *vals.shape[1:])
+        a, b, c = ins[:, 0], ins[:, 1], ins[:, 2]
+        na, nb_, nc = ~a, ~b, ~c
+        minterms = (na & nb_ & nc, na & nb_ & c, na & b & nc, na & b & c,
+                    a & nb_ & nc, a & nb_ & c, a & b & nc, a & b & c)
+        sm, cm = sm_all[c0:c1], cm_all[c0:c1]
+        s_out = bc(sm[:, 0]) & minterms[0]
+        c_out = bc(cm[:, 0]) & minterms[0]
+        for t in range(1, 8):
+            s_out |= bc(sm[:, t]) & minterms[t]
+            c_out |= bc(cm[:, t]) & minterms[t]
+        new = jnp.concatenate([s_out, c_out], 0)
+        vals = jnp.concatenate(
+            [vals, jnp.take(new, perm_all[2 * c0:2 * c1], axis=0)], 0)
+    stored = jnp.take(vals, fin, axis=0)       # (n_final, bm, bk, bnw)
+    # limb-combined products: sum_f 2**pos_f * bit_f - offset, in int32
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, _LANE_BITS), 1)
+    prods = jnp.zeros((bm, bk, bnw, _LANE_BITS), jnp.int32)
+    for f in range(n_final):  # per-final-bit accumulation keeps the
+        # unpacked (bm, bk, bnw, 32) intermediates at 2 live tensors
+        bits = ((stored[f][..., None] >> shifts) & 1).astype(jnp.int32)
+        prods = prods + bw[f] * bits
+    prods = prods - offset                     # exact per-pair products
+    return prods.sum(axis=1).reshape(bm, bnw * _LANE_BITS)
+
+
 def _make_replay_kernel(stage_bounds, *, n_final: int, offset: int, n_k: int):
     """Kernel body; every array constant arrives as a ref, only Python
     scalars (stage offsets, the polarity offset, grid depth) are baked."""
@@ -90,56 +148,11 @@ def _make_replay_kernel(stage_bounds, *, n_final: int, offset: int, n_k: int):
         def _init():
             acc_ref[...] = jnp.zeros_like(acc_ref)
 
-        ia = ia_ref[...]                   # (bm, bk) int32 operand indices
-        yw = yw_ref[...]                   # (bk, n_opbits, bnw) packed words
-        masks = masks_ref[...]             # (256, n_opbits) value->mask table
-        bm, bk = ia.shape
-        bnw = yw.shape[-1]
-        nb = masks.shape[-1]
-        xm = jnp.take(masks, ia.reshape(-1), axis=0).reshape(bm, bk, nb)
-        xw = xm.transpose(2, 0, 1)[:, :, :, None]   # (n_opbits, bm, bk, 1)
-        ywt = yw.transpose(1, 0, 2)[:, None, :, :]  # (n_opbits, 1, bk, bnw)
-
-        def bc(m):  # (rows,) -> (rows, 1, 1, 1): lift over the batch dims
-            return m.reshape(m.shape[0], 1, 1, 1)
-
-        # PP gates: x masks broadcast against packed y words
-        x = jnp.take(xw, xi_ref[...], axis=0)
-        y = jnp.take(ywt, yi_ref[...], axis=0)
-        nx, ny = ~x, ~y
-        gm = gate_ref[...]
-        vals = ((bc(gm[:, 0]) & (nx & ny)) | (bc(gm[:, 1]) & (nx & y))
-                | (bc(gm[:, 2]) & (x & ny)) | (bc(gm[:, 3]) & (x & y)))
-        # stage loop: cell tensors sliced at static per-stage offsets
-        in3_all, sm_all, cm_all, perm_all = (
-            in3_ref[...], sm_ref[...], cm_ref[...], perm_ref[...])
-        for c0, c1 in stage_bounds:
-            ins = jnp.take(vals, in3_all[c0:c1].reshape(-1), axis=0)
-            ins = ins.reshape(c1 - c0, 3, *vals.shape[1:])
-            a, b, c = ins[:, 0], ins[:, 1], ins[:, 2]
-            na, nb_, nc = ~a, ~b, ~c
-            minterms = (na & nb_ & nc, na & nb_ & c, na & b & nc, na & b & c,
-                        a & nb_ & nc, a & nb_ & c, a & b & nc, a & b & c)
-            sm, cm = sm_all[c0:c1], cm_all[c0:c1]
-            s_out = bc(sm[:, 0]) & minterms[0]
-            c_out = bc(cm[:, 0]) & minterms[0]
-            for t in range(1, 8):
-                s_out |= bc(sm[:, t]) & minterms[t]
-                c_out |= bc(cm[:, t]) & minterms[t]
-            new = jnp.concatenate([s_out, c_out], 0)
-            vals = jnp.concatenate(
-                [vals, jnp.take(new, perm_all[2 * c0:2 * c1], axis=0)], 0)
-        stored = jnp.take(vals, fin_ref[...], axis=0)  # (n_final, bm, bk, bnw)
-        # limb-combined products: sum_f 2**pos_f * bit_f - offset, in int32
-        shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, _LANE_BITS), 1)
-        bw = bw_ref[...]
-        prods = jnp.zeros((bm, bk, bnw, _LANE_BITS), jnp.int32)
-        for f in range(n_final):  # per-final-bit accumulation keeps the
-            # unpacked (bm, bk, bnw, 32) intermediates at 2 live tensors
-            bits = ((stored[f][..., None] >> shifts) & 1).astype(jnp.int32)
-            prods = prods + bw[f] * bits
-        prods = prods - offset                     # exact per-pair products
-        acc_ref[...] += prods.sum(axis=1).reshape(bm, bnw * _LANE_BITS)
+        acc_ref[...] += _replay_block(
+            ia_ref[...], yw_ref[...], masks_ref[...], gate_ref[...],
+            xi_ref[...], yi_ref[...], in3_ref[...], sm_ref[...], cm_ref[...],
+            perm_ref[...], fin_ref[...], bw_ref[...],
+            stage_bounds=stage_bounds, n_final=n_final, offset=offset)
 
         @pl.when(k_idx == n_k - 1)
         def _store():

@@ -16,7 +16,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.numerics import AMRNumerics
+from repro.numerics import AMRNumerics, resolve_numerics
+from repro.numerics.approx_matmul import approx_matmul
 from repro.parallel.constraints import ambient_axis_size, pin
 
 from .layers import apply_rope, dense, init_rms_norm, rms_norm
@@ -57,8 +58,33 @@ def _project_qkv(params, x, n_heads, n_kv, head_dim, positions, theta, qk_norm,
     return q, k, v
 
 
-def _gqa_scores(q, k):
-    """q: (B,S,Hq,D), k: (B,T,Hkv,D) -> (B, Hq, S, T) with head grouping."""
+def _seam_scores(q, k, numerics: AMRNumerics):
+    """QK^T through the activation×activation numerics seam (``attn.qk``).
+
+    Folds the GQA group into the row dim — one batched seam call
+    (B, Hkv, g*S, D) @ (B, Hkv, D, T) — so per-row quantization is per
+    (batch, kv head, group, query) row and a slot-batched decode row
+    quantizes exactly as its solo decode would (no cross-slot reduction).
+    """
+    B, S, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    qa = q.reshape(B, S, Hkv, g, D).transpose(0, 2, 3, 1, 4)
+    qa = qa.reshape(B, Hkv, g * S, D)
+    kb = k.transpose(0, 2, 3, 1)                               # (B, Hkv, D, T)
+    scores = approx_matmul(qa, kb, numerics, site="attn.qk") / (D ** 0.5)
+    return scores.reshape(B, Hq, S, T)
+
+
+def _gqa_scores(q, k, numerics=None):
+    """q: (B,S,Hq,D), k: (B,T,Hkv,D) -> (B, Hq, S, T) with head grouping.
+
+    Exact numerics keep the historical einsum formulation; approximate
+    modes route through the seam at site ``attn.qk`` (resolved against a
+    ``NumericsPolicy`` here, so per-layer assignments can pin it)."""
+    numerics = resolve_numerics(numerics, "attn.qk")
+    if numerics is not None and not numerics.is_exact():
+        return _seam_scores(q, k, numerics)
     B, S, Hq, D = q.shape
     Hkv = k.shape[2]
     g = Hq // Hkv
@@ -67,8 +93,26 @@ def _gqa_scores(q, k):
     return scores.reshape(B, Hkv * g, S, k.shape[1])
 
 
-def _gqa_combine(probs, v):
+def _seam_combine(probs, v, numerics: AMRNumerics):
+    """PV through the seam (``attn.pv``): (B, Hkv, g*S, T) @ (B, Hkv, T, D)
+    with the same group folding (and bit-exactness argument) as
+    ``_seam_scores`` — probabilities quantize per query row, values per
+    (kv head, channel) column over the cache axis."""
+    B, Hq, S, T = probs.shape
+    Hkv, D = v.shape[2], v.shape[3]
+    g = Hq // Hkv
+    pa = probs.reshape(B, Hkv, g * S, T)
+    vb = v.transpose(0, 2, 1, 3)                               # (B, Hkv, T, D)
+    out = approx_matmul(pa, vb, numerics, site="attn.pv")
+    out = out.reshape(B, Hkv, g, S, D).transpose(0, 3, 1, 2, 4)
+    return out.reshape(B, S, Hq, D).astype(probs.dtype)
+
+
+def _gqa_combine(probs, v, numerics=None):
     """probs: (B, Hq, S, T), v: (B,T,Hkv,D) -> (B,S,Hq,D)."""
+    numerics = resolve_numerics(numerics, "attn.pv")
+    if numerics is not None and not numerics.is_exact():
+        return _seam_combine(probs, v, numerics)
     B, Hq, S, T = probs.shape
     Hkv = v.shape[2]
     g = Hq // Hkv
@@ -100,9 +144,9 @@ def attend_full(
     q, k, v = _project_qkv(params, x, n_heads, n_kv, head_dim, positions, theta,
                            qk_norm, numerics, eps)
     if S >= _CHUNKED_THRESHOLD and S % _Q_CHUNK == 0 and causal:
-        out = _chunked_attention(q, k, v, window, unroll=unroll)
+        out = _chunked_attention(q, k, v, window, numerics, unroll=unroll)
     else:
-        scores = _gqa_scores(q, k).astype(jnp.float32)
+        scores = _gqa_scores(q, k, numerics).astype(jnp.float32)
         i = jnp.arange(S)[:, None]
         j = jnp.arange(S)[None, :]
         mask = (j <= i) if causal else jnp.ones((S, S), bool)
@@ -110,7 +154,7 @@ def attend_full(
             mask &= jnp.abs(i - j) < window
         scores = jnp.where(mask[None, None], scores, NEG_INF)
         probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-        out = _gqa_combine(probs, v)
+        out = _gqa_combine(probs, v, numerics)
     out = pin(out.reshape(B, S, n_heads * head_dim), "batch", None, "tp")
     return pin(dense(out, params["wo"], numerics, site="attn.wo"), "batch", None, None)
 
@@ -119,7 +163,8 @@ _Q_CHUNK = 2048            # query-block size for chunked attention
 _CHUNKED_THRESHOLD = 16384  # use chunked attention from this sequence length
 
 
-def _chunked_attention(q, k, v, window: int, *, unroll: bool = False):
+def _chunked_attention(q, k, v, window: int, numerics=None, *,
+                       unroll: bool = False):
     """Query-block attention: never materialises the S x S score matrix.
 
     Memory per block is (B, H, Q_CHUNK, S) — the production path for 32k+
@@ -134,7 +179,7 @@ def _chunked_attention(q, k, v, window: int, *, unroll: bool = False):
 
     def block(_, inp):
         qi, off = inp
-        scores = _gqa_scores(qi, k).astype(jnp.float32)         # (B,H,qc,S)
+        scores = _gqa_scores(qi, k, numerics).astype(jnp.float32)  # (B,H,qc,S)
         rows = off + jnp.arange(_Q_CHUNK)[:, None]
         cols = jnp.arange(S)[None, :]
         mask = cols <= rows
@@ -142,7 +187,7 @@ def _chunked_attention(q, k, v, window: int, *, unroll: bool = False):
             mask &= (rows - cols) < window
         scores = jnp.where(mask[None, None], scores, NEG_INF)
         probs = jax.nn.softmax(scores, axis=-1).astype(qi.dtype)
-        return None, _gqa_combine(probs, v)                     # (B,qc,H,D)
+        return None, _gqa_combine(probs, v, numerics)           # (B,qc,H,D)
 
     _, outs = jax.lax.scan(block, None, (qb, offs), unroll=nb if unroll else 1)
     return jnp.moveaxis(outs, 0, 1).reshape(B, S, Hq, D)
@@ -209,7 +254,7 @@ def attend_decode(
     new_k = jnp.where(hit, k.astype(cache.k.dtype), cache.k)
     new_v = jnp.where(hit, v.astype(cache.v.dtype), cache.v)
 
-    scores = _gqa_scores(q, new_k).astype(jnp.float32)  # (B, Hq, 1, C)
+    scores = _gqa_scores(q, new_k, numerics).astype(jnp.float32)  # (B, Hq, 1, C)
     idx = jnp.arange(C)[None, :]
     valid = idx <= slot[:, None] if window <= 0 else (
         (idx <= slot[:, None]) | (pos_b[:, None] >= C)  # full ring: all live
@@ -224,7 +269,7 @@ def attend_decode(
     else:
         scores = pin(scores, "batch", None, None, "tp")
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-    out = _gqa_combine(probs, new_v).reshape(B, 1, n_heads * head_dim)
+    out = _gqa_combine(probs, new_v, numerics).reshape(B, 1, n_heads * head_dim)
     out = pin(dense(out, params["wo"], numerics, site="attn.wo"), "batch", None, None)
     return out, KVCache(new_k, new_v, pos + 1)
 
@@ -249,9 +294,11 @@ def attend_cross(params, x, enc_kv: tuple[jnp.ndarray, jnp.ndarray], *,
     B, S, _ = x.shape
     q = dense(x, params["wq"], numerics, site="xattn.wq").reshape(B, S, n_heads, head_dim)
     k, v = enc_kv
-    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) / (head_dim ** 0.5)
+    # Hq == Hkv here, so the GQA helpers apply with group size 1 — cross
+    # attention shares the attn.qk / attn.pv seam sites with self-attention
+    scores = _gqa_scores(q, k, numerics).astype(jnp.float32)
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-    out = jnp.einsum("bhst,bthd->bshd", probs, v).reshape(B, S, n_heads * head_dim)
+    out = _gqa_combine(probs, v, numerics).reshape(B, S, n_heads * head_dim)
     return dense(out, params["wo"], numerics, site="xattn.wo")
 
 
@@ -286,9 +333,9 @@ def attend_prefill(
     q, k, v = _project_qkv(params, x, n_heads, n_kv, head_dim, positions, theta,
                            qk_norm, numerics, eps)
     if S >= _CHUNKED_THRESHOLD and S % _Q_CHUNK == 0:
-        out = _chunked_attention(q, k, v, window, unroll=unroll)
+        out = _chunked_attention(q, k, v, window, numerics, unroll=unroll)
     else:
-        scores = _gqa_scores(q, k).astype(jnp.float32)
+        scores = _gqa_scores(q, k, numerics).astype(jnp.float32)
         i = jnp.arange(S)[:, None]
         j = jnp.arange(S)[None, :]
         mask = j <= i
@@ -296,7 +343,7 @@ def attend_prefill(
             mask &= (i - j) < window
         scores = jnp.where(mask[None, None], scores, NEG_INF)
         probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-        out = _gqa_combine(probs, v)
+        out = _gqa_combine(probs, v, numerics)
     out = pin(out.reshape(B, S, n_heads * head_dim), "batch", None, "tp")
     out = pin(dense(out, params["wo"], numerics, site="attn.wo"), "batch", None, None)
 

@@ -113,25 +113,21 @@ def _moe_forward_global(
         ybuf = out_pin(jnp.einsum("ecf,efd->ecd", h, params["w_down"]))  # (E, C, D)
     else:
         from repro.numerics.approx_matmul import approx_matmul
-        from repro.numerics.context import numerics_scope
 
-        # The E per-expert matmuls are ONE approx_matmul trace under vmap —
-        # site/step/layer are equal across the map, so without a per-expert
-        # scope coordinate every expert would draw the IDENTICAL amr_noise
-        # tensor. The expert index rides in as a vmapped operand and folds
-        # into the key via numerics_scope(unit=e).
-        eids = jnp.arange(E, dtype=jnp.int32)
+        # ONE grouped seam call per projection: the (E, C, D) @ (E, D, F)
+        # activation-form batched matmul (sites "moe.expert.*", resolvable
+        # by the "moe.expert" policy prefix — numerics/policy.py).  The
+        # grouped route quantizes per expert (per-row of the capacity
+        # buffer, per-column of each expert's weight panel), bit-identical
+        # to the old per-expert vmap; amr_noise draws ONE (E, C, F) tensor,
+        # so experts decorrelate without the unit-scope key plumbing.
+        def expert_mm(a, w, site):
+            return approx_matmul(a, w, numerics, site=site).astype(x.dtype)
 
-        def per_e(site):
-            def one(e, xe, we):
-                with numerics_scope(unit=e):
-                    return approx_matmul(xe, we, numerics, site=site)
-            return jax.vmap(one)
-
-        g = per_e("moe.w_gate")(eids, xbuf, params["w_gate"])
-        u = per_e("moe.w_up")(eids, xbuf, params["w_up"])
+        g = hidden_pin(expert_mm(xbuf, params["w_gate"], "moe.expert.w_gate"))
+        u = hidden_pin(expert_mm(xbuf, params["w_up"], "moe.expert.w_up"))
         h = (jax.nn.silu(g) * u).astype(x.dtype)
-        ybuf = per_e("moe.w_down")(eids, h, params["w_down"]).astype(x.dtype)  # (E, C, D)
+        ybuf = out_pin(expert_mm(h, params["w_down"], "moe.expert.w_down"))
 
     ypad = jnp.pad(ybuf, ((0, 0), (0, 1), (0, 0)))                     # slot C reads 0
     gathered = ypad[fid_s, slot] * (fw_s * keep)[:, None].astype(x.dtype)

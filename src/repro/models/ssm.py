@@ -25,7 +25,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import SSMConfig
-from repro.numerics import AMRNumerics
+from repro.numerics import AMRNumerics, resolve_numerics
+from repro.numerics.approx_matmul import approx_matmul
 from repro.parallel.constraints import pin
 
 from .layers import dense, init_rms_norm, rms_norm
@@ -72,12 +73,19 @@ def _causal_conv(xs: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray
     return jax.nn.silu(out + b)
 
 
-def ssd_chunked(x, dt, a_log, b, c, chunk: int, return_state: bool = False):
+def ssd_chunked(x, dt, a_log, b, c, chunk: int, return_state: bool = False,
+                numerics=None):
     """SSD scan. x:(B,S,H,P) dt:(B,S,H) b,c:(B,S,G,N) -> y:(B,S,H,P).
 
     return_state: also return the final (B,H,N,P) state (prefill->decode
     handoff). Pure-jnp reference implementation (kernels/ssd_scan/ref.py
     re-exports this; the Pallas kernel matches it in the sweep tests).
+
+    ``numerics`` routes the inter-chunk state readout (the C · h_prev
+    contraction) through the activation×activation seam at site
+    ``ssm.scan``; None / exact keeps the historical einsum bit-for-bit.
+    The intra-chunk dual quadratic form stays exact: its masked-decay
+    weighting has no plain matmul form (DESIGN.md §Arch-applicability).
     """
     B, S, H, P = x.shape
     G, N = b.shape[2], b.shape[3]
@@ -134,7 +142,15 @@ def ssd_chunked(x, dt, a_log, b, c, chunk: int, return_state: bool = False):
     )
     h_prev = jnp.moveaxis(h_prev, 0, 1)                        # (B,nc,H,N,P) state BEFORE chunk
 
-    y_inter = jnp.einsum("bnthi,bnth,bnhip->bnthp", ch, jnp.exp(cum), h_prev)
+    nm = resolve_numerics(numerics, "ssm.scan")
+    if nm is not None and not nm.is_exact():
+        # decay-weighted C panel against the carried state, grouped per
+        # (batch, chunk, head): (B,nc,H,Q,N) @ (B,nc,H,N,P) seam call
+        dc = (ch * jnp.exp(cum)[..., None]).transpose(0, 1, 3, 2, 4)
+        y_inter = approx_matmul(dc, h_prev, nm,
+                                site="ssm.scan").transpose(0, 1, 3, 2, 4)
+    else:
+        y_inter = jnp.einsum("bnthi,bnth,bnhip->bnthp", ch, jnp.exp(cum), h_prev)
     y = (y_intra + y_inter).reshape(B, S_pad, H, P)[:, :S]
     if return_state:
         # note: state axes are (H, N, P); SSMState stores (H, N, P) too
@@ -162,7 +178,7 @@ def ssm_forward(params: dict, xin: jnp.ndarray, d_model: int, cfg: SSMConfig,
     b = b.reshape(B_, S, cfg.n_groups, cfg.d_state)
     c = c.reshape(B_, S, cfg.n_groups, cfg.d_state)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
-    y = ssd_chunked(x, dt, params["a_log"], b, c, cfg.chunk)
+    y = ssd_chunked(x, dt, params["a_log"], b, c, cfg.chunk, numerics=numerics)
     y = y + params["d_skip"][None, None, :, None] * x.astype(jnp.float32)
     y = pin(y.reshape(B_, S, d_inner), "batch", None, "tp").astype(xin.dtype)
     y = y * jax.nn.silu(z)
@@ -228,7 +244,14 @@ def ssm_decode(params: dict, xin: jnp.ndarray, state: SSMState, d_model: int,
 
     xdt = x * dt[..., None]                                    # (B,H,P)
     h_new = decay[..., None, None] * state.h + bh[..., None] * xdt[:, :, None, :]
-    y = jnp.einsum("bhn,bhnp->bhp", ch, h_new) + params["d_skip"][None, :, None] * x
+    nm = resolve_numerics(numerics, "ssm.scan")
+    if nm is not None and not nm.is_exact():
+        # one-row state readout through the seam: (B,H,1,N) @ (B,H,N,P)
+        yss = approx_matmul(ch[:, :, None, :], h_new, nm,
+                            site="ssm.scan")[:, :, 0, :]
+    else:
+        yss = jnp.einsum("bhn,bhnp->bhp", ch, h_new)
+    y = yss + params["d_skip"][None, :, None] * x
     y = y.reshape(Bt, d_inner).astype(xin.dtype)
     y = y * jax.nn.silu(z)
     y = rms_norm(y, params["norm"], eps)
@@ -264,7 +287,7 @@ def ssm_prefill(params: dict, xin: jnp.ndarray, d_model: int, cfg: SSMConfig,
     c = c.reshape(B_, S, cfg.n_groups, cfg.d_state)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
     y, h_final = ssd_chunked(x, dt, params["a_log"], b, c, cfg.chunk,
-                             return_state=True)
+                             return_state=True, numerics=numerics)
     y = y + params["d_skip"][None, None, :, None] * x.astype(jnp.float32)
     y = pin(y.reshape(B_, S, d_inner), "batch", None, "tp").astype(xin.dtype)
     y = y * jax.nn.silu(z)

@@ -28,9 +28,15 @@ Modes (DESIGN.md §2/§3; docs/numerics.md has the full dispatch table):
                  real TPU backends, interpreter mode on CPU/GPU
                  (REPRO_PALLAS_INTERPRET overrides; kernels/pallas_config).
 
-All functions take A: (..., M, K), B: (K, N) and contract the last/first
-axes, matching how dense layers consume them. jit/pjit-safe; the LUT and
-factors are closed-over constants (baked into the executable), pulled from
+All functions take A: (..., M, K) and B: (K, N) **or** a batched
+B: (..., K, N) whose leading dims broadcast against A's — the weight-matmul
+form dense layers consume, and the activation×activation form attention
+scores (QK^T), attention-value contraction (PV), the MoE expert grouped
+matmul and the SSD scan readout consume.  Quantization is always per-row
+of A (axis=-1) and per-column of B (axis=-2 — identical to axis=0 for the
+2-D weight form), so a batched call is bit-identical to stacking the
+per-group un-batched calls.  jit/pjit-safe; the LUT and factors are
+closed-over constants (baked into the executable), pulled from
 core/lut.py's process-level caches — never rebuilt per call site.
 
 Dispatch goes through the mode REGISTRY (numerics/registry.py): each
@@ -135,10 +141,11 @@ def _lut_matmul(a: jnp.ndarray, b: jnp.ndarray, table, max_abs: int,
             f">= 2**31 = {2**31}; keep K <= {(2**31 - 1) // max_abs} "
             f"(or split the contraction before the matmul)")
     qa, sa = quantizer(a, axis=-1)               # per-row scale (..., M, 1)
-    qb, sb = quantizer(b, axis=0)                # per-col scale (1, N)
+    qb, sb = quantizer(b, axis=-2)               # per-col scale (..., 1, N)
     ia = jax.lax.stop_gradient(qa).astype(jnp.int32) + 128  # (..., M, K)
-    ib = jax.lax.stop_gradient(qb).astype(jnp.int32) + 128  # (K, N)
-    prods = table[ia[..., :, :, None], ib[None, :, :]]  # (..., M, K, N)
+    ib = jax.lax.stop_gradient(qb).astype(jnp.int32) + 128  # (..., K, N)
+    # the index arrays broadcast their (possibly batched) leading dims
+    prods = table[ia[..., :, :, None], ib[..., None, :, :]]  # (..., M, K, N)
     acc = prods.sum(axis=-2).astype(jnp.float32)
     return acc * sa * sb
 
@@ -169,27 +176,42 @@ def matmul_amr_lowrank(a: jnp.ndarray, b: jnp.ndarray, border: int, rank: int) -
 def _lowrank_fwd(a, b, border, rank):
     u, v = _lowrank_constants(border, rank)
     qa, sa = quantize_int8_ste(a, axis=-1)
-    qb, sb = quantize_int8_ste(b, axis=0)
+    qb, sb = quantize_int8_ste(b, axis=-2)
     ia = jax.lax.stop_gradient(qa).astype(jnp.int32) + 128
     ib = jax.lax.stop_gradient(qb).astype(jnp.int32) + 128
     K = a.shape[-1]
     ua = u[ia].astype(jnp.bfloat16)              # (..., M, K, r) 1-D LUTs
-    vb = v[ib].astype(jnp.bfloat16)              # (K, N, r)
+    vb = v[ib].astype(jnp.bfloat16)              # (..., K, N, r)
     a_aug = jnp.concatenate([qa[..., None].astype(jnp.bfloat16), ua], axis=-1)
     a_aug = a_aug.reshape(*a.shape[:-1], K * (1 + rank))
-    b_aug = jnp.concatenate([qb[:, None, :].astype(jnp.bfloat16),
-                             vb.transpose(0, 2, 1)], axis=1)
-    b_aug = b_aug.reshape(K * (1 + rank), b.shape[-1])
+    b_aug = jnp.concatenate([qb[..., :, None, :].astype(jnp.bfloat16),
+                             jnp.moveaxis(vb, -1, -2)], axis=-2)
+    b_aug = b_aug.reshape(*b.shape[:-2], K * (1 + rank), b.shape[-1])
     out = jnp.matmul(a_aug, b_aug, preferred_element_type=jnp.float32)
     return out * sa * sb, (a, b)
 
 
+def _reduce_to_shape(g: jnp.ndarray, shape: tuple) -> jnp.ndarray:
+    """Sum a gradient down to ``shape`` (undo matmul leading-dim broadcast)."""
+    if g.shape == tuple(shape):
+        return g
+    extra = g.ndim - len(shape)
+    if extra:
+        g = g.sum(axis=tuple(range(extra)))
+    keep = tuple(i for i, (gd, sd) in enumerate(zip(g.shape, shape))
+                 if gd != sd)
+    return g.sum(axis=keep, keepdims=True) if keep else g
+
+
 def _lowrank_bwd(border, rank, res, g):
     a, b = res
-    ga = jnp.matmul(g, b.T.astype(g.dtype)).astype(a.dtype)
-    gb = jnp.matmul(a.reshape(-1, a.shape[-1]).T.astype(g.dtype),
-                    g.reshape(-1, g.shape[-1])).astype(b.dtype)
-    return ga, gb
+    ga = jnp.matmul(g, jnp.swapaxes(b, -1, -2).astype(g.dtype))
+    gb = jnp.matmul(jnp.swapaxes(a, -1, -2).astype(g.dtype), g) \
+        if b.ndim > 2 else \
+        jnp.matmul(a.reshape(-1, a.shape[-1]).T.astype(g.dtype),
+                   g.reshape(-1, g.shape[-1]))
+    return (_reduce_to_shape(ga, a.shape).astype(a.dtype),
+            _reduce_to_shape(gb, b.shape).astype(b.dtype))
 
 
 matmul_amr_lowrank.defvjp(_lowrank_fwd, _lowrank_bwd)
@@ -209,12 +231,35 @@ def matmul_amr_kernel(a: jnp.ndarray, b: jnp.ndarray, border: int, rank: int) ->
 
 
 def _kernel_fwd(a, b, border, rank):
-    from repro.kernels.amr_matmul.ops import amr_matmul  # lazy: break pkg cycle
+    from repro.kernels.amr_matmul.ops import (amr_matmul,  # lazy: pkg cycle
+                                              amr_matmul_grouped)
 
-    a2 = a.reshape(-1, a.shape[-1])
-    out = amr_matmul(a2, b, border=border, rank=max(rank, 1),
-                     method="lut" if rank == 0 else "lowrank")
-    return out.reshape(*a.shape[:-1], b.shape[-1]), (a, b)
+    if b.ndim == 2:
+        a2 = a.reshape(-1, a.shape[-1])
+        out = amr_matmul(a2, b, border=border, rank=max(rank, 1),
+                         method="lut" if rank == 0 else "lowrank")
+        return out.reshape(*a.shape[:-1], b.shape[-1]), (a, b)
+    # activation×activation form: B carries leading batch dims.  rank == 0
+    # runs the grouped full-LUT Pallas kernel (one grid axis per group —
+    # the MoE grouped-matmul variant, docs/kernels.md); rank > 0 falls back
+    # to the XLA augmented-K batched matmul, the same math the low-rank
+    # kernel implements per block.
+    a3, b3, lead = _broadcast_groups(a, b)
+    if rank == 0:
+        out = amr_matmul_grouped(a3, b3, border=border)
+    else:
+        out = _lowrank_fwd(a3, b3, border, rank)[0]
+    return out.reshape(*lead, a.shape[-2], b.shape[-1]), (a, b)
+
+
+def _broadcast_groups(a: jnp.ndarray, b: jnp.ndarray):
+    """Broadcast A/B leading dims together and flatten them to one group
+    axis: (..., M, K), (..., K, N) -> (G, M, K), (G, K, N), lead-shape."""
+    lead = jnp.broadcast_shapes(a.shape[:-2], b.shape[:-2])
+    a3 = jnp.broadcast_to(a, (*lead, *a.shape[-2:]))
+    b3 = jnp.broadcast_to(b, (*lead, *b.shape[-2:]))
+    g = math.prod(lead) if lead else 1
+    return (a3.reshape(g, *a.shape[-2:]), b3.reshape(g, *b.shape[-2:]), lead)
 
 
 matmul_amr_kernel.defvjp(_kernel_fwd, _lowrank_bwd)
@@ -249,11 +294,21 @@ def _inject_fwd(a, b, numerics):
 
     inj = injection.get_injector(numerics)
     qa, sa = quantize_int8_ste(a, axis=-1)
-    qb, sb = quantize_int8_ste(b, axis=0)
+    qb, sb = quantize_int8_ste(b, axis=-2)
     ia = jax.lax.stop_gradient(qa).astype(jnp.int32) + 128  # (..., M, K)
-    ib = jax.lax.stop_gradient(qb).astype(jnp.int32) + 128  # (K, N)
+    ib = jax.lax.stop_gradient(qb).astype(jnp.int32) + 128  # (..., K, N)
     handle = numerics.schedule_ref  # None = default design point (self-labels)
-    if resolve_inject_impl(numerics.inject_impl) == "pallas":
+    if ib.ndim > 2:
+        # activation×activation form: the B operand is traced and batched,
+        # so there is no reusable weight pack — injection's grouped route
+        # lane-packs each group on the fly inside the trace (same replay,
+        # same int32-saturation guard; injection.injected_matmul_grouped).
+        ia3, ib3, lead = _broadcast_groups(ia, ib)
+        acc = injection.injected_matmul_grouped(
+            inj, ia3, ib3, schedule=handle,
+            impl=resolve_inject_impl(numerics.inject_impl))
+        acc = acc.reshape(*lead, ia.shape[-2], ib.shape[-1])
+    elif resolve_inject_impl(numerics.inject_impl) == "pallas":
         from repro.kernels.inject_replay import inject_replay_matmul
 
         acc = inject_replay_matmul(inj, ia, ib, schedule=handle)  # int32, exact
@@ -342,7 +397,7 @@ def matmul_amr_noise(a: jnp.ndarray, b: jnp.ndarray, border: int, key: jax.Array
     """
     mu, sigma = _noise_constants(border)
     qa, sa = quantize_int8_ste(a, axis=-1)
-    qb, sb = quantize_int8_ste(b, axis=0)
+    qb, sb = quantize_int8_ste(b, axis=-2)
     k = a.shape[-1]
     exact = jnp.matmul(qa, qb)
     nb = _key_batch(key)
@@ -450,7 +505,7 @@ def _grid_diff(out, ref, a, b):
     |acc| < 2**24, i.e. for oracle-sized shapes — the regime the
     conformance matrix audits.)
     """
-    quantum = quantize_int8(a, axis=-1)[1] * quantize_int8(b, axis=0)[1]
+    quantum = quantize_int8(a, axis=-1)[1] * quantize_int8(b, axis=-2)[1]
     return jnp.max(jnp.abs(jnp.round(out / quantum) - jnp.round(ref / quantum)))
 
 

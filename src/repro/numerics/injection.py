@@ -43,8 +43,8 @@ import numpy as np
 from repro.core import engine, reduction
 
 __all__ = ["register_schedule", "resolve_schedule", "get_injector",
-           "injected_matmul_int", "plan_chunks", "check_accumulation_bound",
-           "schedule_label", "packed_weights"]
+           "injected_matmul_int", "injected_matmul_grouped", "plan_chunks",
+           "check_accumulation_bound", "schedule_label", "packed_weights"]
 
 # Registered custom schedules (DSE candidates etc.), keyed by handle.
 # Default design points (schedule_ref=None) are NOT cached here — they go
@@ -185,6 +185,21 @@ class _WeightPackCache:
         self._maxsize = maxsize
 
     def get(self, inj: engine.CompiledInjector, ib):
+        import jax
+
+        if isinstance(ib, jax.core.Tracer) or not isinstance(ib, jax.Array):
+            # A traced (or otherwise non-concrete) operand has no stable
+            # object identity across traces: caching its pack under id()
+            # would serve one trace's garbage to the next.  This bites
+            # exactly when the B side is an ACTIVATION (QK^T / PV / grouped
+            # expert matmuls) — those must take the pack-free in-trace
+            # route (packed_weights / injected_matmul_grouped), never this
+            # cache.
+            raise TypeError(
+                f"WEIGHT_PACKS caches packs of concrete jax.Array weights "
+                f"keyed on array identity; got {type(ib).__name__}. Traced "
+                f"activation operands must be lane-packed inside the trace "
+                f"(packed_weights() bypasses the cache for them).")
         key = (id(inj), id(ib))
         hit = self._packs.get(key)
         if hit is not None:
@@ -277,6 +292,47 @@ def injected_matmul_int(inj: engine.CompiledInjector, ia, ib,
     else:
         _, out = jax.lax.scan(lambda c, x: (c, row_block(x)), None, xs)
     return out.reshape(rows, npad)[:, :N].reshape(*lead, M, N)
+
+
+def injected_matmul_grouped(inj: engine.CompiledInjector, ia, ib,
+                            max_pairs: int = MAX_PAIRS_PER_CHUNK, *,
+                            schedule: str | None = None,
+                            impl: str = "xla"):
+    """Activation×activation form: per-group B operands, packed on the fly.
+
+    ``ia``: (G, M, K) and ``ib``: (G, K, N) traced int32 operand indices —
+    one independent matmul per group (attention heads, MoE experts, SSD
+    scan states).  Returns (G, M, N) int32, bit-identical to running
+    ``injected_matmul_int`` per group.  Here the B side is a traced
+    ACTIVATION, so there is no reusable weight pack: the identity-keyed
+    ``WEIGHT_PACKS`` cache is structurally invalid (and rejects tracers,
+    see ``_WeightPackCache.get``) and each group's lane pack is instead
+    built inside the trace, under ``jax.vmap`` of the unbatched replay —
+    packed words exist only inside the executable and are rebuilt from the
+    live operands on every call.  The int32-saturation guard is the same
+    one the weight path applies (``check_accumulation_bound`` on K).
+
+    ``impl`` selects the per-group replay: ``"xla"`` (the outer-product
+    replay, chunked under ``max_pairs``) or ``"pallas"`` (the
+    ``inject_replay`` kernel, batched over the group axis by vmap's
+    pallas_call batching rule — one extra grid dimension).
+    """
+    import jax
+
+    if ia.ndim != 3 or ib.ndim != 3 or ia.shape[0] != ib.shape[0]:
+        raise ValueError(
+            f"injected_matmul_grouped wants ia (G, M, K) and ib (G, K, N) "
+            f"with matching G, got {ia.shape} / {ib.shape}")
+    check_accumulation_bound(inj, ia.shape[-1], schedule=schedule)
+    if impl == "pallas":
+        from repro.kernels.inject_replay import inject_replay_matmul  # lazy
+
+        return jax.vmap(
+            lambda x, y: inject_replay_matmul(inj, x, y, schedule=schedule)
+        )(ia, ib)
+    return jax.vmap(
+        lambda x, y: injected_matmul_int(inj, x, y, max_pairs,
+                                         schedule=schedule))(ia, ib)
 
 
 def _injected_matmul_pairs(inj: engine.CompiledInjector, ia, ib,

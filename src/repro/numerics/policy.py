@@ -120,6 +120,13 @@ class PerLayerPolicy:
     ``approx_matmul``) resolve with ``layer=None`` and therefore fall back
     to ``site``/``default`` — layer-keyed entries only apply to the decoder
     stack whose flat indices they name.
+
+    Site keys match by DOTTED PREFIX: a lookup tries the exact label
+    first, then walks up the dotted hierarchy — an entry ``"moe.expert"``
+    covers ``"moe.expert.w_gate"``/``"moe.expert.w_up"``/... unless a
+    longer (more specific) entry exists.  The walk applies within each
+    precedence level, so an exact-or-prefix ``(layer, site)`` entry still
+    beats a plain ``layer`` entry, which beats any ``site`` entry.
     """
 
     default: AMRNumerics = AMRNumerics("exact")
@@ -176,19 +183,30 @@ class PerLayerPolicy:
             self.__dict__["_layer_site_map_cache"] = m
         return m
 
+    @staticmethod
+    def _site_lookup(m: dict, key, site: str):
+        """Exact site match first, then the longest dotted prefix: an
+        entry keyed ``"moe.expert"`` resolves ``"moe.expert.w_up"``."""
+        while True:
+            nm = m.get(key(site))
+            if nm is not None or "." not in site:
+                return nm
+            site = site.rsplit(".", 1)[0]
+
     def resolve(self, site: str | None = None,
                 layer: int | None = None) -> AMRNumerics:
         if layer is not None:
             layer = int(layer)
             if site is not None:
-                nm = self._layer_site_map.get((layer, site))
+                nm = self._site_lookup(self._layer_site_map,
+                                       lambda s: (layer, s), site)
                 if nm is not None:
                     return nm
             nm = self._layer_map.get(layer)
             if nm is not None:
                 return nm
         if site is not None:
-            nm = self._site_map.get(site)
+            nm = self._site_lookup(self._site_map, lambda s: s, site)
             if nm is not None:
                 return nm
         return self.default

@@ -166,8 +166,9 @@ def test_moe_experts_draw_distinct_noise():
 
 
 def test_moe_inject_unit_scope_stays_deterministic():
-    """unit only feeds the PRNG: deterministic modes must be unaffected,
-    and the MoE inject path must still pass the audit bit-identity."""
+    """Deterministic modes must be repeatable across calls, and the MoE
+    grouped expert matmuls (one batched seam call per projection, sites
+    ``moe.expert.*``) must pass the audit bit-identity vs the LUT oracle."""
     cfg = MoEConfig(n_experts=4, top_k=2, d_ff_expert=32)
     params = init_moe(jax.random.PRNGKey(0), 16, cfg, jnp.float32)
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 16))
@@ -185,4 +186,5 @@ def test_moe_inject_unit_scope_stays_deterministic():
     assert bool(jnp.all(out1 == out2))
     jax.effects_barrier()
     assert trace.bit_exact(), trace.sites
-    assert set(trace.sites) == {"moe.w_gate", "moe.w_up", "moe.w_down"}
+    assert set(trace.sites) == {"moe.expert.w_gate", "moe.expert.w_up",
+                                "moe.expert.w_down"}

@@ -10,6 +10,7 @@ from _markers import nightly
 
 from repro.configs import ALL_NAMES
 from repro.conformance import (
+    ACTIVATION_SITES,
     PARITY_TOL,
     REPRESENTATIVE,
     arch_mode_arms,
@@ -45,6 +46,12 @@ def test_representative_inject_bit_identity(family, arch):
     assert row["sites"] > 0 and row["calls"] > 0, row
     assert row["bit_exact"], (
         f"{arch}: inject != LUT oracle at sites {row['site_diffs']}")
+    # hot-path coverage: the family's activation×activation sites must all
+    # appear in the audit (and, via the assertion above, be bit-identical)
+    missing = ACTIVATION_SITES[family] - set(row["site_diffs"])
+    assert not missing, (
+        f"{arch}: activation seam sites {sorted(missing)} never reached the "
+        f"audit — a call site fell back to plain einsum?")
 
 
 @pytest.mark.parametrize("family,arch", FAMILY_REPS)

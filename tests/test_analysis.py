@@ -75,6 +75,26 @@ def test_rpl003_unlabeled_site(tmp_path):
     assert [(f.rule, f.line) for f in found] == [("RPL003", 4)]
 
 
+def test_rpl003_raw_matmul_in_models(tmp_path):
+    src = ("import jax.numpy as jnp\n"
+           "from jax import lax\n\n"
+           "def scores(q, k, probs, v):\n"
+           "    s = jnp.einsum('bsd,btd->bst', q, k)\n"
+           "    o = jnp.matmul(probs, v)\n"
+           "    return s, lax.dot_general(o, v, (((1,), (0,)), ((), ())))\n")
+    found = _lint(tmp_path, "src/repro/models/raw.py", src)
+    assert [(f.rule, f.line) for f in found] == \
+        [("RPL003", 5), ("RPL003", 6), ("RPL003", 7)]
+    assert "bypasses the numerics seam" in found[0].message
+    # raw matmuls OUTSIDE models/ are other layers' business (kernels,
+    # optimizer, conformance harness) — only the model layer must route
+    # its contractions through the seam
+    assert not _lint(tmp_path, "src/repro/kernels/raw.py", src)
+    # a bare-name einsum (no module root) is not attributable: skipped
+    assert not _lint(tmp_path, "src/repro/models/bare.py",
+                     "def f(a, b, einsum):\n    return einsum('ij,jk', a, b)\n")
+
+
 def test_rpl004_pallas_captured_const(tmp_path):
     src = ("import jax.numpy as jnp\n"
            "from jax.experimental import pallas as pl\n\n"
@@ -165,7 +185,9 @@ def test_allowlist_rejects_malformed(tmp_path):
 
 def test_committed_tree_lints_clean():
     """The acceptance gate: the repo's own sources produce zero findings
-    with the committed (empty) allowlist — what CI's analysis job runs."""
+    with the committed allowlist (RPL003 entries naming each reviewed
+    deliberate-exact contraction in models/) — what CI's analysis job
+    runs."""
     entries = load_allowlist(REPO_ROOT / ".analysis-allowlist")
     findings, _, stale = run_lint(REPO_ROOT, allowlist=entries)
     assert not findings, "\n".join(f.render() for f in findings)
@@ -291,6 +313,12 @@ def test_saturation_report_covers_registry():
     assert handle in labels
     assert "default(n_digits=2, border=8)" in labels
     assert report["max_site_k"] > 0 and report["sites"]
+    # the dense rep's activation×activation sites are probed too: their K
+    # is a runtime quantity (attended length), broken out so deployments
+    # can read max_safe_k_exact as a context-length bound
+    assert {"attn.qk", "attn.pv"} <= set(report["activation_sites"])
+    assert set(report["activation_sites"]) <= set(report["sites"])
+    assert 0 < report["max_activation_k"] <= report["max_site_k"]
     for row in report["schedules"]:
         # soundness: the bit-weight bound dominates the exact bound, and
         # the proof agrees with the runtime guard's threshold
@@ -299,6 +327,20 @@ def test_saturation_report_covers_registry():
         assert row["proved"] == (
             report["max_site_k"] * row["exact_bound"] < 2**31)
     assert report["all_proved"]
+
+
+def test_saturation_probe_covers_activation_sites():
+    """Every family's activation×activation seam sites reach the shape
+    probe (QK^T/PV, grouped expert matmuls, the SSD state readout) — the
+    proof covers activation-side Ks, not just weight-matmul Ks."""
+    from repro.analysis.trace_contract import collect_site_ks
+    from repro.conformance import ACTIVATION_SITES, REPRESENTATIVE
+
+    for family in ("ssm", "moe"):
+        ks = collect_site_ks([REPRESENTATIVE[family]])
+        missing = ACTIVATION_SITES[family] - set(ks)
+        assert not missing, (family, sorted(missing), sorted(ks))
+        assert all(ks[s] > 0 for s in ACTIVATION_SITES[family])
 
 
 def test_saturation_guard_message_names_schedule():

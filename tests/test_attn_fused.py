@@ -1,0 +1,120 @@
+"""Fused-attention kernel vs the unfused activation-seam composition.
+
+The bar is BIT-identity (kernels/attn_fused/kernel.py documents why it
+holds): both sides run jitted on the same backend — the fused Pallas call
+(interpreter on CPU) against the jitted XLA seam composition
+(``fused_attention_reference``, literally the models/attention.py chain on
+pre-folded operands).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.amr_matmul.tiling import head_dim_bucket, pick_attn_tile
+from repro.kernels.attn_fused import (fused_attention,
+                                      fused_attention_reference)
+
+
+def _case(g=3, m=8, d=16, t=32, p=16, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(ks[0], (g, m, d), jnp.float32)
+    kt = jax.random.normal(ks[1], (g, d, t), jnp.float32)
+    v = jax.random.normal(ks[2], (g, t, p), jnp.float32)
+    # ragged decode-style validity: row (g, i) sees lengths[g, i] slots
+    lengths = jax.random.randint(ks[3], (g, m), 1, t + 1)
+    mask = jnp.arange(t)[None, None, :] < lengths[:, :, None]
+    return q, kt, v, mask
+
+
+def _pair(method, **kw):
+    fused = jax.jit(lambda q, kt, v, mask: fused_attention(
+        q, kt, v, mask, method=method, **kw))
+    ref = jax.jit(lambda q, kt, v, mask: fused_attention_reference(
+        q, kt, v, mask, method=method, **kw))
+    return fused, ref
+
+
+@pytest.mark.parametrize("border", [2, 8])
+def test_lut_bit_identical_to_seam(border):
+    ops = _case()
+    fused, ref = _pair("lut", border=border)
+    out, want = fused(*ops), ref(*ops)
+    assert out.shape == want.shape == (3, 8, 16)
+    assert np.array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_inject_bit_identical_to_seam():
+    ops = _case(g=2, m=4, d=8, t=32, p=16, seed=1)
+    fused, ref = _pair("inject", border=8)
+    out, want = fused(*ops), ref(*ops)
+    assert np.array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_inject_word_padded_t_and_p():
+    """T and P that are not lane-word multiples: the replayed score block
+    is sliced before the softmax, PV pad columns after the kernel."""
+    ops = _case(g=2, m=4, d=8, t=40, p=24, seed=2)
+    fused, ref = _pair("inject", border=8)
+    out, want = fused(*ops), ref(*ops)
+    assert out.shape == (2, 4, 24)
+    assert np.array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_inject_custom_schedule():
+    from repro.core import reduction
+    from repro.numerics import injection
+
+    handle = injection.register_schedule(reduction.get_schedule(2, 6),
+                                         name="attnfused:b6")
+    ops = _case(g=2, m=4, d=8, t=32, p=16, seed=3)
+    fused, ref = _pair("inject", border=6, schedule_ref=handle)
+    out, want = fused(*ops), ref(*ops)
+    assert np.array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_lut_row_tile_invariance():
+    """The softmax is per query row, so the bm tiling cannot change the
+    result — any row-tile split is bitwise the same output."""
+    ops = _case(m=8)
+    outs = [jax.jit(lambda q, kt, v, mask, b=b: fused_attention(
+        q, kt, v, mask, method="lut", bm=b))(*ops) for b in (2, 4, 8)]
+    for o in outs[1:]:
+        assert np.array_equal(np.asarray(outs[0]), np.asarray(o))
+
+
+def test_explicit_scale_matches():
+    ops = _case(g=2, m=4, d=16, t=16, p=8, seed=4)
+    fused, ref = _pair("lut", scale=7.5)
+    assert np.array_equal(np.asarray(fused(*ops)), np.asarray(ref(*ops)))
+
+
+def test_shape_and_method_validation():
+    q, kt, v, mask = _case()
+    with pytest.raises(ValueError, match="method"):
+        fused_attention(q, kt, v, mask, method="nope")
+    with pytest.raises(ValueError, match="schedule_ref"):
+        fused_attention(q, kt, v, mask, method="lut", schedule_ref="x")
+    with pytest.raises(ValueError, match="shapes disagree"):
+        fused_attention(q, kt[:, :-1], v, mask)
+    with pytest.raises(ValueError, match="mask"):
+        fused_attention(q, kt, v, mask[:, :, :-1])
+
+
+def test_head_dim_bucketing():
+    assert head_dim_bucket(8) == 64
+    assert head_dim_bucket(64) == 64
+    assert head_dim_bucket(65) == 128
+    assert head_dim_bucket(128) == 128
+    assert head_dim_bucket(129) == 256
+    assert head_dim_bucket(512) == 256
+
+
+def test_pick_attn_tile_divisors():
+    # cpu table prefers 128 for the 64-bucket: clamped to a divisor of m
+    assert pick_attn_tile(48, 64, backend="cpu") == 48
+    assert pick_attn_tile(256, 64, backend="cpu") == 128
+    assert pick_attn_tile(256, 200, backend="cpu") == 64  # 256-bucket row
+    assert pick_attn_tile(48, 64, backend="cpu", bm=6) == 6
+    with pytest.raises(ValueError, match="bm=5"):
+        pick_attn_tile(48, 64, backend="cpu", bm=5)

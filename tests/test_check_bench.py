@@ -131,6 +131,19 @@ POLICY = {
 }
 
 
+ATTN = {
+    "schema": "BENCH_attn/v1", "backend": "cpu", "interpret": True,
+    "results": [
+        {"method": "lut", "border": 8, "g": 2, "m": 8, "d": 8, "t": 32,
+         "p": 16, "bm": 8, "us_per_call": 64.0, "ref_us_per_call": 49.0,
+         "max_abs_diff": 0.0, "bit_exact": True},
+        {"method": "inject", "border": 8, "g": 2, "m": 8, "d": 8, "t": 40,
+         "p": 24, "bm": 8, "us_per_call": 3988.0, "ref_us_per_call": 5319.0,
+         "max_abs_diff": 0.0, "bit_exact": True},
+    ],
+}
+
+
 def _errors(fresh, baseline):
     errs, _ = check_bench.compare_artifacts(fresh, baseline, "t.json")
     return errs
@@ -413,6 +426,37 @@ class TestPolicyArtifact:
         assert any("missing" in e for e in _errors(bad, POLICY))
 
 
+class TestAttnArtifact:
+    def test_identical_passes(self):
+        assert _errors(copy.deepcopy(ATTN), ATTN) == []
+
+    def test_bit_exact_flip_fails(self):
+        bad = copy.deepcopy(ATTN)
+        bad["results"][1]["bit_exact"] = False
+        bad["results"][1]["max_abs_diff"] = 3.05e-05
+        errs = _errors(bad, ATTN)
+        assert any("bit_exact" in e for e in errs)
+        assert any("max_abs_diff" in e for e in errs)
+
+    def test_diff_must_be_exactly_zero(self):
+        # fused-vs-seam agreement is integer-derived: even a last-ulp
+        # float drift is a regression, never tolerance-absorbed
+        bad = copy.deepcopy(ATTN)
+        bad["results"][0]["max_abs_diff"] = 1e-12
+        assert any("max_abs_diff" in e for e in _errors(bad, ATTN))
+
+    def test_timing_drift_is_advisory(self):
+        noisy = copy.deepcopy(ATTN)
+        noisy["results"][0]["us_per_call"] *= 3.0
+        noisy["results"][1]["ref_us_per_call"] *= 0.2
+        assert _errors(noisy, ATTN) == []
+
+    def test_missing_sweep_point_fails(self):
+        short = copy.deepcopy(ATTN)
+        short["results"].pop()
+        assert any("missing" in e for e in _errors(short, ATTN))
+
+
 class TestMain:
     @pytest.fixture()
     def dirs(self, tmp_path):
@@ -428,6 +472,7 @@ class TestMain:
             (d / "BENCH_serve.json").write_text(json.dumps(SERVE))
             (d / "BENCH_matrix.json").write_text(json.dumps(MATRIX))
             (d / "BENCH_policy.json").write_text(json.dumps(POLICY))
+            (d / "BENCH_attn.json").write_text(json.dumps(ATTN))
         return fresh, base
 
     def test_main_clean(self, dirs):
@@ -457,5 +502,5 @@ class TestMain:
             assert art["schema"].startswith(
                 ("BENCH_kernel/", "BENCH_dse/", "BENCH_train/",
                  "BENCH_inject/", "BENCH_serve/", "BENCH_matrix/",
-                 "BENCH_policy/"))
+                 "BENCH_policy/", "BENCH_attn/"))
             assert art["results"], f"{name} baseline has no rows"

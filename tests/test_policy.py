@@ -140,6 +140,56 @@ class TestResolution:
         hit = {k for k, v in trace.coords.items() if v["calls"]}
         assert hit == {("mlp.w_down", 0), ("attn.wq", 1)}
 
+    def test_dotted_prefix_site_match(self):
+        """Sites resolve by dotted prefix: a "moe.expert" entry covers every
+        moe.expert.* projection, an exact entry still wins."""
+        pol = PerLayerPolicy(default=AMRNumerics("exact"),
+                             sites={"moe.expert": self.NM_A,
+                                    "moe.expert.w_down": self.NM_B})
+        assert pol.resolve("moe.expert.w_up", 0) == self.NM_A
+        assert pol.resolve("moe.expert.w_gate", 0) == self.NM_A
+        assert pol.resolve("moe.expert.w_down", 0) == self.NM_B  # exact wins
+        assert pol.resolve("moe", 0) == pol.default  # prefixes never widen
+        assert pol.resolve("attn.qk", 0) == pol.default
+
+    def test_prefix_respects_level_precedence(self):
+        """Prefix matching happens WITHIN each precedence level: a
+        (layer, site) prefix still beats the layer map, and the layer map
+        still beats a plain site prefix."""
+        pol = PerLayerPolicy(default=AMRNumerics("exact"),
+                             layers={1: self.NM_A},
+                             sites={"attn": self.NM_B},
+                             layer_sites={(1, "attn.qk"): self.NM_C})
+        assert pol.resolve("attn.qk", 1) == self.NM_C    # (layer, site)
+        assert pol.resolve("attn.pv", 1) == self.NM_A    # layer beats prefix
+        assert pol.resolve("attn.qk", 0) == self.NM_B    # site prefix
+        assert pol.resolve("attn.pv", 0) == self.NM_B
+
+    def test_prefix_in_layer_sites(self):
+        pol = PerLayerPolicy(default=AMRNumerics("exact"),
+                             layer_sites={(0, "attn"): self.NM_A})
+        assert pol.resolve("attn.qk", 0) == self.NM_A
+        assert pol.resolve("attn.pv", 0) == self.NM_A
+        assert pol.resolve("attn.qk", 1) == pol.default
+
+    def test_model_audit_hits_activation_seam_coords(self):
+        """The new activation×activation sites are policy-addressable
+        through the REAL model: an exact-compare audit records error mass
+        exactly at the assigned (attn.qk / attn.pv, layer) coordinates."""
+        pol = PerLayerPolicy(default=AMRNumerics("exact"),
+                             layer_sites={(0, "attn.qk"): self.NM_C,
+                                          (1, "attn.pv"): self.NM_C},
+                             static_unroll=True)
+        cfg = tiny_cfg(pol)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        trace = AuditTrace(compare="exact")
+        with numerics_scope(audit=trace):
+            logits, _ = forward(cfg, params, _tokens(cfg), None)
+            jax.block_until_ready(logits)
+            jax.effects_barrier()
+        hit = {k for k, v in trace.coords.items() if v["calls"]}
+        assert hit == {("attn.qk", 0), ("attn.pv", 1)}
+
     def test_validate_policy_checks_every_entry(self):
         validate_policy(PerLayerPolicy(default=AMRNumerics("exact"),
                                        layers={0: self.NM_A}))
@@ -229,6 +279,20 @@ def test_serve_no_recompile_under_heterogeneous_policy():
     pol = PerLayerPolicy(default=AMRNumerics("exact"),
                          layer_sites={(0, "mlp.w_down"):
                                       AMRNumerics("amr_lut", border=2)})
+    eng, done = _serve_run(pol, n_slots=2)
+    assert len(done) == len(PROMPTS)
+    assert_single_trace(eng._decode, "masked decode step")
+
+
+def test_serve_no_recompile_with_activation_seam_sites():
+    """Heterogeneous policies touching the activation×activation sites
+    (attn.qk via a dotted prefix, attn.pv per layer, ssm-site entries are
+    inert for a dense config) resolve inside the one masked decode trace."""
+    pol = PerLayerPolicy(default=AMRNumerics("exact"),
+                         sites={"attn.qk": AMRNumerics("amr_lut", border=2),
+                                "ssm.scan": AMRNumerics("amr_lut", border=2)},
+                         layer_sites={(1, "attn.pv"):
+                                      AMRNumerics("amr_inject", border=2)})
     eng, done = _serve_run(pol, n_slots=2)
     assert len(done) == len(PROMPTS)
     assert_single_trace(eng._decode, "masked decode step")

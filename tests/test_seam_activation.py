@@ -1,0 +1,121 @@
+"""Activation-operand path through the injection seam.
+
+The B side of QK^T / PV / grouped-expert matmuls is a traced ACTIVATION:
+the identity-keyed ``WEIGHT_PACKS`` cache is structurally invalid for it
+(tracers have no stable object identity across traces), so the seam must
+lane-pack in-trace and the cache must refuse tracers loudly rather than
+serve one trace's garbage to the next.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.numerics import AMRNumerics, injection
+from repro.numerics.approx_matmul import approx_matmul, matmul_amr_lut
+
+
+def _ops(g=3, m=4, k=16, n=8, seed=0):
+    rng = np.random.default_rng(seed)
+    ia = jnp.asarray(rng.integers(0, 256, (g, m, k)), jnp.int32)
+    ib = jnp.asarray(rng.integers(0, 256, (g, k, n)), jnp.int32)
+    return ia, ib
+
+
+class TestWeightPackCacheRejectsTracers:
+    def test_cache_get_raises_inside_jit(self):
+        inj = engine.get_injector(2, 8)
+
+        @jax.jit
+        def f(ib):
+            return injection.WEIGHT_PACKS.get(inj, ib)
+
+        with pytest.raises(TypeError, match="[Tt]raced"):
+            f(jnp.zeros((8, 16), jnp.int32))
+
+    def test_cache_get_raises_for_numpy(self):
+        # non-jax.Array concrete operands are also refused by the cache
+        # itself (packed_weights routes them around it)
+        inj = engine.get_injector(2, 8)
+        with pytest.raises(TypeError, match="jax.Array"):
+            injection.WEIGHT_PACKS.get(inj, np.zeros((8, 16), np.int32))
+
+    def test_packed_weights_bypasses_cache_in_trace(self):
+        inj = engine.get_injector(2, 8)
+        injection.WEIGHT_PACKS.clear()
+        ib = jnp.asarray(np.random.default_rng(1).integers(0, 256, (8, 16)))
+        want = np.asarray(inj.pack_weights(ib))
+        got = np.asarray(jax.jit(lambda y: injection.packed_weights(inj, y))(ib))
+        np.testing.assert_array_equal(got, want)
+        assert len(injection.WEIGHT_PACKS) == 0  # nothing cached in-trace
+
+
+class TestInjectedMatmulGrouped:
+    def setup_method(self):
+        self.inj = engine.get_injector(2, 8)
+
+    def test_jitted_activation_operand_matches_per_group(self):
+        """The load-bearing satellite case: a JITTED (traced) activation B
+        operand through the grouped path is bit-identical to stacking the
+        unbatched weight-path replay per group."""
+        ia, ib = _ops()
+        got = np.asarray(jax.jit(
+            lambda x, y: injection.injected_matmul_grouped(self.inj, x, y))(ia, ib))
+        want = np.stack([
+            np.asarray(injection.injected_matmul_int(self.inj, ia[g], ib[g]))
+            for g in range(ia.shape[0])])
+        np.testing.assert_array_equal(got, want)
+
+    def test_pallas_impl_matches_xla(self):
+        ia, ib = _ops(seed=2)
+        f = jax.jit(lambda x, y: injection.injected_matmul_grouped(
+            self.inj, x, y, impl="pallas"))
+        g = jax.jit(lambda x, y: injection.injected_matmul_grouped(
+            self.inj, x, y, impl="xla"))
+        np.testing.assert_array_equal(np.asarray(f(ia, ib)),
+                                      np.asarray(g(ia, ib)))
+
+    def test_grouped_call_leaves_cache_empty(self):
+        injection.WEIGHT_PACKS.clear()
+        ia, ib = _ops(seed=3)
+        jax.jit(lambda x, y: injection.injected_matmul_grouped(
+            self.inj, x, y))(ia, ib).block_until_ready()
+        assert len(injection.WEIGHT_PACKS) == 0
+
+    def test_shape_validation(self):
+        ia, ib = _ops()
+        with pytest.raises(ValueError, match="matching G"):
+            injection.injected_matmul_grouped(self.inj, ia, ib[:-1])
+        with pytest.raises(ValueError, match=r"\(G, M, K\)"):
+            injection.injected_matmul_grouped(self.inj, ia[0], ib[0])
+
+
+class TestApproxMatmulActivationPath:
+    """approx_matmul with a batched (per-group) B operand — the seam form
+    the attention/MoE/SSD call sites use — jitted, against the LUT oracle
+    applied per group (also jitted: jit-vs-jit comparisons only)."""
+
+    def setup_method(self):
+        ks = jax.random.split(jax.random.PRNGKey(5), 2)
+        self.a = jax.random.normal(ks[0], (3, 4, 16), jnp.float32)
+        self.b = jax.random.normal(ks[1], (3, 16, 8), jnp.float32)
+
+    def test_inject_batched_b_bit_identical_to_lut(self):
+        nm = AMRNumerics("amr_inject", border=8)
+        got = np.asarray(jax.jit(
+            lambda a, b: approx_matmul(a, b, nm, site="attn.qk"))(self.a, self.b))
+        want = np.asarray(jax.jit(
+            lambda a, b: matmul_amr_lut(a, b, border=8))(self.a, self.b))
+        np.testing.assert_array_equal(got, want)
+
+    def test_inject_gqa_fold_matches_stacked_groups(self):
+        """Batched call == stacked per-group calls (the GQA fold in
+        models/attention.py relies on this being bitwise)."""
+        nm = AMRNumerics("amr_inject", border=8)
+        batched = np.asarray(jax.jit(
+            lambda a, b: approx_matmul(a, b, nm))(self.a, self.b))
+        per_group = np.stack([np.asarray(jax.jit(
+            lambda a, b: approx_matmul(a, b, nm))(self.a[g], self.b[g]))
+            for g in range(3)])
+        np.testing.assert_array_equal(batched, per_group)
